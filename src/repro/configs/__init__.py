@@ -1,0 +1,6 @@
+"""Architecture configs (exact published numbers) + shape cells."""
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, get_shape
+from repro.configs.registry import ARCHS, all_configs, canonical, get_config
+
+__all__ = ["ARCHS", "SHAPES", "ModelConfig", "ShapeConfig", "all_configs",
+           "canonical", "get_config", "get_shape"]

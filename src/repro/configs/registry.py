@@ -1,0 +1,29 @@
+"""Architecture registry: the 10 assigned configs + smoke variants."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "qwen2_vl_2b", "mixtral_8x22b", "qwen2_moe_a2_7b", "recurrentgemma_9b",
+    "whisper_small", "llama3_2_3b", "internlm2_1_8b", "qwen2_5_32b",
+    "codeqwen1_5_7b", "xlstm_350m",
+)
+
+# --arch <id> accepts both dash and underscore forms
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def canonical(name: str) -> str:
+    name = name.replace("-", "_").replace(".", "_")
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {list(ARCHS)}")
+    return name
+
+
+def get_config(name: str, smoke: bool = False):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.smoke() if smoke else mod.config()
+
+
+def all_configs(smoke: bool = False):
+    return {a: get_config(a, smoke) for a in ARCHS}

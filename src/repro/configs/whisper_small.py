@@ -1,0 +1,34 @@
+"""Whisper-small — encoder-decoder ASR backbone [arXiv:2212.04356].
+
+12+12L d_model=768 12H (MHA) d_ff=3072 vocab=51865, layernorm, conv audio
+frontend STUBBED (input_specs supplies (B, 1500, 768) frame embeddings).
+Tied embeddings. Decoder self-attn + cross-attn caches both quantized.
+"""
+from repro.configs.base import ModelConfig
+from repro.core.quantization import QuantConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper_small", family="encdec",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+        d_ff=3072, vocab=51865, head_dim=64,
+        norm="layernorm", tie_embeddings=True,
+        n_encoder_layers=12, encoder_seq=1500,
+        embedding_inputs=True,
+        quant=QuantConfig(granularity="per_block", block_size=256),
+        source="arXiv:2212.04356",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="whisper_small_smoke", family="encdec",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=256, head_dim=16,
+        norm="layernorm", tie_embeddings=True,
+        n_encoder_layers=2, encoder_seq=24,
+        embedding_inputs=True,
+        quant=QuantConfig(granularity="per_block", block_size=8),
+        source="reduced",
+    )

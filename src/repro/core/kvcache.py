@@ -1,0 +1,210 @@
+"""Quantized KV cache — INT8 storage with f32 per-channel scales.
+
+The cache is a registered pytree so it flows through jit/pjit/scan and can be
+sharded with ordinary PartitionSpecs: (batch -> "data", kv_heads -> "model").
+
+Layout (per layer):
+    k_q, v_q   int8  (B, H_kv, T_max, D)
+    k_s, v_s   f32   (B, H_kv, n_blocks, D)   one scale row per token-block
+    resid_k/v  ref_dtype (B, H_kv, block, D)  unquantized tail (current block)
+    length     int32 ()                        tokens written so far
+
+Two modes (core.quantization.QuantConfig.granularity):
+  * per_channel (paper-faithful): n_blocks == 1; scales computed once at
+    prefill over the whole prefix (paper Eq. 5) and *reused* for appended
+    decode tokens (outliers clamp — error still bounded by construction).
+    The residual buffer is unused (block == 1 row of padding).
+  * per_block (production): one scale row per `block_size` tokens; decode
+    tokens accumulate in the bf16 residual and are quantized when a block
+    fills — a finished block is written once and never touched again
+    (streaming, no re-quantization).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as Q
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["k_q", "v_q", "k_s", "v_s", "resid_k", "resid_v", "length"],
+         meta_fields=["block_size", "per_channel", "ring"])
+@dataclasses.dataclass
+class QuantizedKVCache:
+    k_q: jax.Array
+    v_q: jax.Array
+    k_s: jax.Array
+    v_s: jax.Array
+    resid_k: jax.Array
+    resid_v: jax.Array
+    length: jax.Array      # total tokens seen (absolute, may exceed max_len)
+    block_size: int
+    per_channel: bool
+    ring: bool             # sliding-window ring buffer (slot = pos % max_len)
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def init(batch: int, kv_heads: int, max_len: int, head_dim: int,
+             cfg: Q.QuantConfig, ring: bool = False) -> "QuantizedKVCache":
+        per_channel = cfg.granularity == "per_channel"
+        bs = 1 if per_channel else cfg.block_size
+        nb = 1 if per_channel else max_len // bs
+        if not per_channel and max_len % bs:
+            raise ValueError(f"max_len={max_len} not a multiple of block {bs}")
+        shp = (batch, kv_heads, max_len, head_dim)
+        sshp = (batch, kv_heads, nb, head_dim)
+        rshp = (batch, kv_heads, bs, head_dim)
+        z8 = jnp.zeros(shp, jnp.int8)
+        zs = jnp.full(sshp, Q._EPS, jnp.float32)
+        zr = jnp.zeros(rshp, cfg.ref_dtype)
+        return QuantizedKVCache(z8, z8, zs, zs, zr, zr,
+                                jnp.zeros((), jnp.int32), bs, per_channel, ring)
+
+    @property
+    def max_len(self) -> int:
+        return self.k_q.shape[2]
+
+    @property
+    def valid_len(self) -> jax.Array:
+        """Number of live cache slots (ring caches saturate at max_len)."""
+        return jnp.minimum(self.length, self.max_len)
+
+    @property
+    def memory_bytes(self) -> int:
+        """Actual storage cost (paper Table 1 analogue)."""
+        n = lambda a: a.size * a.dtype.itemsize
+        return sum(n(a) for a in (self.k_q, self.v_q, self.k_s, self.v_s,
+                                  self.resid_k, self.resid_v))
+
+    # -- prefill -----------------------------------------------------------
+    def prefill(self, k: jax.Array, v: jax.Array) -> "QuantizedKVCache":
+        """Write a (B, H, T, D) prefix, quantizing it.
+
+        T must be a multiple of block_size in per_block mode (pad upstream).
+        Ring caches keep the last max_len tokens, placed at slot pos%max_len
+        so later appends stay aligned.
+        """
+        B, H, T, D = k.shape
+        ML = self.max_len
+        if self.ring and T > ML:
+            # keep last ML tokens, rotated to their ring slots
+            shift = T % ML                            # token-slot rotation
+            k = jnp.roll(k[:, :, T - ML:], shift, axis=2)
+            v = jnp.roll(v[:, :, T - ML:], shift, axis=2)
+        if self.per_channel:
+            k_q, k_s = Q.quantize_matrix(k)      # scales over the full prefix
+            v_q, v_s = Q.quantize_matrix(v)
+            k_s, v_s = k_s[:, :, None], v_s[:, :, None]     # (B,H,1,D)
+        else:
+            k_q, k_s = Q.quantize_blocked(k, self.block_size)
+            v_q, v_s = Q.quantize_blocked(v, self.block_size)
+        new_kq = jax.lax.dynamic_update_slice(self.k_q, k_q, (0, 0, 0, 0))
+        new_vq = jax.lax.dynamic_update_slice(self.v_q, v_q, (0, 0, 0, 0))
+        new_ks = jax.lax.dynamic_update_slice(self.k_s, k_s.astype(jnp.float32), (0, 0, 0, 0))
+        new_vs = jax.lax.dynamic_update_slice(self.v_s, v_s.astype(jnp.float32), (0, 0, 0, 0))
+        return dataclasses.replace(self, k_q=new_kq, v_q=new_vq, k_s=new_ks,
+                                   v_s=new_vs, length=jnp.asarray(T, jnp.int32))
+
+    # -- decode append -----------------------------------------------------
+    def append(self, k: jax.Array, v: jax.Array) -> "QuantizedKVCache":
+        """Append one token (B, H, 1, D). jit/scan-safe (no Python branching
+        on traced values)."""
+        if self.per_channel:
+            return self._append_per_channel(k, v)
+        return self._append_blocked(k, v)
+
+    def _append_per_channel(self, k, v):
+        # Reuse prefill scales (paper computes scales once over the matrix);
+        # clamp handles post-prefill outliers. Error stays <= 127*s by clamp.
+        pos = self.length
+        slot = pos % self.max_len if self.ring else pos
+        k_q = Q.quantize(k, self.k_s[:, :, 0])
+        v_q = Q.quantize(v, self.v_s[:, :, 0])
+        new_kq = jax.lax.dynamic_update_slice(self.k_q, k_q, (0, 0, slot, 0))
+        new_vq = jax.lax.dynamic_update_slice(self.v_q, v_q, (0, 0, slot, 0))
+        return dataclasses.replace(self, k_q=new_kq, v_q=new_vq, length=pos + 1)
+
+    def _append_blocked(self, k, v):
+        bs = self.block_size
+        nb = self.k_s.shape[2]
+        pos = self.length
+        off = pos % bs                       # slot inside the current block
+        blk = pos // bs                      # current block index
+        if self.ring:
+            blk = blk % nb                   # ring block slot
+        rk = jax.lax.dynamic_update_slice(
+            self.resid_k, k.astype(self.resid_k.dtype), (0, 0, off, 0))
+        rv = jax.lax.dynamic_update_slice(
+            self.resid_v, v.astype(self.resid_v.dtype), (0, 0, off, 0))
+
+        def flush(c):
+            k_q, v_q, k_s, v_s, rk, rv = c
+            fq_k, fs_k = Q.quantize_matrix(rk)            # (B,H,bs,D),(B,H,D)
+            fq_v, fs_v = Q.quantize_matrix(rv)
+            k_q = jax.lax.dynamic_update_slice(k_q, fq_k, (0, 0, blk * bs, 0))
+            v_q = jax.lax.dynamic_update_slice(v_q, fq_v, (0, 0, blk * bs, 0))
+            k_s = jax.lax.dynamic_update_slice(
+                k_s, fs_k[:, :, None].astype(jnp.float32), (0, 0, blk, 0))
+            v_s = jax.lax.dynamic_update_slice(
+                v_s, fs_v[:, :, None].astype(jnp.float32), (0, 0, blk, 0))
+            return k_q, v_q, k_s, v_s, jnp.zeros_like(rk), jnp.zeros_like(rv)
+
+        full = off == bs - 1
+        k_q, v_q, k_s, v_s, rk, rv = jax.lax.cond(
+            full, flush, lambda c: c,
+            (self.k_q, self.v_q, self.k_s, self.v_s, rk, rv))
+        return dataclasses.replace(self, k_q=k_q, v_q=v_q, k_s=k_s, v_s=v_s,
+                                   resid_k=rk, resid_v=rv, length=pos + 1)
+
+    # -- read --------------------------------------------------------------
+    def dequantized(self, dtype=jnp.float32) -> tuple[jax.Array, jax.Array]:
+        """Materialize the full cache in `dtype` (reference path; the fused
+        attention kernel avoids this round-trip — DESIGN.md §2)."""
+        if self.per_channel:
+            k = Q.dequantize(self.k_q, self.k_s[:, :, 0], dtype=dtype)
+            v = Q.dequantize(self.v_q, self.v_s[:, :, 0], dtype=dtype)
+        else:
+            k = Q.dequantize_blocked(self.k_q, self.k_s, dtype=dtype)
+            v = Q.dequantize_blocked(self.v_q, self.v_s, dtype=dtype)
+        if not self.per_channel:
+            # overlay the unquantized residual tail (exact, no quant error)
+            bs = self.block_size
+            nb = self.k_s.shape[2]
+            B, H, _, D = k.shape
+            blk = self.length // bs
+            if self.ring:
+                blk = blk % nb
+            blk_start = blk * bs
+            mask = (jnp.arange(bs) < self.length % bs)[None, None, :, None]
+            cur_k = jax.lax.dynamic_slice(k, (0, 0, blk_start, 0), (B, H, bs, D))
+            cur_v = jax.lax.dynamic_slice(v, (0, 0, blk_start, 0), (B, H, bs, D))
+            k = jax.lax.dynamic_update_slice(
+                k, jnp.where(mask, self.resid_k.astype(dtype), cur_k), (0, 0, blk_start, 0))
+            v = jax.lax.dynamic_update_slice(
+                v, jnp.where(mask, self.resid_v.astype(dtype), cur_v), (0, 0, blk_start, 0))
+        return k, v
+
+
+def fp_cache_init(batch, kv_heads, max_len, head_dim, dtype=jnp.bfloat16):
+    """Unquantized baseline cache (the paper's FP32/BF16 comparison point)."""
+    shp = (batch, kv_heads, max_len, head_dim)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
+            "length": jnp.zeros((), jnp.int32)}
+
+
+def fp_cache_prefill(cache, k, v):
+    T = k.shape[2]
+    return {"k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+            "length": jnp.asarray(T, jnp.int32)}
+
+
+def fp_cache_append(cache, k, v):
+    pos = cache["length"]
+    return {"k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0)),
+            "length": pos + 1}

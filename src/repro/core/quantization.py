@@ -1,0 +1,237 @@
+"""Per-channel / per-block symmetric INT8 quantization — the paper's core.
+
+Implements the paper's per-channel scheme (one f32 scale per head-dim channel,
+Eq. 5-8) plus the beyond-paper per-(token-block, channel) scheme used for
+streaming decode on TPU (DESIGN.md §2).
+
+All functions are pure JAX, differentiable where meaningful (straight-through
+estimator on the round), and shape-polymorphic over leading batch dims: the
+channel axis is always the LAST axis, token axis the SECOND-TO-LAST.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127.0  # symmetric INT8 range [-127, 127]; -128 never emitted (paper §4.3)
+# Guard against all-zero channels: scale of 0 would produce inf/NaN on divide.
+# A channel that is identically zero quantizes to zeros with any scale.
+_EPS = 1e-30
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Configuration for KV-cache quantization.
+
+    granularity:
+      per_channel  — paper-faithful: one scale per channel over the full token
+                     axis (Eq. 5). Requires the whole matrix (prefill-style).
+      per_block    — one scale per (token-block, channel). Streaming-friendly
+                     production default; strictly finer than per_channel.
+    block_size:    token-block size for per_block (tile-aligned, multiple of 8).
+    cache_dtype:   storage dtype of the quantized cache (int8).
+    scale_dtype:   dtype of scales (f32 per the paper).
+    ref_dtype:     the uncompressed reference dtype this cache replaces
+                   (f32 = paper baseline, bf16 = production baseline);
+                   only affects reported compression ratio, not math.
+    """
+
+    granularity: Literal["per_channel", "per_block"] = "per_channel"
+    block_size: int = 256
+    cache_dtype: jnp.dtype = jnp.int8
+    scale_dtype: jnp.dtype = jnp.float32
+    ref_dtype: jnp.dtype = jnp.bfloat16
+
+    def __post_init__(self):
+        if self.granularity == "per_block" and self.block_size % 8 != 0:
+            raise ValueError(f"block_size must be a multiple of 8, got {self.block_size}")
+
+    @property
+    def compression_ratio(self) -> float:
+        """Bytes saved vs the uncompressed reference cache (scale overhead ignored;
+        it is D floats vs T*D elements — negligible, paper §4.2)."""
+        return jnp.dtype(self.ref_dtype).itemsize / jnp.dtype(self.cache_dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful per-channel quantization (Eq. 5-8)
+# ---------------------------------------------------------------------------
+
+def compute_scales(x: jax.Array, axis: int = -2) -> jax.Array:
+    """Per-channel scales: s_d = max_t |x[..., t, d]| / 127  (paper Eq. 5/6).
+
+    Reduces over `axis` (the token axis). Returns f32, keepdims=False.
+    """
+    max_abs = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
+    return jnp.maximum(max_abs, _EPS) / QMAX
+
+
+def quantize(x: jax.Array, scales: jax.Array, *, token_axis: int = -2) -> jax.Array:
+    """Quantize to INT8 with given per-channel scales (paper Eq. 7).
+
+    scales broadcasts against x with the token axis removed.
+    """
+    s = jnp.expand_dims(scales, token_axis).astype(jnp.float32)
+    q = jnp.round(x.astype(jnp.float32) / s)
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+
+
+def dequantize(x_q: jax.Array, scales: jax.Array, *, token_axis: int = -2,
+               dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Recover approximate values: x̂ = x_q * s (paper Eq. 8)."""
+    s = jnp.expand_dims(scales, token_axis).astype(jnp.float32)
+    return (x_q.astype(jnp.float32) * s).astype(dtype)
+
+
+def quantize_matrix(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One-shot per-channel quantization of a (..., T, D) matrix.
+
+    Returns (int8 values, f32 scales of shape (..., D)).
+    """
+    scales = compute_scales(x)
+    return quantize(x, scales), scales
+
+
+# ---------------------------------------------------------------------------
+# Per-(token-block, channel) quantization — streaming/TPU production mode
+# ---------------------------------------------------------------------------
+
+def quantize_blocked(x: jax.Array, block_size: int) -> tuple[jax.Array, jax.Array]:
+    """Quantize (..., T, D) with one scale per (token-block, channel).
+
+    T must be a multiple of block_size (caches are padded to block multiples).
+    Returns (int8 of shape (..., T, D), f32 scales of shape (..., T//B, D)).
+    """
+    *lead, T, D = x.shape
+    if T % block_size != 0:
+        raise ValueError(f"T={T} not a multiple of block_size={block_size}")
+    nb = T // block_size
+    xb = x.reshape(*lead, nb, block_size, D)
+    scales = compute_scales(xb, axis=-2)                      # (..., nb, D)
+    q = quantize(xb, scales).reshape(*lead, T, D)
+    return q, scales
+
+
+def dequantize_blocked(x_q: jax.Array, scales: jax.Array, *,
+                       dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Inverse of quantize_blocked."""
+    *lead, T, D = x_q.shape
+    nb = scales.shape[-2]
+    block_size = T // nb
+    xb = x_q.reshape(*lead, nb, block_size, D)
+    out = dequantize(xb, scales, dtype=dtype)
+    return out.reshape(*lead, T, D)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable fake-quant (straight-through) — used for QAT-style training
+# and for the INT8 gradient-compression error-feedback path.
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fake_quant(x: jax.Array) -> jax.Array:
+    """Round-trip x through per-channel INT8; gradient is identity (STE)."""
+    q, s = quantize_matrix(x)
+    return dequantize(q, s, dtype=x.dtype)
+
+
+def _fq_fwd(x):
+    return fake_quant(x), None
+
+
+def _fq_bwd(_, g):
+    return (g,)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Error metrics — the paper's evaluation quantities (§7.2, §7.3)
+# ---------------------------------------------------------------------------
+
+def l2_error(x: jax.Array, x_hat: jax.Array) -> jax.Array:
+    """Paper's L2 reconstruction error: ||x - x̂||_2 (grows with matrix size)."""
+    d = (x.astype(jnp.float32) - x_hat.astype(jnp.float32))
+    return jnp.sqrt(jnp.sum(d * d))
+
+
+def max_abs_error(x: jax.Array, x_hat: jax.Array) -> jax.Array:
+    """Paper's max-abs error; bounded by s/2 per element (Eq. 9)."""
+    return jnp.max(jnp.abs(x.astype(jnp.float32) - x_hat.astype(jnp.float32)))
+
+
+def attention_score_error(q: jax.Array, k: jax.Array, k_hat: jax.Array) -> jax.Array:
+    """Mean |q·k − q·k̂| over all (query, key) pairs, scaled by 1/sqrt(D)
+    like attention logits (normalized variant; ~constant in D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("...qd,...kd->...qk", q.astype(jnp.float32),
+                   (k - k_hat).astype(jnp.float32)) / jnp.sqrt(d)
+    return jnp.mean(jnp.abs(s))
+
+
+def attention_score_error_raw(q: jax.Array, k: jax.Array,
+                              k_hat: jax.Array) -> jax.Array:
+    """Paper §7.3 convention: raw dot-product error (no 1/sqrt(D)); scales
+    ≈ sqrt(D), ≈0.095 at D=8192 for U(-1,1) inputs (Fig. 4 right)."""
+    s = jnp.einsum("...qd,...kd->...qk", q.astype(jnp.float32),
+                   (k - k_hat).astype(jnp.float32))
+    return jnp.mean(jnp.abs(s))
+
+
+def theoretical_max_error(scales: jax.Array) -> jax.Array:
+    """Eq. 9 bound: max error ≤ s/2 (per channel)."""
+    return jnp.max(scales) / 2.0
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper cache formats (paper §8.2 future work): FP8 and packed INT4.
+# Same per-channel scale machinery; drop-in alternatives to INT8.
+# ---------------------------------------------------------------------------
+
+FP8_MAX = 448.0     # float8_e4m3fn max normal
+
+
+def quantize_fp8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-channel-scaled FP8 (e4m3): s_d = max|x|/448, store (x/s) as fp8.
+
+    Same memory as INT8; FP8's non-uniform grid gives lower error for
+    heavy-tailed channels (hardware-native on v5p+/H100 — paper §8.2)."""
+    scales = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-2),
+                         _EPS) / FP8_MAX
+    q = (x.astype(jnp.float32) / scales[..., None, :]).astype(
+        jnp.float8_e4m3fn)
+    return q, scales
+
+
+def dequantize_fp8(q: jax.Array, scales: jax.Array,
+                   dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scales[..., None, :]).astype(dtype)
+
+
+def quantize_int4(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-channel symmetric INT4 packed two-per-byte: 8x memory vs FP32.
+
+    Range ±7; even-index values in the low nibble. T must be even."""
+    *lead, T, D = x.shape
+    assert T % 2 == 0, "int4 packing needs even T"
+    scales = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-2),
+                         _EPS) / 7.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scales[..., None, :]),
+                 -7, 7).astype(jnp.int8)
+    lo = q[..., 0::2, :] & 0x0F
+    hi = (q[..., 1::2, :] & 0x0F) << 4
+    return (lo | hi).astype(jnp.int8), scales
+
+
+def dequantize_int4(packed: jax.Array, scales: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    *lead, Th, D = packed.shape
+    lo = (packed << 4) >> 4            # sign-extend low nibble (arith shift)
+    hi = packed >> 4                   # arithmetic shift keeps sign
+    q = jnp.stack([lo, hi], axis=-2).reshape(*lead, 2 * Th, D)
+    return (q.astype(jnp.float32) * scales[..., None, :]).astype(dtype)

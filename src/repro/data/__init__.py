@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, MemmapDataset, SyntheticLM,
+                                 make_frames)
+
+__all__ = ["DataConfig", "MemmapDataset", "SyntheticLM", "make_frames"]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+quantize.py        — fused per-channel / per-block INT8 quantization
+dequantize semantics live in quantize.py (same tiling) and ops.py
+quant_attention.py — fused flash-decode attention over the INT8 cache
+flash_fwd.py       — flash-attention forward (prefill / train fwd hot spot)
+ops.py             — public jit'd wrappers with backend dispatch
+ref.py             — pure-jnp oracles (every kernel allclose-tested vs these)
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (dequantize, quant_attention_decode,
+                               quantize_blocked, quantize_per_channel)
+
+__all__ = ["ops", "ref", "dequantize", "quant_attention_decode",
+           "quantize_blocked", "quantize_per_channel"]

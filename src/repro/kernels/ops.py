@@ -1,0 +1,132 @@
+"""Public jit'd kernel API with backend dispatch.
+
+On TPU the Pallas kernels compile natively; on this CPU container they run
+under interpret=True (numerically identical, Python-speed). The model /
+serving layers call through here with ``impl="auto"`` which resolves to:
+
+    * "pallas"  on TPU backends
+    * "xla"     on CPU (pure-jnp reference path; what the dry-run lowers)
+
+so the multi-pod dry-run lowers clean XLA HLO while the kernels stay
+drop-in for real hardware. ``impl="pallas_interpret"`` forces interpreted
+Pallas (used by tests/benchmarks to exercise the kernel bodies).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import quant_attention as _qa
+from repro.kernels import quantize as _quant
+from repro.kernels import ref as _ref
+
+Impl = Literal["auto", "xla", "pallas", "pallas_interpret"]
+
+
+def resolve_impl(impl: Impl = "auto") -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+# -- quantization ------------------------------------------------------------
+
+def quantize_per_channel(x: jax.Array, *, impl: Impl = "auto"):
+    """(T, D) -> (int8 (T, D), f32 (D,)); paper Eq. 5-7."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _ref.quantize_fused_ref(x)
+    return _quant.quantize_per_channel(x, interpret=impl == "pallas_interpret")
+
+
+def quantize_blocked(x: jax.Array, block_size: int = 256, *, impl: Impl = "auto"):
+    """(T, D) -> (int8 (T, D), f32 (T//B, D)); fused single-pass."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _ref.quantize_blocked_ref(x, block_size)
+    return _quant.quantize_blocked(x, block_size,
+                                   interpret=impl == "pallas_interpret")
+
+
+def dequantize(x_q: jax.Array, scales: jax.Array, *, out_dtype=jnp.float32,
+               impl: Impl = "auto"):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _ref.dequantize_ref(x_q, scales if scales.ndim == 2 else scales[None],
+                                   dtype=out_dtype)
+    return _quant.dequantize(x_q, scales, out_dtype=out_dtype,
+                             interpret=impl == "pallas_interpret")
+
+
+# -- fused attention ---------------------------------------------------------
+
+def quant_attention_decode(q, k_q, k_s, v_q, v_s, length, *, window=None,
+                           impl: Impl = "auto"):
+    """One-token decode attention over the INT8 cache.
+
+    q (B, H, D); k_q/v_q (B, Hkv, T, D) int8; k_s/v_s (B, Hkv, nb, D) f32;
+    length () or (B,) — absolute tokens written (ring caches: may exceed T);
+    window — sliding-window size for ring caches (None = full).
+    Returns (B, H, D) f32.
+    """
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        o, m, l = _decode_partials_xla(q, k_q, k_s, v_q, v_s, length, window)
+        return o / jnp.maximum(l, 1e-30)
+    return _qa.quant_attention_decode(q, k_q, k_s, v_q, v_s, length,
+                                      window=window,
+                                      interpret=impl == "pallas_interpret")
+
+
+def quant_attention_decode_partials(q, k_q, k_s, v_q, v_s, length, *,
+                                    window=None, impl: Impl = "auto"):
+    """Flash partials (o_unnormalized, m, l) over the INT8 cache — used to
+    merge with the exact fp residual tail in blocked-scale decode."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _decode_partials_xla(q, k_q, k_s, v_q, v_s, length, window)
+    return _qa.quant_attention_decode_partials(
+        q, k_q, k_s, v_q, v_s, length, window=window,
+        interpret=impl == "pallas_interpret")
+
+
+def _decode_partials_xla(q, k_q, k_s, v_q, v_s, length, window=None):
+    B, H, D = q.shape
+    _, Hkv, T, _ = k_q.shape
+    G = H // Hkv
+    nb = k_s.shape[2]
+    # dequantize to bf16: halves the dequant-buffer traffic vs f32 (the
+    # Pallas kernel on TPU never materializes it at all — §Perf iteration 9)
+    k = _deq4(k_q, k_s, nb, jnp.bfloat16)
+    v = _deq4(v_q, v_s, nb, jnp.bfloat16)
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.bfloat16)
+    logits = jnp.einsum("bhgd,bhtd->bhgt", qg, k,
+                        preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.asarray(D, jnp.float32))
+    lengths = jnp.broadcast_to(jnp.asarray(length, jnp.int32),
+                               (B,))[:, None, None, None]
+    slots = jnp.arange(T)[None, None, None, :]
+    mask = slots < jnp.minimum(lengths, T)
+    if window is not None:
+        # ring-slot age: slot s last held the token (length-1-s) mod T ago
+        w = jnp.broadcast_to(jnp.asarray(window, jnp.int32),
+                             (B,))[:, None, None, None]
+        age = jnp.remainder(lengths - 1 - slots, T)
+        mask &= age < w
+    logits = jnp.where(mask, logits, -1e30)
+    m = jnp.maximum(jnp.max(logits, axis=-1, keepdims=True), -1e30)
+    p = jnp.where(mask, jnp.exp(logits - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgt,bhtd->bhgd", p.astype(jnp.bfloat16), v,
+                   preferred_element_type=jnp.float32)
+    rs = lambda a: a.reshape(B, H, a.shape[-1])
+    return rs(o), rs(m), rs(l)
+
+
+def _deq4(x_q, s, nb, dtype=jnp.float32):
+    B, Hkv, T, D = x_q.shape
+    xb = x_q.reshape(B, Hkv, nb, T // nb, D).astype(jnp.float32)
+    return (xb * s[:, :, :, None]).astype(dtype).reshape(B, Hkv, T, D)

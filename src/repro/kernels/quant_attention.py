@@ -1,0 +1,166 @@
+"""Fused flash-decode attention directly over the INT8 KV cache.
+
+This is the beyond-paper kernel (DESIGN.md §2): the paper stops at standalone
+quantize/dequantize kernels, but on TPU a standalone dequantize would write
+the bf16 cache back to HBM and re-read it for attention — negating the
+bandwidth win. Here the int8 K/V tiles are dequantized *in VMEM* inside the
+attention kernel, so HBM attention traffic is 1 byte/element instead of 2
+(bf16) or 4 (f32): the paper's "reduce memory transactions" conclusion,
+realized at the attention level.
+
+Kernel shape (single KV head; batch × kv_heads via vmap):
+    q     (G, D)    — the G query heads of this GQA group (padded to >=8)
+    k_q   (T, D)    int8      k_s (nb, D) f32   (nb=1 -> per-channel scales)
+    v_q   (T, D)    int8      v_s (nb, D) f32
+    length ()       int32     — valid tokens; rest masked
+    out   (G, D)    f32
+
+Grid: one step per token block; online-softmax state (m, l, acc) lives in
+VMEM scratch across steps. Blocks entirely beyond `length` are skipped via
+pl.when (compute-skip; the DMA still streams the block — index_map-level
+skipping is a hillclimb item, see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref,
+                   o_ref, m_ref, l_ref,
+                   m_scr, l_scr, acc_scr, *, block_t: int, max_len: int):
+    t = pl.program_id(0)
+    nt = pl.num_programs(0)
+
+    @pl.when(t == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]       # absolute tokens written (ring: may be > max_len)
+    window = len_ref[1]       # sliding window (== max_len when unwindowed)
+    n_slots = jnp.minimum(length, max_len)
+
+    @pl.when(t * block_t < n_slots)         # skip fully-masked blocks
+    def _step():
+        # dequantize K/V tiles in VMEM (int8 -> f32 multiply by scale row)
+        k = kq_ref[...].astype(jnp.float32) * ks_ref[...].astype(jnp.float32)
+        v = vq_ref[...].astype(jnp.float32) * vs_ref[...].astype(jnp.float32)
+        q = q_ref[...].astype(jnp.float32)
+        d = q.shape[-1]
+        logits = jax.lax.dot_general(                      # (G, bt)
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * jax.lax.rsqrt(
+                jnp.asarray(d, jnp.float32))
+        pos = t * block_t + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        # ring-slot age: slot s last held token (length-1-s) mod max_len ago
+        age = jnp.remainder(length - 1 - pos, max_len)
+        mask = (pos < n_slots) & (age < window)
+        logits = jnp.where(mask, logits, _NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new) * mask.astype(jnp.float32)
+        alpha = jnp.exp(m_prev - m_new)
+        m_scr[...] = m_new
+        l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(t == nt - 1)
+    def _finish():
+        # emit flash partials: unnormalized acc + (m, l) so callers can merge
+        # with the fp residual tail (blocked mode) or normalize directly
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+        m_ref[...] = m_scr[...]
+        l_ref[...] = l_scr[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "interpret"))
+def _decode_single(q, k_q, k_s, v_q, v_s, length, window, *, block_t: int,
+                   interpret: bool = True):
+    G, D = q.shape
+    T = k_q.shape[0]
+    nb = k_s.shape[0]
+    nt = T // block_t
+    # scale-row index for a given token block: per-block (nb == T//block_t)
+    # streams one scale row per step; per-channel (nb == 1) pins row 0.
+    if nb == 1:
+        s_map = lambda t: (0, 0)
+    elif nb == nt:
+        s_map = lambda t: (t, 0)
+    else:
+        raise ValueError(f"scale rows {nb} incompatible with {nt} token blocks")
+
+    kernel = functools.partial(_decode_kernel, block_t=block_t, max_len=T)
+    return pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # [length, window]
+            pl.BlockSpec((G, D), lambda t: (0, 0)),          # q resident
+            pl.BlockSpec((block_t, D), lambda t: (t, 0)),    # K tile
+            pl.BlockSpec((1, D), s_map),                     # K scale row
+            pl.BlockSpec((block_t, D), lambda t: (t, 0)),    # V tile
+            pl.BlockSpec((1, D), s_map),                     # V scale row
+        ],
+        out_specs=[pl.BlockSpec((G, D), lambda t: (0, 0)),
+                   pl.BlockSpec((G, 1), lambda t: (0, 0)),
+                   pl.BlockSpec((G, 1), lambda t: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((G, D), jnp.float32),
+                   jax.ShapeDtypeStruct((G, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((G, 1), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.stack([length, window]).astype(jnp.int32), q, k_q, k_s, v_q, v_s)
+
+
+def quant_attention_decode_partials(q, k_q, k_s, v_q, v_s, length, *,
+                                    window=None, block_t: int | None = None,
+                                    interpret: bool = True):
+    """Batched fused decode partials: q (B, H, D) over int8 cache
+    (B, Hkv, T, D). `window` masks ring slots by token age (sliding-window
+    caches); None = no window. Returns (o_unnormalized (B,H,D), m (B,H,1),
+    l (B,H,1))."""
+    B, H, D = q.shape
+    _, Hkv, T, _ = k_q.shape
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    # pad the GQA group to the 8-sublane minimum
+    Gp = max(8, G)
+    if Gp != G:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    if block_t is None:
+        nb = k_s.shape[2]
+        block_t = T // nb if nb > 1 else (256 if T % 256 == 0 else T)
+    lengths = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+    if window is None:
+        window = T
+    windows = jnp.broadcast_to(jnp.asarray(window, jnp.int32), (B,))
+    f = functools.partial(_decode_single, block_t=block_t, interpret=interpret)
+    o, m, l = jax.vmap(                                     # over batch
+        jax.vmap(f, in_axes=(0, 0, 0, 0, 0, None, None)),   # over kv heads
+        in_axes=(0, 0, 0, 0, 0, 0, 0))(qg, k_q, k_s, v_q, v_s, lengths,
+                                       windows)
+    trim = lambda a: a[:, :, :G].reshape(B, H, a.shape[-1])
+    return trim(o), trim(m), trim(l)
+
+
+def quant_attention_decode(q, k_q, k_s, v_q, v_s, length, *, window=None,
+                           block_t: int | None = None, interpret: bool = True):
+    """Normalized fused decode attention: (B, H, D) f32."""
+    o, m, l = quant_attention_decode_partials(
+        q, k_q, k_s, v_q, v_s, length, window=window, block_t=block_t,
+        interpret=interpret)
+    return o / jnp.maximum(l, 1e-30)

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references (the paper's "CPU baseline" analogue):
+each kernel in quantize.py / dequantize.py / quant_attention.py must
+assert_allclose against the function of the same name here, across shape and
+dtype sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127.0
+
+
+def quantize_fused_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused per-channel absmax + quantize of (T, D) -> (int8 (T,D), f32 (D,)).
+
+    Oracle for kernels/quantize.py::quantize_per_channel (paper Alg. 1 + Eq. 7).
+    """
+    scales = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=0), 1e-30) / QMAX
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scales[None]), -QMAX, QMAX)
+    return q.astype(jnp.int8), scales
+
+
+def quantize_blocked_ref(x: jax.Array, block_size: int) -> tuple[jax.Array, jax.Array]:
+    """Per-(token-block, channel) variant: (T, D) -> (int8 (T,D), f32 (T//B, D))."""
+    T, D = x.shape
+    xb = x.reshape(T // block_size, block_size, D).astype(jnp.float32)
+    scales = jnp.maximum(jnp.max(jnp.abs(xb), axis=1), 1e-30) / QMAX
+    q = jnp.clip(jnp.round(xb / scales[:, None]), -QMAX, QMAX)
+    return q.reshape(T, D).astype(jnp.int8), scales
+
+
+def dequantize_ref(x_q: jax.Array, scales: jax.Array,
+                   dtype=jnp.float32) -> jax.Array:
+    """(T, D) int8 × per-block scales (nb, D) -> dtype. nb=1 => per-channel."""
+    T, D = x_q.shape
+    nb = scales.shape[0]
+    xb = x_q.reshape(nb, T // nb, D).astype(jnp.float32)
+    return (xb * scales[:, None].astype(jnp.float32)).reshape(T, D).astype(dtype)
+
+
+def quant_attention_decode_ref(q: jax.Array, k_q: jax.Array, k_s: jax.Array,
+                               v_q: jax.Array, v_s: jax.Array,
+                               length: jax.Array) -> jax.Array:
+    """Single-token decode attention directly over the INT8 cache.
+
+    q:   (G, D) query heads sharing this KV head (GQA group)
+    k_q: (T, D) int8, k_s: (nb, D) f32  (nb=1 -> per-channel)
+    v_q: (T, D) int8, v_s: (nb, D) f32
+    length: () int32 — valid cache length; positions >= length are masked.
+    Returns (G, D) f32 attention output.
+    Oracle for kernels/quant_attention.py::quant_attention_decode.
+    """
+    T, D = k_q.shape
+    k = dequantize_ref(k_q, k_s)                     # (T, D) f32
+    v = dequantize_ref(v_q, v_s)
+    logits = (q.astype(jnp.float32) @ k.T) / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    mask = jnp.arange(T) < length
+    logits = jnp.where(mask[None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return w @ v
+
+
+def quant_attention_decode_partials_ref(q, k_q, k_s, v_q, v_s, length):
+    """Flash-decode partials (m, l, o·l) — used to test the softmax-merge path
+    that combines the quantized-prefix kernel with the fp residual tail."""
+    T, D = k_q.shape
+    k = dequantize_ref(k_q, k_s)
+    v = dequantize_ref(v_q, v_s)
+    logits = (q.astype(jnp.float32) @ k.T) / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    mask = jnp.arange(T) < length
+    logits = jnp.where(mask[None, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)            # (G, 1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(mask[None, :], jnp.exp(logits - m_safe), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)                 # (G, 1)
+    o = p @ v                                              # (G, D), unnormalized
+    return m_safe, l, o
+
+
+def softmax_merge_ref(parts):
+    """Merge flash partials [(m, l, o), ...] into normalized output (G, D)."""
+    m = jnp.max(jnp.stack([p[0] for p in parts]), axis=0)
+    l_tot = 0.0
+    o_tot = 0.0
+    for (mi, li, oi) in parts:
+        c = jnp.exp(mi - m)
+        l_tot = l_tot + li * c
+        o_tot = o_tot + oi * c
+    return o_tot / jnp.maximum(l_tot, 1e-30)

@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks device count on first init.
+
+# Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_2_3b \
+#         --shape train_4k --mesh pod
+#     PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+#
+# Per cell this proves, without hardware:
+#   * the sharding config is coherent (SPMD partitioner accepts it),
+#   * it fits (compiled.memory_analysis -> bytes/device),
+#   * and yields the roofline terms (cost_analysis + collective bytes from
+#     the partitioned HLO) for EXPERIMENTS.md §Roofline.
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, get_shape
+from repro.configs.registry import ARCHS
+from repro.launch import roofline as RF
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models import encdec, transformer
+from repro.optim import AdamWConfig
+from repro.parallel.shard import mesh_context
+from repro.serving.engine import make_serve_fns
+from repro.training.step import init_opt_state, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+# full-attention archs skip long_500k (documented: DESIGN.md §5)
+LONG_OK = {"mixtral_8x22b", "recurrentgemma_9b", "xlstm_350m"}
+
+
+def skip_reason(arch: str, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        return "full attention is O(T^2)/O(T) HBM at 500K — sub-quadratic archs only"
+    return None
+
+
+def input_specs(cfg, shape_cfg):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    if shape_cfg.kind == "train":
+        batch = {"tokens": SDS((B, S), jnp.int32),
+                 "labels": SDS((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = SDS((B, cfg.encoder_seq, cfg.d_model),
+                                  jnp.float32)
+        return batch
+    if shape_cfg.kind == "prefill":
+        batch = {"tokens": SDS((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = SDS((B, cfg.encoder_seq, cfg.d_model),
+                                  jnp.float32)
+        return batch
+    # decode: one new token against a cache of S
+    return {"token": SDS((B, 1), jnp.int32), "pos": SDS((B,), jnp.int32)}
+
+
+def params_struct(cfg):
+    if cfg.family == "encdec":
+        return jax.eval_shape(lambda k: encdec.init_params(cfg, k),
+                              jax.random.PRNGKey(0))
+    return jax.eval_shape(lambda k: transformer.init_params(cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+# per-arch microbatch counts for train_4k: global batch 256 (1M tokens) needs
+# gradient accumulation to fit 16 GB/chip on the big archs (§Perf iteration 7)
+TRAIN_MICROBATCHES = {
+    "mixtral_8x22b": 16, "qwen2_5_32b": 4, "codeqwen1_5_7b": 4,
+    "qwen2_moe_a2_7b": 4, "recurrentgemma_9b": 4, "xlstm_350m": 4,
+    "llama3_2_3b": 2, "internlm2_1_8b": 2, "qwen2_vl_2b": 2,
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               quant_mode: str = "per_block", block_size: int = 256,
+               microbatches: int | None = None):
+    """Lower + compile one cell. Returns (compiled, meta dict)."""
+    import dataclasses as dc
+    cfg = get_config(arch)
+    if quant_mode != cfg.quant.granularity or block_size != cfg.quant.block_size:
+        from repro.core.quantization import QuantConfig
+        cfg = dc.replace(cfg, quant=QuantConfig(granularity=quant_mode,
+                                                block_size=block_size))
+    shape_cfg = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+
+    # attention-free archs have no TP/CP use for "model": fold it into the
+    # batch axis so all 256 chips do useful work (§Perf iteration 8)
+    rules = ({"batch": ("pod", "data", "model")}
+             if cfg.family == "ssm" else None)
+    with mesh_context(mesh, rules):
+        p_sds = params_struct(cfg)
+        p_sh = SP.param_shardings(p_sds, mesh)
+        if shape_cfg.kind == "train":
+            mb = microbatches or TRAIN_MICROBATCHES.get(arch, 1)
+            step = make_train_step(cfg, AdamWConfig(), microbatches=mb)
+            o_sds = jax.eval_shape(init_opt_state, p_sds)
+            o_sh = SP.opt_shardings(o_sds, mesh)
+            b_sds = input_specs(cfg, shape_cfg)
+            b_sh = SP.batch_shardings(b_sds, mesh)
+            out_sds = jax.eval_shape(step, p_sds, o_sds, b_sds)
+            out_sh = (p_sh, o_sh, SP.replicated(out_sds[2], mesh))
+            fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=out_sh, donate_argnums=(0, 1))
+            lowered = fn.lower(p_sds, o_sds, b_sds)
+            model_flops = RF.train_model_flops(cfg, B * S)
+        elif shape_cfg.kind == "prefill":
+            max_len = _round_up(S, cfg.quant.block_size)
+            init_state, prefill_fn, _ = make_serve_fns(cfg, max_len=max_len)
+            s_sds = jax.eval_shape(lambda: init_state(B))
+            s_sh = SP.cache_shardings(s_sds, mesh)
+            b_sds = input_specs(cfg, shape_cfg)
+            b_sh = SP.batch_shardings(b_sds, mesh)
+            out_sds = jax.eval_shape(prefill_fn, p_sds, b_sds, s_sds)
+            out_sh = (SP.batch_shardings(out_sds[0], mesh), s_sh)
+            fn = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh, s_sh),
+                         out_shardings=out_sh)
+            lowered = fn.lower(p_sds, b_sds, s_sds)
+            model_flops = RF.prefill_model_flops(cfg, B, S)
+        else:  # decode
+            max_len = _round_up(S, cfg.quant.block_size)
+            # kernel-adjusted TPU memory term: the fused Pallas kernel reads
+            # the INT8 cache once (1 B/elem) and never materializes the
+            # dequantized copy the XLA fallback shows on CPU (DESIGN.md §2)
+            kern_bytes = (cfg.kv_cache_bytes(B, min(S, max_len), 1) +
+                          2 * RF.active_param_count(cfg)) / chips
+            init_state, _, decode_fn = make_serve_fns(cfg, max_len=max_len)
+            s_sds = jax.eval_shape(lambda: init_state(B))
+            s_sh = SP.cache_shardings(s_sds, mesh)
+            inp = input_specs(cfg, shape_cfg)
+            t_sh = SP.batch_shardings({"t": inp["token"]}, mesh)["t"]
+            pos_sh = SP.batch_shardings({"p": inp["pos"]}, mesh)["p"]
+            out_sds = jax.eval_shape(decode_fn, p_sds, inp["token"], s_sds,
+                                     inp["pos"])
+            out_sh = (SP.batch_shardings(out_sds[0], mesh), s_sh)
+            fn = jax.jit(decode_fn, in_shardings=(p_sh, t_sh, s_sh, pos_sh),
+                         out_shardings=out_sh)
+            lowered = fn.lower(p_sds, inp["token"], s_sds, inp["pos"])
+            model_flops = RF.decode_model_flops(cfg, B, S)
+
+        compiled = lowered.compile()
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "chips": chips, "model_flops": model_flops}
+    if shape_cfg.kind == "decode":
+        from repro.launch.mesh import HBM_BW
+        meta["kernel_adjusted_memory_s"] = kern_bytes / HBM_BW
+    return compiled, meta
+
+
+def _round_up(n, b):
+    return -(-n // b) * b
+
+
+def run_cell(arch, shape_name, multi_pod, verbose=True):
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": reason}
+    t0 = time.time()
+    try:
+        compiled, meta = lower_cell(arch, shape_name, multi_pod)
+    except Exception as e:
+        traceback.print_exc()
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "failed", "error": f"{type(e).__name__}: {e}"}
+    mem = compiled.memory_analysis()
+    rf = RF.analyze(compiled, meta["chips"], meta["model_flops"])
+    row = {**meta, "status": "ok",
+           "compile_s": round(time.time() - t0, 1),
+           # peak ≈ args + temps + non-aliased outputs (donation aliases
+           # params/opt in-place, exactly as the launcher runs the step)
+           "bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0) +
+                                   getattr(mem, "argument_size_in_bytes", 0) +
+                                   getattr(mem, "output_size_in_bytes", 0) -
+                                   getattr(mem, "alias_size_in_bytes", 0)),
+           "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+           "arg_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+           **rf.row()}
+    if verbose:
+        print(f"[{meta['arch']} × {meta['shape']} × {meta['mesh']}] OK "
+              f"compile={row['compile_s']}s "
+              f"mem/dev={row['bytes_per_device']/2**30:.2f}GiB "
+              f"compute={rf.compute_s*1e3:.1f}ms "
+              f"memory={rf.memory_s*1e3:.1f}ms "
+              f"coll={rf.collective_s*1e3:.1f}ms "
+              f"bottleneck={rf.bottleneck} mfu={rf.mfu:.3f}")
+        print("  memory_analysis:", mem)
+        print("  collectives:", rf.coll_detail)
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rows.append(run_cell(arch, shape, mp))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skipped" for r in rows)
+    n_fail = len(rows) - n_ok - n_skip
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_fail} FAILED ==")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

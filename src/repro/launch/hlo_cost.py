@@ -1,0 +1,260 @@
+"""Call-graph-aware cost model over compiled (post-SPMD) HLO text.
+
+Why: `compiled.cost_analysis()` counts each while-loop body ONCE, but our
+models execute layer-group scans (and flash-attention kv scans) with known
+trip counts — so flops/bytes/collective-bytes must be multiplied through the
+call graph. This module parses the HLO text into computations, extracts
+
+    * dot flops          2 · prod(out_shape) · prod(contracting dims)
+    * boundary bytes     Σ (operand + output bytes) of memory-touching ops
+    * collective bytes   output bytes of all-gather / all-reduce /
+                         reduce-scatter / all-to-all / collective-permute
+
+per computation, then evaluates the ENTRY computation with while-loop trip
+multipliers (trip = the s32 constant in the loop condition).
+
+Shapes in post-partitioning HLO are per-device, so every figure is
+per-device; collective bytes are per-device wire traffic.
+
+Caveats (documented in EXPERIMENTS.md): CPU-backend HLO differs from TPU HLO
+in fusion boundaries (bytes are approximate at ±fusion granularity) and has
+no MXU-specific rewrites; dot flops and collective bytes are exact either
+way. Elementwise flops are ignored (dot-dominated workloads).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose operands/results cross HBM at fusion boundaries.
+# NOTE: standalone elementwise/layout ops (convert, broadcast, iota,
+# transpose, pad) are EXCLUDED — the TPU backend fuses them into consumers;
+# counting the CPU backend's standalone instances inflated the memory term
+# ~2-5x (EXPERIMENTS.md §Perf, methodology note at iteration 9).
+_MEM_OPS = {"fusion", "dot", "copy", "dynamic-slice", "dynamic-update-slice",
+            "convolution", "gather", "scatter", "reduce", "concatenate",
+            "slice", "reverse", "sort", "reduce-window", "select-and-scatter",
+            *COLLECTIVES}
+_SKIP_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "custom-call",
+             "while", "conditional", "call"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_OPND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _parse_shape_list(typestr):
+    """'(f32[1,2]{...}, s32[])' or 'f32[3,4]{1,0}' -> [(dtype, dims), ...]"""
+    return [( d, tuple(int(x) for x in dims.split(",")) if dims else ())
+            for d, dims in _SHAPE_RE.findall(typestr)]
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dtype, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    out_shapes: list
+    operands: list[str]
+    attrs: str
+    args_text: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: dict[str, Op]
+    order: list[str]
+    is_entry: bool = False
+
+
+def parse_module(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(2), {}, [],
+                                  is_entry=bool(m.group(1)))
+                # header params: "param_0.1: f32[2,3]{1,0}, ..."
+                for pm in re.finditer(r"([\w\.\-]+)\s*:\s*([a-z0-9]+\[[0-9,]*\][^,]*|\([^)]*\))",
+                                      m.group(3)):
+                    pname, ptype = pm.groups()
+                    cur.ops[pname] = Op(pname, "parameter",
+                                        _parse_shape_list(ptype), [], "")
+            continue
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _DEF_RE.match(s)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # rhs: "<type> <op>(<operands>), attrs..."
+        tm = re.match(r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+([\w\-]+)\(", rhs)
+        if not tm:
+            continue
+        typestr, kind = tm.groups()
+        paren = rhs[tm.end() - 1:]
+        # operand list = names inside the first balanced paren group
+        depth = 0
+        end = 0
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        opnds = _OPND_RE.findall(paren[:end + 1])
+        attrs = paren[end + 1:]
+        cur.ops[name] = Op(name, kind, _parse_shape_list(typestr), opnds,
+                           attrs, paren[:end + 1])
+        cur.order.append(name)
+    return comps
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = 1
+    for _, dims in op.out_shapes:
+        for d in dims:
+            out_elems *= d
+    lhs = comp.ops.get(op.operands[0]) if op.operands else None
+    if lhs is None or not lhs.out_shapes:
+        return 0.0
+    lhs_dims = lhs.out_shapes[0][1]
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    contract = 1
+    if m and m.group(1):
+        for ix in m.group(1).split(","):
+            ci = int(ix)
+            if ci < len(lhs_dims):
+                contract *= lhs_dims[ci]
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k in self.coll:
+            self.coll[k] += o.coll[k]
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f,
+                    {k: v * f for k, v in self.coll.items()})
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def _trip_count(cond: Computation) -> int:
+    """Heuristic: the s32 scalar constant in the loop condition is the trip
+    bound (lax.scan/fori produce `lt(iv, constant(N))`)."""
+    best = 1
+    for op in cond.ops.values():
+        if op.kind == "constant" and op.out_shapes and \
+                op.out_shapes[0][0] == "s32" and not op.out_shapes[0][1]:
+            m = re.match(r"\((\d+)\)", op.args_text or "")
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _called(op: Op) -> dict[str, str]:
+    out = {}
+    for key in ("calls", "body", "condition", "to_apply"):
+        m = re.search(key + r"=%?([\w\.\-]+)", op.attrs)
+        if m:
+            out[key] = m.group(1)
+    return out
+
+
+def evaluate(comps: dict[str, Computation], root: str | None = None,
+             _memo=None) -> Cost:
+    if root is None:
+        root = next(c.name for c in comps.values() if c.is_entry)
+    if _memo is None:
+        _memo = {}
+    if root in _memo:
+        return _memo[root]
+    comp = comps[root]
+    total = Cost()
+    for name in comp.order:
+        op = comp.ops[name]
+        kind = op.kind
+        called = _called(op)
+        if kind == "while":
+            body = called.get("body")
+            cond = called.get("condition")
+            trip = _trip_count(comps[cond]) if cond in comps else 1
+            if body in comps:
+                total += evaluate(comps, body, _memo).scaled(trip)
+            if cond in comps:
+                total += evaluate(comps, cond, _memo).scaled(trip)
+            continue
+        if kind in ("call", "conditional"):
+            for tgt in called.values():
+                if tgt in comps:
+                    total += evaluate(comps, tgt, _memo)
+            continue
+        own = Cost()
+        if kind == "dot":
+            own.flops += _dot_flops(op, comp)
+        if kind == "fusion":
+            # dots inside fusions still run on the MXU — recurse for flops
+            tgt = called.get("calls")
+            if tgt in comps:
+                inner = evaluate(comps, tgt, _memo)
+                own.flops += inner.flops
+        if kind in COLLECTIVES:
+            own.coll[kind] += _bytes_of(op.out_shapes)
+        if kind in _MEM_OPS:
+            own.bytes += _bytes_of(op.out_shapes)
+            for o in op.operands:
+                src = comp.ops.get(o)
+                if src is not None:
+                    own.bytes += _bytes_of(src.out_shapes)
+        total += own
+    _memo[root] = total
+    return total
+
+
+def module_cost(hlo_text: str) -> Cost:
+    return evaluate(parse_module(hlo_text))

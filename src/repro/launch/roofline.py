@@ -1,0 +1,182 @@
+"""Roofline terms from a compiled dry-run artifact (EXPERIMENTS.md §Roofline).
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+cost_analysis() provides flops/bytes; collective bytes are parsed from the
+compiled (post-SPMD-partitioning) HLO text: we sum *output* shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op. Shapes in post-partitioning HLO are per-device, so
+the sum is per-device wire traffic (matching the per-chip link_bw
+denominator).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.launch import mesh as mesh_mod
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ag = bf16[2,512,128]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s(" +
+    "|".join(_COLLECTIVES) + r")[\s(.]")
+# tuple-result ops:  (f32[8,4], f32[8,4]) all-reduce(...)
+_TUPLE_RE = re.compile(
+    r"=\s*\(((?:[a-z0-9]+\[[0-9,]*\][^,)]*,?\s*)+)\)\s*(" +
+    "|".join(_COLLECTIVES) + r")[\s(.]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind byte totals from compiled HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        matched = False
+        m = _OP_RE.search(s)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            matched = True
+        if not matched:
+            m = _TUPLE_RE.search(s)
+            if m:
+                shapes, kind = m.groups()
+                for dtype, dims in _SHAPE_RE.findall(shapes):
+                    out[kind] += _shape_bytes(dtype, dims)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO dot flops (call-graph walk)
+    hbm_bytes: float             # per-device fusion-boundary bytes
+    coll_bytes: float            # per-device collective wire bytes
+    chips: int
+    model_flops: float           # 6·N·D useful flops, whole job (0 if n/a)
+    coll_detail: dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / mesh_mod.PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / mesh_mod.HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        # ~4 usable ICI links per chip on a v5e torus
+        return self.coll_bytes / (4 * mesh_mod.ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline estimate: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        if not self.model_flops:
+            return 0.0
+        return self.model_flops / (
+            self.step_time_s * self.chips * mesh_mod.PEAK_FLOPS_BF16)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops summed over chips) — catches remat and
+        redundancy waste."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bottleneck": self.bottleneck,
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio, "mfu": self.mfu,
+            "step_time_s": self.step_time_s,
+        }
+
+
+def analyze(compiled, chips: int, model_flops: float = 0.0) -> Roofline:
+    """Roofline terms via the call-graph HLO cost model (hlo_cost.py) —
+    `cost_analysis()` counts while-bodies once and is only kept as a
+    cross-check lower bound."""
+    from repro.launch import hlo_cost as HC
+    cost = HC.module_cost(compiled.as_text())
+    return Roofline(
+        flops=cost.flops,
+        hbm_bytes=cost.bytes,
+        coll_bytes=cost.coll_bytes,
+        chips=chips,
+        model_flops=model_flops,
+        coll_detail={k: int(v) for k, v in cost.coll.items() if v},
+    )
+
+
+def train_model_flops(cfg, tokens: int) -> float:
+    """6·N·D with N = active params (MoE: routed active + shared)."""
+    n = active_param_count(cfg)
+    return 6.0 * n * tokens
+
+
+def active_param_count(cfg) -> float:
+    n = cfg.param_count()
+    if cfg.n_experts and cfg.top_k:
+        eff = cfg.moe_d_ff or cfg.d_ff
+        per_expert = 3 * cfg.d_model * eff
+        n_moe_layers = sum(1 for i in range(cfg.n_layers)
+                           if cfg.block_kind(i) == "moe")
+        n -= (cfg.n_experts - cfg.top_k) * per_expert * n_moe_layers
+    return n
+
+
+def prefill_model_flops(cfg, batch: int, seq: int) -> float:
+    """Forward-only: 2·N_active per token + causal attention matmuls."""
+    n = active_param_count(cfg)
+    flops = 2.0 * n * batch * seq
+    eff = seq if cfg.sliding_window is None else min(seq, cfg.sliding_window)
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.block_kind(i) in ("attn", "local_attn", "moe"))
+    # 2 matmuls (qk, pv) x 2 flops, x1/2 causal
+    flops += batch * 2.0 * n_attn * cfg.n_heads * cfg.head_dim * seq * eff
+    return flops
+
+
+def decode_model_flops(cfg, batch: int, context: int) -> float:
+    """One-token decode: 2·N_active per token + attention cache reads
+    (2·2·L_attn·Hkv·dh·T per token ≈ cache dot products)."""
+    n = active_param_count(cfg)
+    flops = 2.0 * n * batch
+    eff = context if cfg.sliding_window is None else min(context,
+                                                         cfg.sliding_window)
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.block_kind(i) in ("attn", "local_attn", "moe"))
+    flops += batch * 4.0 * n_attn * cfg.n_heads * cfg.head_dim * eff
+    return flops

@@ -1,0 +1,111 @@
+"""Sharding specs for parameters, optimizer state, batches, and caches.
+
+Rules are keyed on the *leaf name* (last pytree path element) and give the
+logical axes of the TRAILING dims; leading dims (layer-group stacking) are
+replicated. `parallel.shard.logical_spec` maps logical axes onto whatever
+mesh is in use with divisibility fallbacks, so the same rules serve the
+(16,16), the (2,16,16) and the (1,1) smoke mesh.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.shard import logical_spec
+
+# leaf name -> logical axes of trailing dims
+PARAM_RULES: dict[str, tuple] = {
+    "embed": ("vocab", "fsdp"),
+    "lm_head": ("fsdp", "vocab"),
+    "wq": ("fsdp", "heads"), "wk": ("fsdp", "heads"), "wv": ("fsdp", "heads"),
+    "wo": ("heads", "fsdp"),
+    "bq": ("heads",), "bk": ("heads",), "bv": ("heads",),
+    "w_gate": ("fsdp", "ffn"), "w_up": ("fsdp", "ffn"),
+    "w_down": ("ffn", "fsdp"),
+    "w_in": ("fsdp", "ffn"), "w_out": ("ffn", "fsdp"),
+    "router": ("fsdp", None), "shared_gate": ("fsdp", None),
+    "conv_w": (None, "ffn"),
+    "lam": ("ffn",), "w_a": ("ffn",), "b_a": ("ffn",),
+    "w_x": ("ffn",), "b_x": ("ffn",),
+    "w_if": ("fsdp", None), "b_if": (None,),
+    "w_gates": ("fsdp", "heads"), "r_gates": ("fsdp", "heads"),
+    "b": (None,),
+    "scale": (None,), "bias": (None,),
+}
+
+# serving-cache leaf name -> logical axes of trailing dims
+CACHE_RULES: dict[str, tuple] = {
+    # INT8 KV cache: batch DP, cache length sharded over "model"
+    # (flash-decode cross-shard merge; works for any kv-head count)
+    "k_q": ("batch", None, "seq_shard", None),
+    "v_q": ("batch", None, "seq_shard", None),
+    "k_s": ("batch", None, "seq_shard", None),
+    "v_s": ("batch", None, "seq_shard", None),
+    "resid_k": ("batch", None, None, None),
+    "resid_v": ("batch", None, None, None),
+    "length": (),
+    # RG-LRU state
+    "h": ("batch", "ffn"),
+    "conv": ("batch", None, "ffn"),
+    # mLSTM matrix memory
+    "C": ("batch", None, "heads", None),
+    "n": ("batch", None, "heads"),
+    "m": ("batch", None),
+    "C_s": ("batch", None, "heads"),
+    # sLSTM state
+    "c": ("batch", "ffn"),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+        # SequenceKey etc: keep walking up
+    return ""
+
+
+def _spec_for(path, leaf, rules, mesh: Mesh) -> NamedSharding:
+    name = _leaf_name(path)
+    logical = rules.get(name)
+    shape = np.shape(leaf) if not hasattr(leaf, "shape") else leaf.shape
+    if logical is None or len(shape) < len(logical):
+        return NamedSharding(mesh, P())
+    pad = (None,) * (len(shape) - len(logical))
+    return NamedSharding(mesh, logical_spec(pad + tuple(logical), shape, mesh))
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _spec_for(p, l, PARAM_RULES, mesh), params)
+
+
+def opt_shardings(opt_state, mesh: Mesh):
+    """Optimizer moments/master mirror the param layout; counters replicate.
+
+    The state tree is {"adam": {m, v, master, step}, ["grad_err"]} where
+    m/v/master/grad_err mirror the params tree — so the param leaf name is
+    further up the path; reuse PARAM_RULES by leaf name all the same."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _spec_for(p, l, PARAM_RULES, mesh), opt_state)
+
+
+def cache_shardings(state, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _spec_for(p, l, CACHE_RULES, mesh), state)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    def one(path, leaf):
+        logical = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, logical_spec(logical, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,6 @@
+"""Model zoo: functional JAX models for all assigned architectures."""
+from repro.models import (attention, common, encdec, flash, mlp, moe, rglru,
+                          transformer, xlstm)
+
+__all__ = ["attention", "common", "encdec", "flash", "mlp", "moe", "rglru",
+           "transformer", "xlstm"]

@@ -1,0 +1,235 @@
+"""GQA/MQA/MHA attention with a pluggable (quantized or fp) KV cache.
+
+Three entry points per layer:
+    train(...)    — full causal (optionally sliding-window) attention, no cache
+    prefill(...)  — causal attention over the prompt; quantizes K/V into cache
+    decode(...)   — one token vs the INT8 cache via the fused kernel (ops.py)
+
+RoPE / M-RoPE applied to q,k before caching (rotated keys are what the paper
+quantizes in serving systems: dequantized keys are directly dot-producted).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import kvcache as KV
+from repro.core import quantization as Q
+from repro.kernels import ops
+from repro.models import flash
+from repro.models.common import act_shard, apply_mrope, apply_rope, dense_init
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    ks = jax.random.split(key, 4)
+    dt = cfg.activation_dtype
+    p = {
+        "wq": dense_init(ks[0], d, nq, dt),
+        "wk": dense_init(ks[1], d, nkv, dt),
+        "wv": dense_init(ks[2], d, nkv, dt),
+        "wo": dense_init(ks[3], nq, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq,), dt)
+        p["bk"] = jnp.zeros((nkv,), dt)
+        p["bv"] = jnp.zeros((nkv,), dt)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    """x (B, S, d) -> q (B, H, S, hd), k/v (B, Hkv, S, hd), RoPE applied."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    # context parallelism: queries sequence-sharded over "model"; K/V gathered
+    # (GQA keeps them small). Head counts (12/24/40/48) need not divide the
+    # model axis this way — DESIGN.md §4. RoPE runs on the *sharded* tensors
+    # and the gather moves the bf16 result (§Perf iteration 3: gathering
+    # before RoPE made XLA hoist the gather into RoPE's f32 intermediates).
+    if S > 1:
+        q = act_shard(q, "batch", None, "seq_shard", None)
+        k = act_shard(k, "batch", None, "seq_shard", None)
+        v = act_shard(v, "batch", None, "seq_shard", None)
+    if cfg.mrope_sections is not None:
+        pos3 = positions if positions.ndim == 3 else jnp.broadcast_to(
+            positions[:, None], (B, 3, S))
+        q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if S > 1:
+        k = _gather_seq(k)
+        v = _gather_seq(v)
+    return q, k, v
+
+
+def _gather_seq(x):
+    """Explicit context-parallel K/V gather inside shard_map: guarantees the
+    collective moves the bf16 storage dtype (GSPMD hoisted it above f32
+    intermediates), and its transpose is a bf16 psum_scatter for dK/dV
+    (§Perf iteration 11). Falls back to a sharding constraint when the mesh
+    or shapes don't apply."""
+    from repro.parallel.shard import current_mesh, current_rules
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return act_shard(x, "batch", None, None, None)
+    ntp = mesh.shape["model"]
+    B, Hkv, S, D = x.shape
+    rules = current_rules()
+    if (ntp == 1 or S % ntp or rules.get("seq_shard") != ("model",)
+            or "model" in rules.get("batch", ())):
+        return act_shard(x, "batch", None, None, None)
+    from jax.sharding import PartitionSpec as P
+    try:
+        from jax import shard_map as _shard_map
+    except ImportError:                                # pragma: no cover
+        from jax.experimental.shard_map import shard_map as _shard_map
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nf = 1
+    for a in fsdp:
+        nf *= mesh.shape[a]
+    batch_ax = fsdp if fsdp and B % nf == 0 else ()
+    in_spec = P(batch_ax if batch_ax else None, None, "model", None)
+    out_spec = P(batch_ax if batch_ax else None, None, None, None)
+    return _shard_map(
+        lambda xl: jax.lax.all_gather(xl, "model", axis=2, tiled=True),
+        mesh=mesh, in_specs=(in_spec,), out_specs=out_spec,
+        check_vma=False)(x)
+
+
+def _sdpa(q, k, v, cfg: ModelConfig, *, causal: bool, window: int | None,
+          kv_offset: int = 0):
+    """Blocked flash-style attention (see models/flash.py)."""
+    return flash.flash_attention(q, k, v, causal, window, kv_offset)
+
+
+def _merge_heads(p, out, cfg: ModelConfig, dtype):
+    B, H, S, hd = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd).astype(dtype)
+    return act_shard(out @ p["wo"], "batch", "seq_shard", None)
+
+
+# -- training ---------------------------------------------------------------
+
+def train(p, x, cfg: ModelConfig, positions, *, local: bool = False,
+          causal: bool = True):
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    window = cfg.sliding_window if (cfg.sliding_window or local) else None
+    out = _sdpa(q, k, v, cfg, causal=causal, window=window)
+    return _merge_heads(p, out, cfg, x.dtype)
+
+
+def cross_train(p, x, kv_src, cfg: ModelConfig):
+    """Encoder-decoder cross attention (train/prefill): queries from x,
+    keys/values from kv_src (encoder output). No RoPE, no mask."""
+    B, S, _ = x.shape
+    zeros_q = jnp.zeros((B, S), jnp.int32)
+    zeros_k = jnp.zeros((B, kv_src.shape[1]), jnp.int32)
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = (kv_src @ p["wk"]).reshape(B, -1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = (kv_src @ p["wv"]).reshape(B, -1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    out = _sdpa(q, k, v, cfg, causal=False, window=None)
+    return _merge_heads(p, out, cfg, x.dtype), (k, v)
+
+
+def cross_decode(p, x, cfg: ModelConfig, cache: KV.QuantizedKVCache,
+                 *, impl: str = "auto"):
+    """Decode-time cross attention over the (per-channel) quantized encoder
+    K/V — the paper's ideal case: the whole matrix is known upfront, scales
+    computed once (Eq. 5), never updated."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    out = ops.quant_attention_decode(
+        q[:, :, 0], cache.k_q, cache.k_s, cache.v_q, cache.v_s,
+        cache.valid_len, impl=impl)
+    return _merge_heads(p, out[:, :, None].astype(x.dtype), cfg, x.dtype)
+
+
+# -- serving ------------------------------------------------------------------
+
+def prefill(p, x, cfg: ModelConfig, positions, cache: KV.QuantizedKVCache,
+            *, local: bool = False):
+    """Prompt pass: causal attention + quantize K/V into the cache."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    window = cfg.sliding_window if (cfg.sliding_window or local) else None
+    out = _sdpa(q, k, v, cfg, causal=True, window=window)
+    cache = cache.prefill(k.astype(jnp.float32), v.astype(jnp.float32))
+    return _merge_heads(p, out, cfg, x.dtype), cache
+
+
+def decode(p, x, cfg: ModelConfig, positions, cache: KV.QuantizedKVCache,
+           *, local: bool = False, impl: str = "auto"):
+    """One-token step against the INT8 cache (fused dequant attention)."""
+    q, k, v = _project_qkv(p, x, cfg, positions)          # S == 1
+    cache = cache.append(k.astype(jnp.float32), v.astype(jnp.float32))
+    B, H, _, hd = q.shape
+    window = cfg.sliding_window if (cfg.sliding_window or local) else None
+    if cache.per_channel:
+        out = ops.quant_attention_decode(
+            q[:, :, 0], cache.k_q, cache.k_s, cache.v_q, cache.v_s,
+            cache.length, window=window if cache.ring else None, impl=impl)
+    else:
+        # quantized prefix via the fused kernel + exact fp residual tail,
+        # combined with a softmax merge (flash partials)
+        out = _decode_blocked(q[:, :, 0], cache,
+                              window=window if cache.ring else None,
+                              impl=impl)
+    out = out[:, :, None]                                  # (B, H, 1, hd)
+    return _merge_heads(p, out.astype(x.dtype), cfg, x.dtype), cache
+
+
+def _decode_blocked(q, cache: KV.QuantizedKVCache, *, window=None,
+                    impl="auto"):
+    """Merge fused-kernel attention over flushed blocks with exact attention
+    over the bf16 residual tail."""
+    B, H, hd = q.shape
+    bs = cache.block_size
+    # quantized slots hold the flushed prefix; the newest n_tail tokens live
+    # unquantized in the residual buffer
+    flushed = (cache.length // bs) * bs          # absolute flushed count
+    n_tail = cache.length % bs
+    # ages in the quantized buffer are relative to `flushed`; the window
+    # budget left for it excludes the n_tail newest (residual) tokens
+    win_q = None if window is None else jnp.maximum(window - n_tail, 0)
+    # partials over the quantized prefix (fused kernel on TPU)
+    o1, m1, l1 = ops.quant_attention_decode_partials(
+        q, cache.k_q, cache.k_s, cache.v_q, cache.v_s, flushed,
+        window=win_q, impl=impl)
+    # partials over the residual tail (exact, fp)
+    m2, l2, o2 = _decode_partials_fp(q, cache.resid_k, cache.resid_v, n_tail)
+    m = jnp.maximum(m1, m2)
+    c1, c2 = jnp.exp(m1 - m), jnp.exp(m2 - m)
+    l = l1 * c1 + l2 * c2
+    return (o1 * c1 + o2 * c2) / jnp.maximum(l, 1e-30)
+
+
+def _decode_partials_fp(q, rk, rv, n_tail):
+    B, H, hd = q.shape
+    Hkv, bs = rk.shape[1], rk.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhtd->bhgt", qg, rk.astype(jnp.float32))
+    logits = logits / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    mask = jnp.arange(bs)[None, None, None, :] < n_tail
+    logits = jnp.where(mask, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.maximum(m, -1e30 / 2)
+    pexp = jnp.where(mask, jnp.exp(logits - m), 0.0)
+    l = jnp.sum(pexp, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgt,bhtd->bhgd", pexp, rv.astype(jnp.float32))
+    return (m.reshape(B, H, 1), l.reshape(B, H, 1), o.reshape(B, H, hd))

@@ -1,0 +1,101 @@
+"""Shared model components: norms, embeddings, RoPE / M-RoPE, init helpers.
+
+Everything is functional: params are nested dicts of jax.Arrays, layers are
+pure functions. Sharding of activations is applied by the parallel/ layer via
+`repro.parallel.shard.act_shard` (no-op outside a mesh context).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.shard import act_shard
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(jnp.asarray(in_dim, jnp.float32))
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE — standard rotary embedding over (B, H, T, D_head)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x (B, H, T, D); positions (B, T) int32."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                                    # (D/2,)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs   # (B,1,T,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections: tuple[int, ...],
+                theta: float = 10000.0) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: head_dim/2 freq channels split into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    x (B, H, T, D); positions (B, 3, T) int32 (for pure text the three rows
+    are identical, which reduces M-RoPE to standard RoPE — hf impl).
+    sections: per-section freq counts, sum == D//2.
+    """
+    D = x.shape[-1]
+    assert sum(sections) == D // 2, (sections, D)
+    freqs = rope_freqs(D, theta)                                    # (D/2,)
+    # section id of each freq channel -> which of the 3 position rows to use
+    sec_id = jnp.repeat(jnp.arange(len(sections)), jnp.asarray(sections),
+                        total_repeat_length=D // 2)                 # (D/2,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),                              # (B,3,T)
+        jnp.broadcast_to(sec_id[None, :, None], (x.shape[0], D // 2, x.shape[2])).astype(jnp.int32),
+        axis=1)                                                     # (B,D/2,T)
+    ang = jnp.einsum("bft,f->btf", pos, freqs)[:, None]             # (B,1,T,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """(B, T) -> (B, 3, T): text-only M-RoPE positions (all sections equal)."""
+    return jnp.broadcast_to(positions[:, None, :],
+                            (positions.shape[0], 3, positions.shape[1]))
+
+
+__all__ = ["act_shard", "apply_mrope", "apply_rope", "dense_init", "embed_init",
+           "layernorm", "layernorm_init", "rmsnorm", "rmsnorm_init",
+           "rope_freqs", "text_mrope_positions"]

@@ -1,0 +1,149 @@
+"""Blocked (flash-style) attention in pure JAX — O(S·block) memory.
+
+XLA on TPU fuses this into an MXU pipeline; it is the memory-feasible
+train/prefill attention for 32K+ sequences (a full (S, T) logits tensor at
+prefill_32k would be ~4 GB/layer/device). The kv axis is processed with a
+`lax.scan` carrying online-softmax state (m, l, acc).
+
+Sharding (DESIGN.md §4): queries (and the output) are *sequence-sharded*
+over the "model" axis — context parallelism — because assigned head counts
+(12, 24, 40, 48) do not all divide the 16-way model axis, while the sequence
+always does. K/V are gathered per layer (they are Hkv-small under GQA).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_shard
+
+
+def _pad_kv(k, v, kv_block):
+    T = k.shape[2]
+    nblk = -(-T // kv_block)
+    pad = nblk * kv_block - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return k, v, nblk
+
+
+def _mask_for(blk, kv_block, qpos, T, causal, window):
+    kpos = blk * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (1, kv_block), 1)
+    mask = kpos < T                                       # padding
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int | None = None,
+                    kv_offset: int = 0, kv_block: int = 512) -> jax.Array:
+    """q (B, H, S, d); k/v (B, Hkv, T, d) -> (B, H, S, d) f32.
+
+    GQA broadcast: H = Hkv * G. Query position i attends to kv position j iff
+    j <= i + kv_offset (causal) and j > i + kv_offset - window (sliding).
+
+    custom_vjp: the backward recomputes each kv block's probabilities from
+    the saved (q, k, v, out, m, l) instead of letting scan-autodiff stash
+    per-block logits — the flash-attention memory property, essential at
+    32K context (EXPERIMENTS.md §Perf iteration 2).
+    """
+    out, _, _ = _flash_fwd_core(q, k, v, causal, window, kv_offset, kv_block)
+    return out
+
+
+def _flash_fwd_core(q, k, v, causal, window, kv_offset, kv_block):
+    B, H, S, d = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = H // Hkv
+    kv_block = min(kv_block, T)
+    k, v, nblk = _pad_kv(k, v, kv_block)
+    qg = (q.reshape(B, Hkv, G, S, d).astype(jnp.float32) *
+          jax.lax.rsqrt(jnp.asarray(d, jnp.float32)))
+    qpos = kv_offset + jax.lax.broadcasted_iota(jnp.int32, (S, 1), 0)
+
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        # K/V stay in their storage dtype (bf16): the context-parallel
+        # all-gather then moves half the bytes; the MXU accumulates in f32
+        # via preferred_element_type (§Perf iteration 3).
+        kb = jax.lax.dynamic_slice_in_dim(k, blk * kv_block, kv_block, 2)
+        vb = jax.lax.dynamic_slice_in_dim(v, blk * kv_block, kv_block, 2)
+        logits = jnp.einsum("bhgsd,bhtd->bhgst", qg.astype(kb.dtype), kb,
+                            preferred_element_type=jnp.float32)
+        mask = _mask_for(blk, kv_block, qpos, T, causal, window)
+        logits = jnp.where(mask, logits, -1e30)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new) * mask.astype(jnp.float32)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhgst,bhtd->bhgsd",
+                                       p.astype(vb.dtype), vb,
+                                       preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, G, S, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, S, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, S, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nblk))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l).reshape(B, H, S, d)
+    return out, m, l
+
+
+def _flash_fwd(q, k, v, causal, window, kv_offset, kv_block):
+    out, m, l = _flash_fwd_core(q, k, v, causal, window, kv_offset, kv_block)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_bwd(causal, window, kv_offset, kv_block, res, dout):
+    q, k, v, out, m, l = res
+    B, H, S, d = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = H // Hkv
+    kv_block_ = min(kv_block, T)
+    k, v, nblk = _pad_kv(k, v, kv_block_)
+    scale = jax.lax.rsqrt(jnp.asarray(d, jnp.float32))
+    qg = q.reshape(B, Hkv, G, S, d).astype(jnp.float32) * scale
+    og = out.reshape(B, Hkv, G, S, d).astype(jnp.float32)
+    dog = dout.reshape(B, Hkv, G, S, d).astype(jnp.float32)
+    qpos = kv_offset + jax.lax.broadcasted_iota(jnp.int32, (S, 1), 0)
+    # D_i = sum_d dout_i * out_i  (softmax-backward rowsum term)
+    Drow = jnp.sum(dog * og, axis=-1, keepdims=True)          # (B,Hkv,G,S,1)
+
+    def body(dq, blk):
+        kb = jax.lax.dynamic_slice_in_dim(k, blk * kv_block_, kv_block_, 2)
+        vb = jax.lax.dynamic_slice_in_dim(v, blk * kv_block_, kv_block_, 2)
+        # p must be recomputed with the same bf16-dot as the forward
+        logits = jnp.einsum("bhgsd,bhtd->bhgst", qg.astype(kb.dtype), kb,
+                            preferred_element_type=jnp.float32)
+        mask = _mask_for(blk, kv_block_, qpos, T, causal, window)
+        logits = jnp.where(mask, logits, -1e30)
+        p = jnp.exp(logits - m) / l * mask.astype(jnp.float32)
+        dp = jnp.einsum("bhgsd,bhtd->bhgst", dog, vb.astype(jnp.float32))
+        ds = p * (dp - Drow)                                  # (B,Hkv,G,S,t)
+        dqb = jnp.einsum("bhgst,bhtd->bhgsd", ds, kb.astype(jnp.float32))
+        dkb = jnp.einsum("bhgst,bhgsd->bhtd", ds, qg)
+        dvb = jnp.einsum("bhgst,bhgsd->bhtd", p, dog)
+        return dq + dqb, (dkb, dvb)
+
+    dq0 = jnp.zeros((B, Hkv, G, S, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, jnp.arange(nblk))
+    # qg already carries the 1/sqrt(d) scale: dk (via qg) needs no rescale,
+    # dq needs one more factor of scale.
+    dq = (dq * scale).reshape(B, H, S, d).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 2).reshape(B, Hkv, nblk * kv_block_, d)
+    dv = jnp.moveaxis(dvs, 0, 2).reshape(B, Hkv, nblk * kv_block_, d)
+    dk = dk[:, :, :T].astype(k.dtype)
+    dv = dv[:, :, :T].astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

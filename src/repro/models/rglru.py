@@ -1,0 +1,139 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block = (gate branch: GeLU(W_gate x)) ⊙ (recurrence branch: temporal conv1d
+-> RG-LRU) -> W_out.
+
+RG-LRU recurrence (diagonal, per-channel):
+    r_t = sigmoid(w_a ⊙ u_t + b_a)          recurrence gate
+    i_t = sigmoid(w_x ⊙ u_t + b_x)          input gate
+    a_t = exp(c · softplus(Λ) · (-r_t))     decay in (0,1),  c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+
+Because a_t, b_t depend only on u_t, the recurrence is a first-order linear
+scan: train/prefill use `jax.lax.associative_scan` (log-depth, parallel);
+decode is a single fused step.
+
+Gates here are diagonal (per-channel) rather than Griffin's block-diagonal
+linear maps — a documented simplification that keeps the same recurrence
+structure and state size (DESIGN.md §Arch-applicability).
+
+Beyond-paper (paper's technique on the recurrent state): with
+`state_quant=True` the carried state h is stored INT8 per-channel between
+decode steps — the recurrent analogue of KV-cache compression.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import act_shard, dense_init
+
+_C = 8.0
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    d, w = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 4)
+    dt = cfg.activation_dtype
+    return {
+        "w_in": dense_init(ks[0], d, w, dt),
+        "w_gate": dense_init(ks[1], d, w, dt),
+        "w_out": dense_init(ks[2], w, d, dt),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv1d_width, w), jnp.float32)
+                   * 0.02).astype(dt),
+        "lam": jnp.full((w,), 2.0, jnp.float32),   # softplus(2) ≈ 2.1 decay
+        "w_a": jnp.ones((w,), jnp.float32) * 0.5,
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": jnp.ones((w,), jnp.float32) * 0.5,
+        "b_x": jnp.zeros((w,), jnp.float32),
+    }
+
+
+@dataclasses.dataclass
+class RGLRUState:
+    """Decode-time carry: recurrent state + conv tail."""
+    h: jax.Array          # (B, w) f32  (or int8-roundtripped if state_quant)
+    conv: jax.Array       # (B, conv_width-1, w)
+
+
+def init_state(cfg: ModelConfig, batch: int) -> RGLRUState:
+    w = cfg.rnn_width
+    return RGLRUState(h=jnp.zeros((batch, w), jnp.float32),
+                      conv=jnp.zeros((batch, cfg.conv1d_width - 1, w),
+                                     jnp.float32))
+
+
+jax.tree_util.register_dataclass(RGLRUState, data_fields=["h", "conv"],
+                                 meta_fields=[])
+
+
+def _gates(p, u):
+    """u (..., w) f32 -> (a, b) of the linear recurrence h = a·h_prev + b."""
+    r = jax.nn.sigmoid(u * p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(u * p["w_x"] + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u)
+    return a, b
+
+
+def _conv1d(p, u, prev_tail=None):
+    """Causal temporal conv over (B, S, w); prev_tail (B, cw-1, w) for decode
+    continuity."""
+    cw = p["conv_w"].shape[0]
+    if prev_tail is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = prev_tail.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)                     # (B, S+cw-1, w)
+    out = sum(up[:, i:i + u.shape[1]] * p["conv_w"][i] for i in range(cw))
+    return out, up[:, -(cw - 1):]                              # new tail
+
+
+def _scan(a, b, h0=None):
+    """Parallel linear scan h_t = a_t h_{t-1} + b_t over axis 1 (time)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_seq(p, x, cfg: ModelConfig, state: RGLRUState | None = None):
+    """Train/prefill: x (B, S, d) -> (out (B, S, d), final RGLRUState)."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u = (x @ p["w_in"]).astype(jnp.float32)
+    u = act_shard(u, "batch", "seq", "ffn")
+    u, tail = _conv1d(p, u, None if state is None else state.conv)
+    a, b = _gates(p, u)
+    h0 = None if state is None else state.h
+    h = _scan(a, b, h0)                                        # (B, S, w)
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    new_state = RGLRUState(h=h[:, -1], conv=tail.astype(jnp.float32))
+    return act_shard(out, "batch", "seq", None), new_state
+
+
+def apply_step(p, x, cfg: ModelConfig, state: RGLRUState,
+               state_quant: bool = False):
+    """Decode: x (B, 1, d) -> (out (B, 1, d), new state)."""
+    h_prev = state.h
+    if state_quant:
+        # paper's symmetric INT8 on the carried recurrent state, one scale
+        # per batch row (rows are independent requests in serving)
+        s = jnp.maximum(jnp.max(jnp.abs(h_prev), axis=-1, keepdims=True),
+                        1e-30) / 127.0
+        h_prev = jnp.round(h_prev / s).clip(-127, 127).astype(jnp.int8) * s
+    gate = jax.nn.gelu(x @ p["w_gate"])                        # (B, 1, w)
+    u = (x @ p["w_in"]).astype(jnp.float32)
+    u, tail = _conv1d(p, u, state.conv)
+    a, b = _gates(p, u[:, 0])                                  # (B, w)
+    h = a * h_prev + b
+    out = (h[:, None].astype(x.dtype) * gate) @ p["w_out"]
+    return out, RGLRUState(h=h, conv=tail.astype(jnp.float32))

@@ -1,0 +1,307 @@
+"""Decoder-only transformer assembly for every assigned architecture.
+
+Layers are *stacked by pattern period* and executed with `lax.scan` over
+layer groups (compile time stays O(period), not O(n_layers) — essential when
+dry-running 40 (arch × shape) cells). A pattern remainder (e.g.
+recurrentgemma's 38 = 12×3 + 2) runs as unstacked tail blocks.
+
+Block kinds (configs.base.BlockKind):
+    attn        pre-norm GQA attention + pre-norm SwiGLU MLP
+    local_attn  same, sliding-window attention
+    moe         pre-norm GQA attention + pre-norm MoE FFN
+    rglru       pre-norm RG-LRU mixer + pre-norm SwiGLU MLP
+    mlstm/slstm xLSTM mixers (no FFN when cfg.d_ff == 0)
+
+Serving state is a per-group stack of per-position caches:
+    attention   -> core.kvcache.QuantizedKVCache   (the paper's technique)
+    rglru       -> models.rglru.RGLRUState
+    mlstm/slstm -> models.xlstm.{MLSTM,SLSTM}State
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import kvcache as KV
+from repro.models import attention, mlp, moe, rglru, xlstm
+from repro.models.common import (act_shard, embed_init, rmsnorm, rmsnorm_init,
+                                 layernorm, layernorm_init, dense_init,
+                                 text_mrope_positions)
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab // 128) * 128
+
+
+def _norm_init(cfg):
+    return (rmsnorm_init if cfg.norm == "rmsnorm" else layernorm_init)(cfg.d_model)
+
+
+def _norm(cfg, p, x):
+    return (rmsnorm if cfg.norm == "rmsnorm" else layernorm)(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _block_init(cfg: ModelConfig, kind: str, key) -> dict:
+    ks = jax.random.split(key, 2)
+    p: dict[str, Any] = {"norm1": _norm_init(cfg)}
+    if kind in ("attn", "local_attn", "moe"):
+        p["attn"] = attention.init(cfg, ks[0])
+    elif kind == "rglru":
+        p["rglru"] = rglru.init(cfg, ks[0])
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm.mlstm_init(cfg, ks[0])
+    elif kind == "slstm":
+        p["slstm"] = xlstm.slstm_init(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    if kind == "moe":
+        p["norm2"] = _norm_init(cfg)
+        p["moe"] = moe.init(cfg, ks[1])
+    elif kind in ("attn", "local_attn", "rglru") and cfg.d_ff > 0:
+        p["norm2"] = _norm_init(cfg)
+        p["mlp"] = mlp.init(cfg, ks[1])
+    return p
+
+
+def _pattern_layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    period = len(cfg.block_pattern)
+    n_groups = cfg.n_layers // period
+    tail = cfg.n_layers - n_groups * period
+    return period, n_groups, tail
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    period, n_groups, tail = _pattern_layout(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    Vp = padded_vocab(cfg)
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], Vp, cfg.d_model, cfg.activation_dtype),
+        "final_norm": _norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, Vp,
+                                       cfg.activation_dtype)
+    # stacked groups: blocks[f"p{i}"] has leading dim n_groups
+    blocks: dict[str, Any] = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        per_group = [_block_init(cfg, kind, keys[2 + g * period + i])
+                     for g in range(n_groups)]
+        blocks[f"p{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+    params["blocks"] = blocks
+    params["tail"] = [
+        _block_init(cfg, cfg.block_kind(n_groups * period + j),
+                    keys[2 + n_groups * period + j])
+        for j in range(tail)
+    ]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block application — train
+# ---------------------------------------------------------------------------
+
+def _block_train(p, x, kind: str, cfg: ModelConfig, positions):
+    # pin the norm output sharded in bf16: otherwise XLA hoists the qkv-dot
+    # all-gather above the f32->bf16 convert and moves 2x the bytes
+    # (§Perf iteration 4)
+    h = act_shard(_norm(cfg, p["norm1"], x), "batch", "seq_shard", None)
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local_attn", "moe"):
+        h = attention.train(p["attn"], h, cfg, positions,
+                            local=kind == "local_attn")
+    elif kind == "rglru":
+        h, _ = rglru.apply_seq(p["rglru"], h, cfg)
+    elif kind == "mlstm":
+        h, _ = xlstm.mlstm_seq(p["mlstm"], h, cfg)
+    elif kind == "slstm":
+        h, _ = xlstm.slstm_seq(p["slstm"], h, cfg)
+    x = x + h
+    if "moe" in p:
+        h2 = act_shard(_norm(cfg, p["norm2"], x), "batch", "seq_shard", None)
+        h2, aux = moe.apply(p["moe"], h2, cfg)
+        x = x + h2
+    elif "mlp" in p:
+        h2 = act_shard(_norm(cfg, p["norm2"], x), "batch", "seq_shard", None)
+        x = x + mlp.apply(p["mlp"], h2)
+    return x, aux
+
+
+def forward_train(params, tokens_or_embeds, cfg: ModelConfig, *,
+                  positions=None, remat: bool = True):
+    """-> (logits (B, S, Vp), aux_loss ()). tokens (B, S) int32, or
+    embeddings (B, S, d) when cfg.embedding_inputs."""
+    x, positions = _embed(params, tokens_or_embeds, cfg, positions)
+    period, n_groups, tail = _pattern_layout(cfg)
+
+    # remat per *block* (not per group): a group of e.g. 8 xLSTM blocks would
+    # otherwise hold all 8 blocks' chunk-scan residuals during backward
+    def block_fn(bp, x, kind):
+        return _block_train(bp, x, kind, cfg, positions)
+    if remat:
+        block_fn = jax.checkpoint(
+            block_fn, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(2,))
+
+    def group_body(carry, gparams):
+        x, aux = carry
+        for i, kind in enumerate(cfg.block_pattern):
+            x, a = block_fn(gparams[f"p{i}"], x, kind)
+            aux = aux + a
+        return (x, aux), None
+
+    if n_groups:
+        (x, aux), _ = jax.lax.scan(group_body,
+                                   (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+    for j, bp in enumerate(params["tail"]):
+        kind = cfg.block_kind(n_groups * period + j)
+        x, a = _block_train(bp, x, kind, cfg, positions)
+        aux = aux + a
+    return _head(params, x, cfg), aux
+
+
+def _embed(params, tok, cfg: ModelConfig, positions):
+    if cfg.embedding_inputs and tok.ndim == 3:
+        x = tok.astype(cfg.activation_dtype)
+        B, S = x.shape[:2]
+    else:
+        B, S = tok.shape
+        x = params["embed"][tok]                     # gather from (Vp, d)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+    x = act_shard(x, "batch", "seq_shard", None)
+    return x, positions
+
+
+def _head(params, x, cfg: ModelConfig):
+    x = _norm(cfg, params["final_norm"], x)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ w
+    return act_shard(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Serving state
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      state_quant: bool = True):
+    """Stacked caches: state["p{i}"] has leading dim n_groups; state["tail"]
+    is a list of unstacked caches."""
+    period, n_groups, tail = _pattern_layout(cfg)
+
+    def one(kind):
+        if kind in ("attn", "local_attn", "moe"):
+            eff = max_len
+            if cfg.sliding_window:   # SWA (mixtral) / local attn (griffin)
+                eff = min(max_len, _round_block(cfg.sliding_window, cfg))
+            return KV.QuantizedKVCache.init(batch, cfg.n_kv_heads, eff,
+                                            cfg.head_dim, cfg.quant,
+                                            ring=eff < max_len)
+        if kind == "rglru":
+            return rglru.init_state(cfg, batch)
+        if kind == "mlstm":
+            return xlstm.mlstm_init_state(cfg, batch, state_quant=False)
+        if kind == "slstm":
+            return xlstm.slstm_init_state(cfg, batch)
+        raise ValueError(kind)
+
+    state: dict[str, Any] = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        caches = [one(kind) for _ in range(n_groups)]
+        state[f"p{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    state["tail"] = [one(cfg.block_kind(n_groups * period + j))
+                     for j in range(tail)]
+    return state
+
+
+def _round_block(n, cfg: ModelConfig):
+    b = cfg.quant.block_size if cfg.quant.granularity == "per_block" else 8
+    return -(-n // b) * b
+
+
+# ---------------------------------------------------------------------------
+# Block application — serving (prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _block_serve(p, x, kind, cfg, positions, cache, mode: str):
+    h = _norm(cfg, p["norm1"], x)
+    if kind in ("attn", "local_attn", "moe"):
+        fn = attention.prefill if mode == "prefill" else attention.decode
+        h, cache = fn(p["attn"], h, cfg, positions, cache,
+                      local=kind == "local_attn")
+    elif kind == "rglru":
+        if mode == "prefill":
+            h, cache = rglru.apply_seq(p["rglru"], h, cfg, None)
+        else:
+            h, cache = rglru.apply_step(p["rglru"], h, cfg, cache)
+    elif kind == "mlstm":
+        if mode == "prefill":
+            h, cache = xlstm.mlstm_seq(p["mlstm"], h, cfg)
+        else:
+            h, cache = xlstm.mlstm_step(p["mlstm"], h, cfg, cache)
+    elif kind == "slstm":
+        if mode == "prefill":
+            h, cache = xlstm.slstm_seq(p["slstm"], h, cfg, None)
+        else:
+            h, cache = xlstm.slstm_step(p["slstm"], h, cfg, cache)
+    x = x + h.astype(x.dtype)
+    if "moe" in p:
+        h, _ = moe.apply(p["moe"], _norm(cfg, p["norm2"], x), cfg)
+        x = x + h
+    elif "mlp" in p:
+        x = x + mlp.apply(p["mlp"], _norm(cfg, p["norm2"], x))
+    return x, cache
+
+
+def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str):
+    x, positions = _embed(params, tok, cfg, positions)
+    period, n_groups, tail = _pattern_layout(cfg)
+
+    def group_body(x, gparams_and_caches):
+        gparams, caches = gparams_and_caches
+        new_caches = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            x, c = _block_serve(gparams[f"p{i}"], x, kind, cfg, positions,
+                                caches[f"p{i}"], mode)
+            new_caches[f"p{i}"] = c
+        return x, new_caches
+
+    new_state: dict[str, Any] = {}
+    if n_groups:
+        gp = {k: v for k, v in params["blocks"].items()}
+        caches = {k: state[k] for k in gp}
+        x, new_caches = jax.lax.scan(group_body, x, (gp, caches))
+        new_state.update(new_caches)
+    new_state["tail"] = []
+    for j, bp in enumerate(params["tail"]):
+        kind = cfg.block_kind(n_groups * period + j)
+        x, c = _block_serve(bp, x, kind, cfg, positions, state["tail"][j], mode)
+        new_state["tail"].append(c)
+    logits = _head(params, x, cfg)
+    return logits, new_state
+
+
+def prefill(params, tokens, cfg: ModelConfig, state, *, positions=None):
+    """Prompt pass: returns (logits of last position (B, Vp), new state)."""
+    logits, state = _serve(params, tokens, cfg, state, positions, "prefill")
+    return logits[:, -1], state
+
+
+def decode_step(params, token, cfg: ModelConfig, state, pos):
+    """One decode step. token (B, 1) int32 (or (B, 1, d) embeddings);
+    pos (B,) int32 current position. Returns (logits (B, Vp), state)."""
+    positions = pos[:, None].astype(jnp.int32)
+    logits, state = _serve(params, token, cfg, state, positions, "decode")
+    return logits[:, -1], state

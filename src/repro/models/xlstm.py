@@ -1,0 +1,250 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+arXiv:2405.04517. mLSTM uses the stabilized exponential-gating formulation:
+
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    C_t = f'_t C_{t-1} + i'_t k_t v_tᵀ        f' = exp(log f + m_{t-1} − m_t)
+    n_t = f'_t n_{t-1} + i'_t k_t              i' = exp(log i − m_t)
+    h_t = C_tᵀ q_t / max(|n_tᵀ q_t|, 1)
+
+Train/prefill uses the *parallel (quadratic) form* — an attention-like
+matrix D_ts = exp(L_t − L_s + log i_s − m_t), L = cumsum(log f) — which maps
+onto the MXU like attention does; decode uses the O(1) recurrent step.
+
+The paper's technique, adapted (DESIGN.md §Arch-applicability): xLSTM has no
+KV cache, but the mLSTM matrix memory C (B, H, d, d) *is* the decode-time
+state that scales with model size. `state_quant=True` stores C INT8 with
+per-channel scales between steps — same math, same kernels, new site.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import act_shard, dense_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    dt = cfg.activation_dtype
+    return {
+        "wq": dense_init(ks[0], d, d, dt),
+        "wk": dense_init(ks[1], d, d, dt),
+        "wv": dense_init(ks[2], d, d, dt),
+        "wo": dense_init(ks[3], d, d, dt),
+        "w_if": dense_init(ks[4], d, 2 * nh, jnp.float32),   # input/forget gates
+        "b_if": jnp.concatenate([jnp.zeros((nh,)), jnp.full((nh,), 3.0)]),
+    }
+
+
+@dataclasses.dataclass
+class MLSTMState:
+    C: jax.Array      # (B, H, dh, dh) matrix memory
+    n: jax.Array      # (B, H, dh)
+    m: jax.Array      # (B, H)
+    C_s: jax.Array    # (B, H, dh) per-channel INT8 scales (state_quant)
+
+
+jax.tree_util.register_dataclass(MLSTMState, data_fields=["C", "n", "m", "C_s"],
+                                 meta_fields=[])
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int,
+                     state_quant: bool = False) -> MLSTMState:
+    nh, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    dt = jnp.int8 if state_quant else jnp.float32
+    return MLSTMState(C=jnp.zeros((batch, nh, dh, dh), dt),
+                      n=jnp.zeros((batch, nh, dh), jnp.float32),
+                      m=jnp.full((batch, nh), -1e30, jnp.float32),
+                      C_s=jnp.full((batch, nh, dh), 1e-30, jnp.float32))
+
+
+def _qkv_gates(p, x, cfg):
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    q = (x @ p["wq"]).reshape(B, S, nh, dh).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(B, S, nh, dh).transpose(0, 2, 1, 3) / jnp.sqrt(
+        jnp.asarray(dh, x.dtype))
+    v = (x @ p["wv"]).reshape(B, S, nh, dh).transpose(0, 2, 1, 3)
+    gates = x.astype(jnp.float32) @ p["w_if"] + p["b_if"]       # (B, S, 2nh)
+    log_i = -jax.nn.softplus(-gates[..., :nh])                  # log sigmoid-ish
+    log_f = -jax.nn.softplus(-gates[..., nh:])                  # log f in (-inf, 0)
+    return q, k, v, log_i.transpose(0, 2, 1), log_f.transpose(0, 2, 1)
+
+
+def mlstm_seq(p, x, cfg: ModelConfig, chunk: int = 256):
+    """Chunkwise-parallel train/prefill form (xLSTM paper App. A kernels):
+    quadratic *within* a chunk, recurrent *across* chunks — O(S·chunk)
+    memory instead of O(S²). x (B,S,d) -> ((B,S,d), final MLSTMState)."""
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    q, k, v, log_i, log_f = _qkv_gates(p, x, cfg)               # (B,H,S,*)
+    f32 = jnp.float32
+    qc = q.astype(f32).reshape(B, nh, nc, chunk, dh)
+    kc = k.astype(f32).reshape(B, nh, nc, chunk, dh)
+    vc = v.astype(f32).reshape(B, nh, nc, chunk, dh)
+    lic = log_i.reshape(B, nh, nc, chunk)
+    lfc = log_f.reshape(B, nh, nc, chunk)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, inp):
+        Cp, np_, mp = carry                                    # stabilized state
+        qt, kt, vt, li, lf = inp                               # (B,H,c,*)
+        L = jnp.cumsum(lf, axis=-1)                            # (B,H,c)
+        # intra-chunk exponents e_int[t,s] = L_t - L_s + li_s  (s <= t)
+        e_int = L[..., :, None] - L[..., None, :] + li[..., None, :]
+        e_int = jnp.where(tri, e_int, -jnp.inf)
+        # carried-state exponent e_st[t] = L_t + m_prev
+        e_st = L + mp[..., None]
+        m_t = jnp.maximum(jnp.max(e_int, axis=-1), e_st)       # (B,H,c)
+        D = jnp.exp(e_int - m_t[..., None])                    # (B,H,c,c)
+        w_st = jnp.exp(e_st - m_t)                             # (B,H,c)
+        # (bf16 dot variant measured WORSE on the HLO byte model — the
+        # converts outweigh the dot savings at H=4; §Perf iteration 8b)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qt, kt)
+        num = (jnp.einsum("bhts,bhse->bhte", D * scores, vt) +
+               w_st[..., None] * jnp.einsum("bhde,bhtd->bhte", Cp, qt))
+        nq = (jnp.einsum("bhts,bhsd,bhtd->bht", D, kt, qt) +
+              w_st * jnp.einsum("bhd,bhtd->bht", np_, qt))
+        den = jnp.maximum(jnp.maximum(jnp.abs(nq), jnp.exp(-m_t)), 1e-12)
+        h = num / den[..., None]                               # (B,H,c,dh)
+        # chunk-end state update (stabilized by new running max m_n)
+        Lc = L[..., -1:]                                       # (B,H,1)
+        e_upd = Lc - L + li                                    # (B,H,c)
+        m_n = jnp.maximum(Lc[..., 0] + mp, jnp.max(e_upd, axis=-1))
+        wu = jnp.exp(e_upd - m_n[..., None])
+        Cn = (jnp.exp(Lc[..., 0] + mp - m_n)[..., None, None] * Cp +
+              jnp.einsum("bhs,bhsd,bhse->bhde", wu, kt, vt))
+        nn = (jnp.exp(Lc[..., 0] + mp - m_n)[..., None] * np_ +
+              jnp.einsum("bhs,bhsd->bhd", wu, kt))
+        return (Cn, nn, m_n), h
+
+    C0 = jnp.zeros((B, nh, dh, dh), f32)
+    n0 = jnp.zeros((B, nh, dh), f32)
+    m0 = jnp.full((B, nh), -1e30, f32)
+    inputs = tuple(a.transpose(2, 0, 1, 3, 4) if a.ndim == 5 else
+                   a.transpose(2, 0, 1, 3) for a in (qc, kc, vc, lic, lfc))
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), inputs)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, nh, S, dh)
+    out = h.transpose(0, 2, 1, 3).reshape(B, S, d).astype(x.dtype) @ p["wo"]
+    state = MLSTMState(C=C, n=n, m=m,
+                       C_s=jnp.full(n.shape, 1e-30, jnp.float32))
+    return act_shard(out, "batch", "seq_shard", None), state
+
+
+def mlstm_step(p, x, cfg: ModelConfig, state: MLSTMState,
+               state_quant: bool = False):
+    """Decode step. x (B,1,d) -> ((B,1,d), new state)."""
+    B, _, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    q, k, v, log_i, log_f = _qkv_gates(p, x, cfg)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]                # (B,H,dh)
+    log_i, log_f = log_i[..., 0], log_f[..., 0]                 # (B,H)
+
+    C_prev = state.C.astype(jnp.float32)
+    if state_quant:
+        # dequantize the INT8 matrix memory (per-channel scale over rows)
+        C_prev = C_prev * state.C_s[..., None]
+
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    f_eff = jnp.exp(log_f + state.m - m_new)[..., None]
+    i_eff = jnp.exp(log_i - m_new)[..., None]
+    C = f_eff[..., None] * C_prev + (i_eff * k)[..., None] * v[..., None, :]
+    n = f_eff * state.n + i_eff * k
+    hnum = jnp.einsum("bhde,bhd->bhe", C, q.astype(jnp.float32))
+    hden = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n,
+                                          q.astype(jnp.float32)))[..., None],
+                       jnp.exp(-m_new)[..., None])
+    h = (hnum / hden).reshape(B, 1, d).astype(x.dtype)
+    out = h @ p["wo"]
+
+    if state_quant:
+        # paper's per-channel INT8 on the matrix memory: channel = last dim
+        s = jnp.maximum(jnp.max(jnp.abs(C), axis=-1), 1e-30) / 127.0
+        C_q = jnp.round(C / s[..., None]).clip(-127, 127).astype(jnp.int8)
+        return out, MLSTMState(C=C_q, n=n, m=m_new, C_s=s)
+    return out, MLSTMState(C=C, n=n, m=m_new, C_s=state.C_s)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar memory, true recurrence (sequential scan)
+# ---------------------------------------------------------------------------
+
+def slstm_init(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    dt = cfg.activation_dtype
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, dt),     # i, f, z, o
+        "r_gates": dense_init(ks[1], d, 4 * d, dt),     # recurrent weights
+        "wo": dense_init(ks[2], d, d, dt),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+    }
+
+
+@dataclasses.dataclass
+class SLSTMState:
+    c: jax.Array   # (B, d)
+    n: jax.Array   # (B, d)
+    h: jax.Array   # (B, d)
+    m: jax.Array   # (B, d)
+
+
+jax.tree_util.register_dataclass(SLSTMState, data_fields=["c", "n", "h", "m"],
+                                 meta_fields=[])
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, d), -1e30))
+
+
+def _slstm_cell(p, xt, st: SLSTMState):
+    d = xt.shape[-1]
+    g = (xt @ p["w_gates"]).astype(jnp.float32) + \
+        (st.h.astype(xt.dtype) @ p["r_gates"]).astype(jnp.float32) + p["b"]
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    log_i = gi                                   # exponential input gate
+    log_f = -jax.nn.softplus(-gf)                # log sigmoid(f)
+    m_new = jnp.maximum(log_f + st.m, log_i)
+    i_eff = jnp.exp(log_i - m_new)
+    f_eff = jnp.exp(log_f + st.m - m_new)
+    c = f_eff * st.c + i_eff * jnp.tanh(gz)
+    n = f_eff * st.n + i_eff
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-12)
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_seq(p, x, cfg: ModelConfig, state: SLSTMState | None = None):
+    B, S, d = x.shape
+    st = state or slstm_init_state(cfg, B)
+
+    def body(st, xt):
+        st = _slstm_cell(p, xt, st)
+        return st, st.h
+
+    st, hs = jax.lax.scan(body, st, x.transpose(1, 0, 2))
+    out = hs.transpose(1, 0, 2).astype(x.dtype) @ p["wo"]
+    return act_shard(out, "batch", "seq", None), st
+
+
+def slstm_step(p, x, cfg: ModelConfig, state: SLSTMState):
+    st = _slstm_cell(p, x[:, 0], state)
+    return (st.h[:, None].astype(x.dtype) @ p["wo"]), st

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWConfig, apply_updates, cosine_schedule,
+                               global_norm, init_state)
+from repro.optim import compression
+
+__all__ = ["AdamWConfig", "apply_updates", "compression", "cosine_schedule",
+           "global_norm", "init_state"]

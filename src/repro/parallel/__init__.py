@@ -1,0 +1,6 @@
+"""Distribution: logical-axis sharding rules and helpers."""
+from repro.parallel.shard import (LOGICAL_RULES, act_shard, current_mesh,
+                                  logical_spec, mesh_context, named_sharding)
+
+__all__ = ["LOGICAL_RULES", "act_shard", "current_mesh", "logical_spec",
+           "mesh_context", "named_sharding"]

@@ -1,0 +1,5 @@
+from repro.runtime.fault import (HeartbeatMonitor, RestartPolicy,
+                                 StragglerReport, run_with_restarts)
+
+__all__ = ["HeartbeatMonitor", "RestartPolicy", "StragglerReport",
+           "run_with_restarts"]

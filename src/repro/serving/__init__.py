@@ -1,0 +1,6 @@
+from repro.serving.engine import (greedy_generate, kv_cache_memory_report,
+                                  make_serve_fns)
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+__all__ = ["ContinuousBatcher", "Request", "greedy_generate",
+           "kv_cache_memory_report", "make_serve_fns"]

@@ -1,0 +1,91 @@
+"""Serving engine: batched prefill + decode over the quantized KV cache.
+
+The serve_step the dry-run lowers is `decode_step`: one new token per
+request against an INT8 cache of `seq_len` (the assignment's decode_* /
+long_* shapes). Batching is static (continuous batching would slot new
+requests into finished rows; the step function is row-independent so that
+is a host-side scheduling concern — serving/scheduler.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+
+def make_serve_fns(cfg: ModelConfig, *, max_len: int):
+    """Returns (init_state, prefill, decode_step) closed over cfg."""
+
+    if cfg.family == "encdec":
+        def init_state(batch):
+            return encdec.init_decode_state(cfg, batch, max_len)
+
+        def prefill_fn(params, batch_inputs, state):
+            return encdec.prefill(params, batch_inputs["frames"],
+                                  batch_inputs["tokens"], cfg, state)
+
+        def decode_fn(params, token, state, pos):
+            return encdec.decode_step(params, token, cfg, state, pos)
+    else:
+        def init_state(batch):
+            return transformer.init_decode_state(cfg, batch, max_len)
+
+        def prefill_fn(params, batch_inputs, state):
+            return transformer.prefill(params, batch_inputs["tokens"], cfg,
+                                       state)
+
+        def decode_fn(params, token, state, pos):
+            return transformer.decode_step(params, token, cfg, state, pos)
+
+    return init_state, prefill_fn, decode_fn
+
+
+def greedy_generate(params, cfg: ModelConfig, prompts: jax.Array, *,
+                    steps: int, max_len: int | None = None):
+    """Reference end-to-end generation (examples/serve.py): greedy decode
+    `steps` tokens after a batched prefill. Returns (B, steps) int32."""
+    B, S = prompts.shape
+    bs = (cfg.quant.block_size
+          if cfg.quant.granularity == "per_block" else 8)
+    max_len = max_len or (-(-(S + steps) // bs) * bs)
+    init_state, prefill_fn, decode_fn = make_serve_fns(cfg, max_len=max_len)
+    state = init_state(B)
+    # prefill wants a block-multiple prompt; feed the remainder via decode
+    S0 = max(bs, (S // bs) * bs) if S >= bs else 0
+    decode_jit = jax.jit(decode_fn)
+    if S0:
+        logits, state = jax.jit(prefill_fn)(
+            params, {"tokens": prompts[:, :S0]}, state)
+    else:
+        logits = None
+    for j in range(S0, S):
+        logits, state = decode_jit(params, prompts[:, j][:, None], state,
+                                   jnp.full((B,), j, jnp.int32))
+    toks = []
+    tok = jnp.argmax(logits[..., :cfg.vocab], -1)[:, None]
+    for i in range(steps):
+        toks.append(tok[:, 0])
+        pos = jnp.full((B,), S + i, jnp.int32)
+        logits, state = decode_jit(params, tok, state, pos)
+        tok = jnp.argmax(logits[..., :cfg.vocab], -1)[:, None]
+    return jnp.stack(toks, axis=1)
+
+
+def _round8(n):
+    return -(-n // 8) * 8
+
+
+def kv_cache_memory_report(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Paper Table 1 for this arch: cache bytes at fp32 / bf16 / int8."""
+    return {
+        "fp32_bytes": cfg.kv_cache_bytes(batch, seq, 4),
+        "bf16_bytes": cfg.kv_cache_bytes(batch, seq, 2),
+        "int8_bytes": cfg.kv_cache_bytes(batch, seq, 1),
+        "compression_vs_fp32": 4.0,
+        "compression_vs_bf16": 2.0,
+    }

@@ -1,0 +1,111 @@
+"""Host-side continuous-batching scheduler (CPU logic, no jax tracing).
+
+Maintains a fixed pool of `batch` decode rows; finished/empty rows are
+refilled from a request queue between device steps. The device-side decode
+step is row-independent (engine.make_serve_fns), so slotting only requires
+overwriting one row of the token/pos arrays and resetting that row's cache
+slice — done with jax.lax-free host numpy updates followed by
+device_put (cheap relative to a decode step at production batch sizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Greedy continuous batching over a fixed row pool."""
+
+    def __init__(self, params, cfg, *, batch: int, max_len: int,
+                 eos_id: int | None = None):
+        from repro.serving.engine import make_serve_fns
+        self.params, self.cfg = params, cfg
+        self.batch, self.max_len = batch, max_len
+        self.eos_id = eos_id
+        init_state, prefill, decode = make_serve_fns(cfg, max_len=max_len)
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+        self._init_state = init_state
+        self.queue: deque[Request] = deque()
+        self.rows: list[Request | None] = [None] * batch
+        self.pos = np.zeros((batch,), np.int32)
+        self.tok = np.zeros((batch, 1), np.int32)
+        self.state = None
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        """Fill empty rows with queued requests (one prefill per admission
+        group; rows prefill together on first use)."""
+        new = []
+        for i in range(self.batch):
+            if self.rows[i] is None and self.queue:
+                self.rows[i] = self.queue.popleft()
+                new.append(i)
+        return new
+
+    def step(self) -> list[Request]:
+        """One scheduler tick: admit, prefill new rows, decode one token for
+        all active rows. Returns requests completed this tick."""
+        newly = self._admit()
+        if self.state is None:
+            if not newly:
+                return []
+            self.state = self._init_state(self.batch)
+            # batch the initial prefill over admitted rows (padded prompts)
+            bs = (self.cfg.quant.block_size
+                  if self.cfg.quant.granularity == "per_block" else 8)
+            S = max(len(self.rows[i].prompt) for i in newly)
+            S = -(-S // bs) * bs
+            toks = np.zeros((self.batch, S), np.int32)
+            for i in newly:
+                p = self.rows[i].prompt
+                toks[i, S - len(p):] = p          # left-pad
+            logits, self.state = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, self.state)
+            nxt = np.asarray(jnp.argmax(logits[..., :self.cfg.vocab], -1))
+            for i in newly:
+                self.tok[i, 0] = nxt[i]
+                self.pos[i] = S
+        done = []
+        active = [i for i, r in enumerate(self.rows) if r is not None]
+        if not active:
+            return []
+        logits, self.state = self._decode(
+            self.params, jnp.asarray(self.tok), self.state,
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits[..., :self.cfg.vocab], -1))
+        for i in active:
+            r = self.rows[i]
+            r.generated.append(int(self.tok[i, 0]))
+            self.tok[i, 0] = nxt[i]
+            self.pos[i] += 1
+            if (len(r.generated) >= r.max_new_tokens or
+                    (self.eos_id is not None and nxt[i] == self.eos_id)):
+                r.done = True
+                done.append(r)
+                self.rows[i] = None
+        return done
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
+        out = []
+        for _ in range(max_ticks):
+            out.extend(self.step())
+            if not self.queue and all(r is None for r in self.rows):
+                break
+        return out

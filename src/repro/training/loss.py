@@ -1,0 +1,22 @@
+"""Next-token cross-entropy over (possibly vocab-sharded) logits."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_loss(logits: jax.Array, labels: jax.Array,
+                    vocab: int) -> jax.Array:
+    """logits (B, S, Vp) f32/bf16; labels (B, S) int32. Positions with
+    label < 0 are masked. Pad-vocab entries (>= vocab) are excluded."""
+    Vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if Vp > vocab:
+        pad_mask = jnp.arange(Vp) >= vocab
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,83 @@
+"""Training step builders — the functions the launcher jits/lowers.
+
+`make_train_step(cfg, opt_cfg, ...)` returns a pure function
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+with optional microbatch gradient accumulation (lax.scan over microbatches)
+and optional INT8 gradient compression with error feedback (the paper's
+technique on the DP wire — optim/compression.py).
+
+batch = {"tokens": (B, S) int32, "labels": (B, S) int32}
+(encdec adds "frames": (B, T_enc, d)).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+from repro.optim import AdamWConfig, apply_updates
+from repro.optim import compression as C
+from repro.training.loss import next_token_loss
+
+AUX_WEIGHT = 0.01   # load-balancing loss weight (Switch default scale)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        logits, aux = encdec.forward_train(params, batch["frames"],
+                                           batch["tokens"], cfg)
+    else:
+        inp = batch.get("embeds", batch["tokens"])
+        logits, aux = transformer.forward_train(params, inp, cfg)
+    loss = next_token_loss(logits, batch["labels"], cfg.vocab)
+    return loss + AUX_WEIGHT * aux, {"loss": loss, "aux_loss": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1, grad_compression: bool = False):
+    grad_fn = jax.value_and_grad(functools.partial(loss_fn, cfg=cfg),
+                                 has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                acc = carry
+                (_, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, m
+            mbs = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            grads, ms = jax.lax.scan(micro, zero, mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+
+        if grad_compression:
+            # paper's INT8 scheme on the DP wire, with error feedback
+            grads, err = C.compress_with_feedback(
+                grads, opt_state["grad_err"])
+        params, inner, om = apply_updates(params, grads,
+                                          opt_state["adam"], opt_cfg)
+        new_opt = {"adam": inner}
+        if grad_compression:
+            new_opt["grad_err"] = err
+        metrics.update(om)
+        return params, new_opt, metrics
+
+    return train_step
+
+
+def init_opt_state(params, *, grad_compression: bool = False):
+    from repro.optim import init_state
+    st: dict[str, Any] = {"adam": init_state(params)}
+    if grad_compression:
+        st["grad_err"] = C.init_error_state(params)
+    return st

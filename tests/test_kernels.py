@@ -1,0 +1,167 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode.
+
+Every kernel in src/repro/kernels is asserted allclose against ref.py
+across a sweep of shapes and dtypes (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantization as Q
+from repro.kernels import ops, ref
+from repro.kernels import quant_attention as QA
+from repro.kernels import quantize as QK
+
+jax.config.update("jax_platform_name", "cpu")
+
+SHAPES = [(8, 128), (256, 128), (512, 256), (96, 72), (1024, 512), (16, 8)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_quantize_per_channel_matches_ref(shape, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 2).astype(dtype)
+    q, s = QK.quantize_per_channel(x, interpret=True)
+    qr, sr = ref.quantize_fused_ref(x)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
+    # rounding at .5 boundaries may differ by 1 ulp between paths
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32) - qr.astype(jnp.int32)))) <= 1
+
+
+@pytest.mark.parametrize("shape,block", [((256, 128), 64), ((512, 256), 128),
+                                         ((128, 512), 8), ((1024, 128), 256)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_quantize_blocked_matches_ref(shape, block, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(1), shape) * 3).astype(dtype)
+    q, s = QK.quantize_blocked(x, block, interpret=True)
+    qr, sr = ref.quantize_blocked_ref(x, block)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32) - qr.astype(jnp.int32)))) <= 1
+
+
+@pytest.mark.parametrize("shape,nb", [((256, 128), 1), ((256, 128), 4),
+                                      ((512, 512), 8)])
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_dequantize_matches_ref(shape, nb, out_dtype):
+    T, D = shape
+    x = jax.random.normal(jax.random.PRNGKey(2), shape)
+    if nb == 1:
+        q, s = ref.quantize_fused_ref(x)
+        s2 = s[None]
+    else:
+        q, s2 = ref.quantize_blocked_ref(x, T // nb)
+    d = QK.dequantize(q, s2, out_dtype=out_dtype, interpret=True)
+    dr = ref.dequantize_ref(q, s2, dtype=out_dtype)
+    np.testing.assert_allclose(np.asarray(d, np.float32),
+                               np.asarray(dr, np.float32), rtol=1e-2)
+
+
+DECODE_CASES = [
+    # (B, Hkv, G, T, D, block)
+    (1, 1, 1, 128, 64, 64),
+    (2, 4, 3, 512, 128, 128),
+    (2, 2, 8, 256, 128, 256),     # per-channel-like single block
+    (1, 8, 1, 1024, 256, 256),
+]
+
+
+@pytest.mark.parametrize("B,Hkv,G,T,D,block", DECODE_CASES)
+def test_fused_decode_matches_ref(B, Hkv, G, T, D, block):
+    keys = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = jax.random.normal(keys[0], (B, Hkv * G, D))
+    k = jax.random.normal(keys[1], (B, Hkv, T, D))
+    v = jax.random.normal(keys[2], (B, Hkv, T, D))
+    kq, ks = Q.quantize_blocked(k, block)
+    vq, vs = Q.quantize_blocked(v, block)
+    length = jnp.asarray(np.random.RandomState(0).randint(1, T + 1, (B,)),
+                         jnp.int32)
+    out = QA.quant_attention_decode(q, kq, ks, vq, vs, length,
+                                    interpret=True)
+
+    def ref_one(qb, kqb, ksb, vqb, vsb, lb):
+        return jax.vmap(lambda qg, kk, kss, vv, vss:
+                        ref.quant_attention_decode_ref(qg, kk, kss, vv, vss,
+                                                       lb))(
+            qb.reshape(Hkv, G, D), kqb, ksb, vqb, vsb)
+    expect = jax.vmap(ref_one)(q, kq, ks, vq, vs, length).reshape(
+        B, Hkv * G, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_fused_decode_per_channel_scales():
+    B, Hkv, G, T, D = 2, 2, 2, 256, 64
+    keys = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(keys[0], (B, Hkv * G, D))
+    k = jax.random.normal(keys[1], (B, Hkv, T, D))
+    v = jax.random.normal(keys[2], (B, Hkv, T, D))
+    kq, ks = Q.quantize_matrix(k)
+    vq, vs = Q.quantize_matrix(v)
+    out = QA.quant_attention_decode(q, kq, ks[:, :, None], vq, vs[:, :, None],
+                                    jnp.asarray(200), interpret=True)
+    expect = ops.quant_attention_decode(q, kq, ks[:, :, None], vq,
+                                        vs[:, :, None], jnp.asarray(200),
+                                        impl="xla")
+    # xla path runs bf16 dequant+dots (production numerics); kernel is f32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_partials_merge_equals_full():
+    """Merging kernel partials over two halves == attention over the whole."""
+    B, Hkv, G, T, D = 1, 2, 2, 256, 64
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(keys[0], (B, Hkv * G, D))
+    k = jax.random.normal(keys[1], (B, Hkv, T, D))
+    v = jax.random.normal(keys[2], (B, Hkv, T, D))
+    kq, ks = Q.quantize_blocked(k, 128)
+    vq, vs = Q.quantize_blocked(v, 128)
+    full = ops.quant_attention_decode(q, kq, ks, vq, vs, jnp.asarray(T),
+                                      impl="pallas_interpret")
+    o1, m1, l1 = ops.quant_attention_decode_partials(
+        q, kq[:, :, :128], ks[:, :, :1], vq[:, :, :128], vs[:, :, :1],
+        jnp.asarray(128), impl="pallas_interpret")
+    o2, m2, l2 = ops.quant_attention_decode_partials(
+        q, kq[:, :, 128:], ks[:, :, 1:], vq[:, :, 128:], vs[:, :, 1:],
+        jnp.asarray(128), impl="pallas_interpret")
+    m = jnp.maximum(m1, m2)
+    c1, c2 = jnp.exp(m1 - m), jnp.exp(m2 - m)
+    merged = (o1 * c1 + o2 * c2) / (l1 * c1 + l2 * c2)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(full),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_ops_dispatch_consistency(impl):
+    x = jax.random.normal(jax.random.PRNGKey(6), (256, 128))
+    q, s = ops.quantize_per_channel(x, impl=impl)
+    qr, sr = ref.quantize_fused_ref(x)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
+
+
+FLASH_CASES = [
+    # (B, Hkv, G, S, T, D, bq, bk, causal, window)
+    (1, 1, 1, 16, 16, 8, 8, 8, True, None),
+    (2, 2, 3, 32, 32, 16, 8, 8, True, None),
+    (2, 2, 2, 32, 48, 16, 16, 16, False, None),
+    (1, 2, 2, 64, 64, 32, 16, 16, True, 12),
+    (1, 1, 4, 32, 32, 128, 32, 32, True, None),
+]
+
+
+@pytest.mark.parametrize("B,Hkv,G,S,T,D,bq,bk,causal,window", FLASH_CASES)
+def test_flash_prefill_kernel_matches_jnp(B, Hkv, G, S, T, D, bq, bk,
+                                          causal, window):
+    """Pallas flash forward (interpret) vs the jnp flash oracle."""
+    from repro.kernels.flash_fwd import flash_prefill
+    from repro.models.flash import flash_attention
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    q = jax.random.normal(ks[0], (B, Hkv * G, S, D))
+    k = jax.random.normal(ks[1], (B, Hkv, T, D))
+    v = jax.random.normal(ks[2], (B, Hkv, T, D))
+    o1 = flash_prefill(q, k, v, causal=causal, window=window,
+                       block_q=bq, block_k=bk, interpret=True)
+    o2 = flash_attention(q, k, v, causal, window, 0, bk)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=3e-5, atol=3e-5)

@@ -1,0 +1,182 @@
+"""Core quantization: paper claims + invariants (unit + property tests).
+
+Mirrors the paper's 25-test validation suite (§7.5): identity checks,
+analytic bounds, deterministic hand-constructed inputs, degenerate edge
+cases, and GPU(-kernel)-vs-reference agreement (tests/test_kernels.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as Q
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestScales:
+    def test_scale_formula(self):
+        # paper Eq. 5: s_d = max_t |K[t,d]| / 127
+        x = jnp.array([[1.0, -2.0], [0.5, 1.5], [-3.0, 0.1]])
+        s = Q.compute_scales(x)
+        np.testing.assert_allclose(s, [3.0 / 127, 2.0 / 127], rtol=1e-6)
+
+    def test_zero_channel_safe(self):
+        x = jnp.zeros((8, 4))
+        q, s = Q.quantize_matrix(x)
+        assert jnp.all(jnp.isfinite(s))
+        xh = Q.dequantize(q, s)
+        np.testing.assert_array_equal(xh, 0.0)
+
+    def test_1x1(self):
+        # paper edge case: 1×1 matrix
+        x = jnp.array([[0.5]])
+        q, s = Q.quantize_matrix(x)
+        np.testing.assert_allclose(Q.dequantize(q, s), x, atol=1e-6)
+
+
+class TestRoundTrip:
+    def test_paper_max_error_bound(self):
+        # paper §7.2: U(-1,1) inputs -> max err == 1/(2*127) ≈ 0.00394
+        x = jax.random.uniform(jax.random.PRNGKey(0), (4096, 256),
+                               minval=-1, maxval=1)
+        # force at least one exact ±1 per channel so s = 1/127 exactly
+        x = x.at[0].set(1.0)
+        q, s = Q.quantize_matrix(x)
+        err = Q.max_abs_error(x, Q.dequantize(q, s))
+        assert err <= 1.0 / (2 * 127) + 1e-6
+        assert err >= 0.5 / (2 * 127)   # and the bound is near-tight
+
+    def test_error_bounded_by_half_scale(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (512, 64)) * 3
+        q, s = Q.quantize_matrix(x)
+        err = jnp.abs(x - Q.dequantize(q, s))
+        assert jnp.all(err <= s[None] / 2 + 1e-7)
+
+    def test_int8_range(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (128, 32)) * 100
+        q, _ = Q.quantize_matrix(x)
+        assert q.dtype == jnp.int8
+        assert int(jnp.min(q)) >= -127 and int(jnp.max(q)) <= 127
+
+    def test_structured_inputs(self):
+        # paper edge cases: all zeros / all ones / alternating signs
+        for x in [jnp.zeros((16, 8)), jnp.ones((16, 8)),
+                  jnp.tile(jnp.array([1.0, -1.0]), (16, 4))]:
+            q, s = Q.quantize_matrix(x)
+            np.testing.assert_allclose(Q.dequantize(q, s), x, atol=1e-6)
+
+    def test_identity_error_metrics(self):
+        # paper: L2 / max-abs / attention error of a matrix vs itself == 0
+        x = jax.random.normal(jax.random.PRNGKey(3), (64, 32))
+        assert float(Q.l2_error(x, x)) == 0.0
+        assert float(Q.max_abs_error(x, x)) == 0.0
+        q = jax.random.normal(jax.random.PRNGKey(4), (8, 32))
+        assert float(Q.attention_score_error(q, x, x)) == 0.0
+
+
+class TestBlocked:
+    def test_blocked_finer_or_equal(self):
+        # per-block scales are never coarser than whole-matrix per-channel
+        x = jax.random.normal(jax.random.PRNGKey(5), (1024, 64))
+        qc, sc = Q.quantize_matrix(x)
+        qb, sb = Q.quantize_blocked(x, 128)
+        ec = Q.l2_error(x, Q.dequantize(qc, sc))
+        eb = Q.l2_error(x, Q.dequantize_blocked(qb, sb))
+        assert float(eb) <= float(ec) + 1e-5
+
+    def test_blocked_roundtrip_shape(self):
+        x = jax.random.normal(jax.random.PRNGKey(6), (2, 3, 512, 32))
+        qb, sb = Q.quantize_blocked(x, 64)
+        assert qb.shape == x.shape and sb.shape == (2, 3, 8, 32)
+        xh = Q.dequantize_blocked(qb, sb)
+        assert jnp.max(jnp.abs(x - xh)) < 0.05
+
+    def test_bad_block_size(self):
+        with pytest.raises(ValueError):
+            Q.quantize_blocked(jnp.zeros((100, 8)), 64)
+
+
+class TestProperty:
+    @settings(max_examples=50, deadline=None)
+    @given(t=st.integers(1, 64), d=st.integers(1, 32),
+           seed=st.integers(0, 2**31 - 1),
+           scale=st.floats(1e-3, 1e3))
+    def test_roundtrip_error_bound(self, t, d, seed, scale):
+        """INVARIANT (paper Eq. 9): |x - dq(q(x))| <= s/2 elementwise,
+        for any shape, seed and magnitude."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (t, d)) * scale
+        q, s = Q.quantize_matrix(x)
+        err = np.asarray(jnp.abs(x - Q.dequantize(q, s)))
+        bound = np.asarray(s)[None] / 2 + 1e-6 * scale
+        assert (err <= bound).all()
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_quantize_idempotent(self, seed):
+        """INVARIANT: quantizing an already-roundtripped matrix is exact
+        (fixed point of the quantizer)."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (32, 16))
+        q1, s1 = Q.quantize_matrix(x)
+        xh = Q.dequantize(q1, s1)
+        q2, s2 = Q.quantize_matrix(xh)
+        np.testing.assert_allclose(np.asarray(Q.dequantize(q2, s2)),
+                                   np.asarray(xh), atol=1e-6)
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 64))
+    def test_attention_error_scales_sqrt_d(self, seed, d):
+        """Paper §7.3: attention score error stays small (< 0.1 for d<=8k)."""
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        x = jax.random.uniform(k1, (256, d), minval=-1, maxval=1)
+        qv = jax.random.uniform(k2, (16, d), minval=-1, maxval=1)
+        q, s = Q.quantize_matrix(x)
+        err = float(Q.attention_score_error(qv, x, Q.dequantize(q, s)))
+        assert err < 0.1
+
+    def test_fake_quant_gradient_is_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(7), (16, 8))
+        g = jax.grad(lambda x: jnp.sum(Q.fake_quant(x) ** 2) / 2)(x)
+        # STE: dL/dx = fake_quant(x) (identity through the rounding)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(Q.fake_quant(x)),
+                                   rtol=1e-6)
+
+
+class TestBeyondPaperFormats:
+    """FP8 / packed INT4 cache formats (paper §8.2 future work)."""
+
+    def test_fp8_roundtrip_bound(self):
+        x = jax.random.uniform(jax.random.PRNGKey(11), (1024, 64),
+                               minval=-1, maxval=1)
+        q, s = Q.quantize_fp8(x)
+        assert q.dtype == jnp.float8_e4m3fn
+        err = Q.max_abs_error(x, Q.dequantize_fp8(q, s))
+        # e4m3 relative step near max is 2^-3; per-channel scale keeps
+        # absolute error under s*448/16
+        assert float(err) < 1.0 / 16 + 1e-3
+
+    def test_int4_pack_unpack_exact(self):
+        # values already on the int4 grid roundtrip exactly
+        grid = jnp.arange(-7, 8, dtype=jnp.float32)
+        x = jnp.tile(grid, (10, 4)).reshape(10, -1)[:, :32]
+        q, s = Q.quantize_int4(x)
+        xh = Q.dequantize_int4(q, s)
+        np.testing.assert_allclose(np.asarray(xh), np.asarray(x), atol=1e-5)
+
+    def test_int4_8x_compression(self):
+        x = jax.random.normal(jax.random.PRNGKey(12), (4096, 128))
+        q, s = Q.quantize_int4(x)
+        assert q.size == x.size // 2 and q.dtype == jnp.int8
+        err = Q.max_abs_error(x, Q.dequantize_int4(q, s))
+        # bound: s/2 with 15 levels
+        assert float(err) <= float(jnp.max(s)) / 2 + 1e-6
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_int4_roundtrip_bounded(self, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (64, 16))
+        q, s = Q.quantize_int4(x)
+        err = np.asarray(jnp.abs(x - Q.dequantize_int4(q, s)))
+        assert (err <= np.asarray(s)[None] / 2 + 1e-6).all()

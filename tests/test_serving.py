@@ -1,0 +1,66 @@
+"""Serving: greedy generation, continuous batching scheduler, memory report."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import (ContinuousBatcher, Request, greedy_generate,
+                           kv_cache_memory_report)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_greedy_generate_deterministic():
+    cfg = get_config("internlm2_1_8b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    out1 = greedy_generate(params, cfg, prompts, steps=6)
+    out2 = greedy_generate(params, cfg, prompts, steps=6)
+    assert out1.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert int(jnp.max(out1)) < cfg.vocab
+
+
+def test_continuous_batcher_completes_queue():
+    cfg = get_config("internlm2_1_8b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    b = ContinuousBatcher(params, cfg, batch=2, max_len=64)
+    rng = np.random.RandomState(0)
+    reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab, (6,)).astype(np.int32),
+                    max_new_tokens=4) for i in range(5)]
+    for r in reqs:
+        b.submit(r)
+    done = b.run_to_completion(max_ticks=200)
+    assert len(done) == 5
+    assert all(len(r.generated) == 4 for r in done)
+    assert all(0 <= t < cfg.vocab for r in done for t in r.generated)
+
+
+def test_memory_report_paper_table1():
+    """Paper Table 1: 32L/32H/128d/131072T fp32 ≈ 137 GB."""
+    import dataclasses as dc
+    from repro.configs.base import ModelConfig
+    cfg = ModelConfig(name="paper_table1", family="dense", n_layers=32,
+                      d_model=4096, n_heads=32, n_kv_heads=32, d_ff=1,
+                      vocab=32000, head_dim=128)
+    rep = kv_cache_memory_report(cfg, batch=1, seq=131072)
+    assert abs(rep["fp32_bytes"] / 1e9 - 137.4) < 1.0    # paper: ≈137 GB
+    assert rep["fp32_bytes"] == 4 * rep["int8_bytes"]    # 4x claim
+    assert rep["bf16_bytes"] == 2 * rep["int8_bytes"]
+
+
+def test_decode_cache_stays_int8():
+    """After many decode steps the cache storage remains int8 (no silent
+    promotion)."""
+    cfg = get_config("llama3_2_3b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(4))
+    state = T.init_decode_state(cfg, 1, 32)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, 8), 0, cfg.vocab)
+    _, state = T.prefill(params, toks, cfg, state)
+    for i in range(4):
+        _, state = T.decode_step(params, toks[:, :1], cfg, state,
+                                 jnp.full((1,), 8 + i, jnp.int32))
+    assert state["p0"].k_q.dtype == jnp.int8
+    assert state["p0"].k_s.dtype == jnp.float32
