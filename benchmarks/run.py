@@ -4,7 +4,7 @@ import sys
 
 from benchmarks import (attention_error, bitwidth_ablation, e2e_decode,
                         error_bench, kernel_bench, kernel_variants,
-                        memory_table, perplexity_delta)
+                        memory_table, paged_vs_contiguous, perplexity_delta)
 
 SUITES = [
     ("table1_memory", memory_table),
@@ -15,6 +15,7 @@ SUITES = [
     ("beyond_paper_e2e_decode", e2e_decode),
     ("beyond_paper_bitwidth_ablation", bitwidth_ablation),
     ("beyond_paper_perplexity_delta", perplexity_delta),
+    ("beyond_paper_paged_vs_contiguous", paged_vs_contiguous),
 ]
 
 

@@ -39,6 +39,18 @@ def main():
     print(f"[serve_batched] {len(done)}/{n_req} requests served "
           f"(continuous batching, 4 rows)")
 
+    # --- same queue through the paged backend (page-budget admission) -------
+    paged = ContinuousBatcher(params, cfg, batch=4, max_len=64, paged=True,
+                              n_pages=4 * 2 + 1)   # ~2 pages per row
+    for i in range(n_req):
+        paged.submit(Request(uid=i,
+                             prompt=rng.randint(0, cfg.vocab, (8,)).astype(np.int32),
+                             max_new_tokens=6))
+    done_p = paged.run_to_completion()
+    print(f"[serve_batched] {len(done_p)}/{n_req} requests served paged "
+          f"(pool {paged.n_pages - 1} pages, "
+          f"{len(paged.free_pages)} free after drain)")
+
     # --- INT8-cache vs near-lossless cache: greedy-output agreement ---------
     prompts = jnp.asarray(rng.randint(0, cfg.vocab, (4, 12)), jnp.int32)
     out_int8 = greedy_generate(params, cfg, prompts, steps=8)

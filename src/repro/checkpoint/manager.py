@@ -97,7 +97,7 @@ def valid_steps(ckpt_dir: str) -> list[int]:
             out.append(int(m["step"]))
         except Exception:
             continue            # partial/corrupt -> ignored
-    return out
+    return sorted(out)          # os.listdir order is filesystem-dependent
 
 
 def latest_step(ckpt_dir: str) -> int | None:

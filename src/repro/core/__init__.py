@@ -4,10 +4,13 @@ from repro.core.quantization import (QMAX, QuantConfig, attention_score_error,
                                      dequantize_blocked, fake_quant, l2_error,
                                      max_abs_error, quantize, quantize_blocked,
                                      quantize_matrix, theoretical_max_error)
-from repro.core.kvcache import (QuantizedKVCache, fp_cache_append,
-                                fp_cache_init, fp_cache_prefill)
+from repro.core.kvcache import (KVCacheLike, QuantizedKVCache,
+                                fp_cache_append, fp_cache_init,
+                                fp_cache_prefill)
+from repro.core.paging import PagePool, PagedQuantizedKVCache
 
 __all__ = [
+    "KVCacheLike", "PagePool", "PagedQuantizedKVCache",
     "QMAX", "QuantConfig", "QuantizedKVCache", "attention_score_error",
     "compute_scales", "dequantize", "dequantize_blocked", "fake_quant",
     "fp_cache_append", "fp_cache_init", "fp_cache_prefill", "l2_error",

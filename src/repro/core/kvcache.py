@@ -3,6 +3,14 @@
 The cache is a registered pytree so it flows through jit/pjit/scan and can be
 sharded with ordinary PartitionSpecs: (batch -> "data", kv_heads -> "model").
 
+Two implementations share the `KVCacheLike` interface below (the model and
+serving layers only touch that surface):
+  * `QuantizedKVCache` (this module) — contiguous per-row storage; simple,
+    but capacity is reserved at worst-case max_len per row.
+  * `core.paging.PagedQuantizedKVCache` — fixed-size INT8 pages owned by a
+    shared pool, per-row page tables and per-row lengths; capacity tracks
+    actual tokens, enabling real continuous batching (DESIGN.md §5).
+
 Layout (per layer):
     k_q, v_q   int8  (B, H_kv, T_max, D)
     k_s, v_s   f32   (B, H_kv, n_blocks, D)   one scale row per token-block
@@ -23,11 +31,38 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import quantization as Q
+
+
+@runtime_checkable
+class KVCacheLike(Protocol):
+    """The quantize/append/dequantize surface shared by the contiguous and
+    paged caches. `prefill` writes a (B, H, T, D) block-multiple prefix;
+    `append` streams one (B, H, 1, D) token; `dequantized` materializes the
+    approximate cache (reference path — the fused kernels read the int8
+    storage directly)."""
+
+    block_size: int
+
+    def prefill(self, k: jax.Array, v: jax.Array) -> "KVCacheLike": ...
+
+    def append(self, k: jax.Array, v: jax.Array) -> "KVCacheLike": ...
+
+    def dequantized(self, dtype=...) -> tuple[jax.Array, jax.Array]: ...
+
+    @property
+    def max_len(self) -> int: ...
+
+    @property
+    def valid_len(self) -> jax.Array: ...
+
+    @property
+    def memory_bytes(self) -> int: ...
 
 
 @partial(jax.tree_util.register_dataclass,

@@ -1,0 +1,328 @@
+"""Paged INT8 KV cache — block-pool allocator + page-table views.
+
+The contiguous `QuantizedKVCache` reserves ``batch × max_len`` slots per
+layer, so serving capacity is bounded by the *worst-case* sequence length.
+Paging (vLLM-style) breaks the cache into fixed-size pages owned by a shared
+pool; each sequence holds a page table mapping logical token blocks to
+physical pages, so capacity is bounded by *actual* tokens (DESIGN.md §5).
+
+Two pytrees:
+
+``PagePool`` — the physical storage + allocator state:
+    k_q, v_q    int8  (n_pages, page_size, H_kv, D)
+    k_s, v_s    f32   (n_pages, H_kv, D)    one scale row per page
+    free_stack  int32 (n_pages,)            free page ids; top = n_free-1
+    n_free      int32 ()
+
+``PagedQuantizedKVCache`` — a batched *view* into one pool:
+    pool        PagePool
+    page_table  int32 (B, max_blocks)       physical page per logical block
+    resid_k/v   ref_dtype (B, H_kv, page_size, D)  unquantized current page
+    length      int32 (B,)                  per-row tokens written
+
+Key invariants:
+  * page_size == quantization block size: one scale row per page, so scales
+    stream with their page through the fused kernel (DESIGN.md §5).
+  * Page 0 is a reserved sentinel: it is never allocated, unmapped table
+    entries point at it, and masked-out rows scatter into it. Its contents
+    are garbage by design and always masked out of attention by `length`.
+  * `length` is per-row (unlike the contiguous cache's scalar): rows live on
+    independent timelines, which is what makes real continuous batching
+    possible (serving/scheduler.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as Q
+
+SENTINEL_PAGE = 0   # never allocated; unmapped / masked writes land here
+
+
+def gather_pages(pool_kq, pool_ks, pool_vq, pool_vs, page_table):
+    """Materialize the contiguous cache layout from a page pool:
+    int8 (B, H, NT*ps, D) + f32 scales (B, H, NT, D). Reference path — the
+    fused kernel gathers pages via its index_map instead."""
+    B, NT = page_table.shape
+    _, ps, H, D = pool_kq.shape
+
+    def gq(pool_q):
+        g = pool_q[page_table]                       # (B, NT, ps, H, D)
+        return g.transpose(0, 3, 1, 2, 4).reshape(B, H, NT * ps, D)
+
+    def gs(pool_s):
+        return pool_s[page_table].transpose(0, 2, 1, 3)   # (B, H, NT, D)
+
+    return gq(pool_kq), gs(pool_ks), gq(pool_vq), gs(pool_vs)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["k_q", "v_q", "k_s", "v_s", "free_stack", "n_free"],
+         meta_fields=["page_size"])
+@dataclasses.dataclass
+class PagePool:
+    """Shared physical page storage + functional free-list allocator."""
+    k_q: jax.Array          # int8 (n_pages, page_size, H_kv, D)
+    v_q: jax.Array
+    k_s: jax.Array          # f32  (n_pages, H_kv, D)
+    v_s: jax.Array
+    free_stack: jax.Array   # int32 (n_pages,); entries [0, n_free) are free
+    n_free: jax.Array       # int32 ()
+    page_size: int
+
+    @staticmethod
+    def init(n_pages: int, page_size: int, kv_heads: int,
+             head_dim: int) -> "PagePool":
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the sentinel)")
+        if page_size % 8:
+            raise ValueError(f"page_size must be a multiple of 8, got {page_size}")
+        z8 = jnp.zeros((n_pages, page_size, kv_heads, head_dim), jnp.int8)
+        zs = jnp.full((n_pages, kv_heads, head_dim), Q._EPS, jnp.float32)
+        # pages 1..n_pages-1 are allocatable; slot for the sentinel is unused
+        stack = jnp.roll(jnp.arange(n_pages, dtype=jnp.int32), -1)
+        return PagePool(z8, jnp.zeros_like(z8), zs, jnp.copy(zs), stack,
+                        jnp.asarray(n_pages - 1, jnp.int32), page_size)
+
+    # -- allocator (functional, jit-safe; n is static) ---------------------
+    def alloc(self, n: int) -> tuple["PagePool", jax.Array]:
+        """Pop `n` pages off the free stack. Caller must ensure n <= n_free
+        (the host scheduler admits by free-page budget)."""
+        ids = jax.lax.dynamic_slice(self.free_stack, (self.n_free - n,), (n,))
+        return dataclasses.replace(self, n_free=self.n_free - n), ids
+
+    def free(self, ids: jax.Array) -> "PagePool":
+        """Push page ids back onto the free stack."""
+        stack = jax.lax.dynamic_update_slice(self.free_stack,
+                                             ids.astype(jnp.int32),
+                                             (self.n_free,))
+        return dataclasses.replace(self, free_stack=stack,
+                                   n_free=self.n_free + ids.shape[0])
+
+    # -- stats -------------------------------------------------------------
+    @property
+    def n_pages(self) -> int:
+        return self.k_q.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (excludes the sentinel)."""
+        return self.n_pages - 1
+
+    @property
+    def pages_in_use(self) -> jax.Array:
+        return jnp.asarray(self.capacity, jnp.int32) - self.n_free
+
+    @property
+    def memory_bytes(self) -> int:
+        n = lambda a: a.size * a.dtype.itemsize
+        return sum(n(a) for a in (self.k_q, self.v_q, self.k_s, self.v_s))
+
+    @property
+    def page_bytes(self) -> int:
+        """Storage cost of one page: K+V int8 slots plus their scale rows."""
+        return self.memory_bytes // self.n_pages
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["pool", "page_table", "resid_k", "resid_v", "length"],
+         meta_fields=[])
+@dataclasses.dataclass
+class PagedQuantizedKVCache:
+    """Per-batch-row page-table view over a shared PagePool.
+
+    Mirrors the contiguous `QuantizedKVCache` interface (prefill / append /
+    dequantized / max_len / memory_bytes) so models/attention.py can swap the
+    two behind one code path; granularity is always per_block with
+    block_size == page_size.
+    """
+    pool: PagePool
+    page_table: jax.Array   # int32 (B, max_blocks); SENTINEL_PAGE = unmapped
+    resid_k: jax.Array      # ref_dtype (B, H_kv, page_size, D)
+    resid_v: jax.Array
+    length: jax.Array       # int32 (B,) per-row tokens written
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def init(batch: int, kv_heads: int, max_len: int, head_dim: int,
+             cfg: Q.QuantConfig, *, n_pages: int) -> "PagedQuantizedKVCache":
+        if cfg.granularity != "per_block":
+            raise ValueError("paged cache requires per_block quantization "
+                             "(one scale row per page)")
+        ps = cfg.block_size
+        if max_len % ps:
+            raise ValueError(f"max_len={max_len} not a multiple of page {ps}")
+        pool = PagePool.init(n_pages, ps, kv_heads, head_dim)
+        table = jnp.zeros((batch, max_len // ps), jnp.int32)
+        resid = jnp.zeros((batch, kv_heads, ps, head_dim), cfg.ref_dtype)
+        return PagedQuantizedKVCache(pool, table, resid, jnp.copy(resid),
+                                     jnp.zeros((batch,), jnp.int32))
+
+    # -- shape accessors ---------------------------------------------------
+    @property
+    def page_size(self) -> int:
+        return self.pool.page_size
+
+    @property
+    def block_size(self) -> int:     # interface parity with QuantizedKVCache
+        return self.pool.page_size
+
+    @property
+    def max_blocks(self) -> int:
+        return self.page_table.shape[-1]
+
+    @property
+    def max_len(self) -> int:
+        return self.max_blocks * self.page_size
+
+    @property
+    def valid_len(self) -> jax.Array:
+        return jnp.minimum(self.length, self.max_len)
+
+    @property
+    def live_pages(self) -> jax.Array:
+        """Pages actually holding tokens (ceil(length / page_size), summed
+        over rows) — vs `pool.pages_in_use` which counts *reserved* pages."""
+        ps = self.page_size
+        return jnp.sum(-(-self.valid_len // ps))
+
+    @property
+    def memory_bytes(self) -> int:
+        n = lambda a: a.size * a.dtype.itemsize
+        return (self.pool.memory_bytes +
+                sum(n(a) for a in (self.page_table, self.resid_k,
+                                   self.resid_v, self.length)))
+
+    # -- prefill -----------------------------------------------------------
+    def prefill(self, k: jax.Array, v: jax.Array,
+                row_mask: jax.Array | None = None) -> "PagedQuantizedKVCache":
+        """Quantize a (B, H, T, D) prefix into this view's mapped pages.
+
+        T must be a multiple of page_size (pad upstream, as for the
+        contiguous cache). `row_mask` (B,) bool selects which rows are
+        written — unmasked rows keep their cache and length untouched, which
+        is what lets the scheduler prefill mid-stream admissions while other
+        rows are mid-decode (their scatters are redirected to the sentinel
+        page). The masked rows' first T//page_size table entries must be
+        mapped before the call.
+        """
+        B, H, T, D = k.shape
+        ps = self.page_size
+        if T % ps:
+            raise ValueError(f"T={T} not a multiple of page_size={ps}")
+        nb = T // ps
+        k_q, k_s = Q.quantize_blocked(k, ps)       # (B,H,T,D), (B,H,nb,D)
+        v_q, v_s = Q.quantize_blocked(v, ps)
+        ids = self.page_table[:, :nb]              # (B, nb)
+        if row_mask is not None:
+            ids = jnp.where(row_mask[:, None], ids, SENTINEL_PAGE)
+        flat_ids = ids.reshape(-1)                 # (B*nb,)
+
+        def to_pages(x_q):
+            # (B, H, T, D) -> (B*nb, ps, H, D)
+            xb = x_q.reshape(B, H, nb, ps, D).transpose(0, 2, 3, 1, 4)
+            return xb.reshape(B * nb, ps, H, D)
+
+        def scales_to_pages(s):
+            # (B, H, nb, D) -> (B*nb, H, D)
+            return s.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(
+                B * nb, H, D)
+
+        pool = dataclasses.replace(
+            self.pool,
+            k_q=self.pool.k_q.at[flat_ids].set(to_pages(k_q)),
+            v_q=self.pool.v_q.at[flat_ids].set(to_pages(v_q)),
+            k_s=self.pool.k_s.at[flat_ids].set(scales_to_pages(k_s)),
+            v_s=self.pool.v_s.at[flat_ids].set(scales_to_pages(v_s)))
+        T_arr = jnp.asarray(T, jnp.int32)
+        if row_mask is None:
+            length = jnp.full_like(self.length, T_arr)
+            resid_k = jnp.zeros_like(self.resid_k)
+            resid_v = jnp.zeros_like(self.resid_v)
+        else:
+            length = jnp.where(row_mask, T_arr, self.length)
+            keep = row_mask[:, None, None, None]
+            resid_k = jnp.where(keep, 0, self.resid_k)
+            resid_v = jnp.where(keep, 0, self.resid_v)
+        return dataclasses.replace(self, pool=pool, length=length,
+                                   resid_k=resid_k, resid_v=resid_v)
+
+    # -- decode append -----------------------------------------------------
+    def append(self, k: jax.Array, v: jax.Array,
+               row_mask: jax.Array | None = None) -> "PagedQuantizedKVCache":
+        """Append one token (B, H, 1, D) per row, each at its own offset.
+
+        Tokens accumulate in the per-row residual; when a row's page fills it
+        is quantized and scattered to that row's mapped page (rows flush
+        independently — unlike the contiguous cache there is no shared
+        position). Rows whose current block is unmapped flush to the
+        sentinel page. `row_mask` (B,) bool freezes unmasked rows entirely
+        (the scheduler masks out empty/finished rows so their lengths stay
+        exactly 0 between requests).
+        """
+        B, H, _, D = k.shape
+        ps = self.page_size
+        off = self.length % ps                      # (B,)
+        blk = jnp.minimum(self.length // ps, self.max_blocks - 1)
+        write = (jnp.arange(ps)[None, None, :, None] ==
+                 off[:, None, None, None])          # (B,1,ps,1)
+        if row_mask is not None:
+            write &= row_mask[:, None, None, None]
+        resid_k = jnp.where(write, k.astype(self.resid_k.dtype), self.resid_k)
+        resid_v = jnp.where(write, v.astype(self.resid_v.dtype), self.resid_v)
+
+        full = off == ps - 1                        # (B,) rows flushing now
+        if row_mask is not None:
+            full &= row_mask
+        fq_k, fs_k = Q.quantize_matrix(resid_k)     # (B,H,ps,D), (B,H,D)
+        fq_v, fs_v = Q.quantize_matrix(resid_v)
+        pid = self.page_table[jnp.arange(B), blk]   # (B,)
+        pid = jnp.where(full, pid, SENTINEL_PAGE)   # non-flushing -> sentinel
+        pool = dataclasses.replace(
+            self.pool,
+            k_q=self.pool.k_q.at[pid].set(fq_k.transpose(0, 2, 1, 3)),
+            v_q=self.pool.v_q.at[pid].set(fq_v.transpose(0, 2, 1, 3)),
+            k_s=self.pool.k_s.at[pid].set(fs_k.astype(jnp.float32)),
+            v_s=self.pool.v_s.at[pid].set(fs_v.astype(jnp.float32)))
+        clear = full[:, None, None, None]
+        advance = 1 if row_mask is None else row_mask.astype(jnp.int32)
+        return dataclasses.replace(
+            self, pool=pool,
+            resid_k=jnp.where(clear, 0, resid_k),
+            resid_v=jnp.where(clear, 0, resid_v),
+            length=self.length + advance)
+
+    # -- read --------------------------------------------------------------
+    def gathered(self) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+        """Contiguous (k_q, k_s, v_q, v_s) view of this cache's pages
+        (see `gather_pages`)."""
+        return gather_pages(self.pool.k_q, self.pool.k_s, self.pool.v_q,
+                            self.pool.v_s, self.page_table)
+
+    def dequantized(self, dtype=jnp.float32) -> tuple[jax.Array, jax.Array]:
+        """Full cache in `dtype` with the exact residual tail overlaid
+        (interface parity with QuantizedKVCache.dequantized)."""
+        k_q, k_s, v_q, v_s = self.gathered()
+        k = Q.dequantize_blocked(k_q, k_s, dtype=dtype)
+        v = Q.dequantize_blocked(v_q, v_s, dtype=dtype)
+        ps = self.page_size
+        B, H, _, D = k.shape
+        # per-row residual overlay: token t of row b is exact iff it sits in
+        # the row's current *partial* page (none when length % ps == 0 —
+        # that page was flushed and the residual cleared)
+        tail_start = self.length - self.length % ps                # (B,)
+        tpos = jnp.arange(self.max_len)[None, :]                   # (1, T)
+        in_tail = ((tpos >= tail_start[:, None]) &
+                   (tpos < self.length[:, None]))                  # (B, T)
+        src = tpos - tail_start[:, None]                           # (B, T)
+        src = jnp.clip(src, 0, ps - 1)
+        rk = jnp.take_along_axis(
+            self.resid_k.astype(dtype), src[:, None, :, None], axis=2)
+        rv = jnp.take_along_axis(
+            self.resid_v.astype(dtype), src[:, None, :, None], axis=2)
+        sel = in_tail[:, None, :, None]
+        return jnp.where(sel, rk, k), jnp.where(sel, rv, v)

@@ -8,8 +8,10 @@ ops.py             — public jit'd wrappers with backend dispatch
 ref.py             — pure-jnp oracles (every kernel allclose-tested vs these)
 """
 from repro.kernels import ops, ref
-from repro.kernels.ops import (dequantize, quant_attention_decode,
-                               quantize_blocked, quantize_per_channel)
+from repro.kernels.ops import (dequantize, paged_attention_decode,
+                               quant_attention_decode, quantize_blocked,
+                               quantize_per_channel)
 
-__all__ = ["ops", "ref", "dequantize", "quant_attention_decode",
-           "quantize_blocked", "quantize_per_channel"]
+__all__ = ["ops", "ref", "dequantize", "paged_attention_decode",
+           "quant_attention_decode", "quantize_blocked",
+           "quantize_per_channel"]

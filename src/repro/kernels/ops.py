@@ -93,6 +93,37 @@ def quant_attention_decode_partials(q, k_q, k_s, v_q, v_s, length, *,
         interpret=impl == "pallas_interpret")
 
 
+# -- paged attention ---------------------------------------------------------
+
+def paged_attention_decode_partials(q, pool_kq, pool_ks, pool_vq, pool_vs,
+                                    page_table, lengths, *,
+                                    impl: Impl = "auto"):
+    """Flash partials over an INT8 page pool through per-row page tables.
+
+    q (B, H, D); pool_kq/vq (P, ps, Hkv, D) int8; pool_ks/vs (P, Hkv, D) f32;
+    page_table (B, NT) int32; lengths (B,) int32 — per-row valid tokens
+    (pass the flushed prefix count; the residual tail merges separately).
+    Returns (o_unnormalized (B, H, D), m (B, H, 1), l (B, H, 1)).
+    """
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        from repro.core.paging import gather_pages
+        k_q, k_s, v_q, v_s = gather_pages(
+            pool_kq, pool_ks, pool_vq, pool_vs, page_table)
+        return _decode_partials_xla(q, k_q, k_s, v_q, v_s, lengths, None)
+    return _qa.paged_attention_decode_partials(
+        q, pool_kq, pool_ks, pool_vq, pool_vs, page_table, lengths,
+        interpret=impl == "pallas_interpret")
+
+
+def paged_attention_decode(q, pool_kq, pool_ks, pool_vq, pool_vs, page_table,
+                           lengths, *, impl: Impl = "auto"):
+    """Normalized paged decode attention: (B, H, D) f32."""
+    o, m, l = paged_attention_decode_partials(
+        q, pool_kq, pool_ks, pool_vq, pool_vs, page_table, lengths, impl=impl)
+    return o / jnp.maximum(l, 1e-30)
+
+
 def _decode_partials_xla(q, k_q, k_s, v_q, v_s, length, window=None):
     B, H, D = q.shape
     _, Hkv, T, _ = k_q.shape

@@ -164,3 +164,125 @@ def quant_attention_decode(q, k_q, k_s, v_q, v_s, length, *, window=None,
         q, k_q, k_s, v_q, v_s, length, window=window, block_t=block_t,
         interpret=interpret)
     return o / jnp.maximum(l, 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Page-table-aware variant (DESIGN.md §5): the grid iterates *logical* token
+# blocks per (row, kv head); the index_map gathers the physical page id from
+# the scalar-prefetched page table, so the DMA streams exactly the pages a
+# row owns — no contiguous copy of the cache ever exists. One scale row per
+# page streams alongside its page (page_size == quant block size).
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(pt_ref, len_ref, q_ref, kq_ref, ks_ref, vq_ref,
+                         vs_ref, o_ref, m_ref, l_ref,
+                         m_scr, l_scr, acc_scr, *, page_size: int):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]                      # this row's valid tokens
+
+    @pl.when(t * page_size < length)         # skip fully-masked blocks
+    def _step():
+        k = kq_ref[0, :, 0, :].astype(jnp.float32) * \
+            ks_ref[0].astype(jnp.float32)    # (ps, D) * (1, D)
+        v = vq_ref[0, :, 0, :].astype(jnp.float32) * \
+            vs_ref[0].astype(jnp.float32)
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        d = q.shape[-1]
+        logits = jax.lax.dot_general(        # (G, ps)
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * jax.lax.rsqrt(
+                jnp.asarray(d, jnp.float32))
+        pos = t * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 1)
+        mask = pos < length
+        logits = jnp.where(mask, logits, _NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new) * mask.astype(jnp.float32)
+        alpha = jnp.exp(m_prev - m_new)
+        m_scr[...] = m_new
+        l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(t == nt - 1)
+    def _finish():
+        o_ref[0, 0] = acc_scr[...].astype(o_ref.dtype)
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_decode(qg, pool_kq, pool_ks, pool_vq, pool_vs, page_table,
+                  lengths, *, interpret: bool = True):
+    """qg (B, Hkv, Gp, D); pool_* (P, ps, Hkv, D) int8 / (P, Hkv, D) f32;
+    page_table (B, NT) int32; lengths (B,) int32.
+    Returns (o (B, Hkv, Gp, D), m (B, Hkv, Gp, 1), l (B, Hkv, Gp, 1))."""
+    B, Hkv, Gp, D = qg.shape
+    _, ps, _, _ = pool_kq.shape
+    NT = page_table.shape[1]
+    kernel = functools.partial(_paged_decode_kernel, page_size=ps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,               # page table + lengths in SMEM
+        grid=(B, Hkv, NT),
+        in_specs=[
+            pl.BlockSpec((1, 1, Gp, D), lambda b, h, t, pt, ln: (b, h, 0, 0)),
+            # physical page gather: logical block t of row b -> pt[b, t]
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, t, pt, ln: (pt[b, t], 0, h, 0)),
+            pl.BlockSpec((1, 1, D), lambda b, h, t, pt, ln: (pt[b, t], h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, t, pt, ln: (pt[b, t], 0, h, 0)),
+            pl.BlockSpec((1, 1, D), lambda b, h, t, pt, ln: (pt[b, t], h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Gp, D), lambda b, h, t, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Gp, 1), lambda b, h, t, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Gp, 1), lambda b, h, t, pt, ln: (b, h, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, Hkv, Gp, D), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Hkv, Gp, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Hkv, Gp, 1), jnp.float32)],
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, pool_kq, pool_ks, pool_vq, pool_vs)
+
+
+def paged_attention_decode_partials(q, pool_kq, pool_ks, pool_vq, pool_vs,
+                                    page_table, lengths, *,
+                                    interpret: bool = True):
+    """Batched paged decode partials: q (B, H, D) over an INT8 page pool
+    (P, ps, Hkv, D) through per-row page tables (B, NT). `lengths` (B,) masks
+    each row independently (pass the *flushed* prefix count; the fp residual
+    tail is merged by the caller). Returns (o_unnormalized (B, H, D),
+    m (B, H, 1), l (B, H, 1))."""
+    B, H, D = q.shape
+    Hkv = pool_kq.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    Gp = max(8, G)                           # 8-sublane minimum
+    if Gp != G:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    o, m, l = _paged_decode(qg, pool_kq, pool_ks, pool_vq, pool_vs,
+                            page_table, lengths, interpret=interpret)
+    trim = lambda a: a[:, :, :G].reshape(B, H, a.shape[-1])
+    return trim(o), trim(m), trim(l)

@@ -19,6 +19,10 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache + page-budget admission")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="pool size in pages (default: dense capacity)")
     args = ap.parse_args(argv)
 
     import jax
@@ -37,7 +41,8 @@ def main(argv=None):
 
     params = transformer.init_params(cfg, jax.random.PRNGKey(0))
     b = ContinuousBatcher(params, cfg, batch=args.batch,
-                          max_len=args.max_len)
+                          max_len=args.max_len, paged=args.paged,
+                          n_pages=args.pages)
     rng = np.random.RandomState(0)
     for i in range(args.requests):
         b.submit(Request(uid=i,
@@ -51,6 +56,10 @@ def main(argv=None):
     print(f"[serve] completed {len(done)}/{args.requests} requests, "
           f"{total_toks} tokens in {dt:.1f}s "
           f"({total_toks/dt:.1f} tok/s host-CPU)")
+    if args.paged:
+        rep = b.pool_report()
+        print(f"[serve] page pool: {rep['pages_total']} pages, "
+              f"{rep['pages_free']} free after drain")
     for r in done[:3]:
         print(f"  req {r.uid}: {r.generated}")
     return 0 if len(done) == args.requests else 1

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import kvcache as KV
+from repro.core import paging as PG
 from repro.core import quantization as Q
 from repro.kernels import ops
 from repro.models import flash
@@ -93,10 +94,7 @@ def _gather_seq(x):
             or "model" in rules.get("batch", ())):
         return act_shard(x, "batch", None, None, None)
     from jax.sharding import PartitionSpec as P
-    try:
-        from jax import shard_map as _shard_map
-    except ImportError:                                # pragma: no cover
-        from jax.experimental.shard_map import shard_map as _shard_map
+    from repro.parallel.shard import shard_map_compat
     fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     nf = 1
     for a in fsdp:
@@ -104,10 +102,9 @@ def _gather_seq(x):
     batch_ax = fsdp if fsdp and B % nf == 0 else ()
     in_spec = P(batch_ax if batch_ax else None, None, "model", None)
     out_spec = P(batch_ax if batch_ax else None, None, None, None)
-    return _shard_map(
+    return shard_map_compat(
         lambda xl: jax.lax.all_gather(xl, "model", axis=2, tiled=True),
-        mesh=mesh, in_specs=(in_spec,), out_specs=out_spec,
-        check_vma=False)(x)
+        mesh=mesh, in_specs=(in_spec,), out_specs=out_spec)(x)
 
 
 def _sdpa(q, k, v, cfg: ModelConfig, *, causal: bool, window: int | None,
@@ -162,24 +159,46 @@ def cross_decode(p, x, cfg: ModelConfig, cache: KV.QuantizedKVCache,
 
 # -- serving ------------------------------------------------------------------
 
-def prefill(p, x, cfg: ModelConfig, positions, cache: KV.QuantizedKVCache,
-            *, local: bool = False):
-    """Prompt pass: causal attention + quantize K/V into the cache."""
+def prefill(p, x, cfg: ModelConfig, positions, cache, *, local: bool = False,
+            row_mask=None):
+    """Prompt pass: causal attention + quantize K/V into the cache.
+
+    `row_mask` (B,) bool is a paged-cache feature: only masked rows' caches
+    are written, so the scheduler can prefill mid-stream admissions while
+    other rows are mid-decode (DESIGN.md §6)."""
     q, k, v = _project_qkv(p, x, cfg, positions)
     window = cfg.sliding_window if (cfg.sliding_window or local) else None
     out = _sdpa(q, k, v, cfg, causal=True, window=window)
-    cache = cache.prefill(k.astype(jnp.float32), v.astype(jnp.float32))
+    if isinstance(cache, PG.PagedQuantizedKVCache):
+        cache = cache.prefill(k.astype(jnp.float32), v.astype(jnp.float32),
+                              row_mask=row_mask)
+    else:
+        if row_mask is not None:
+            raise ValueError("row-masked prefill requires the paged cache "
+                             "(the contiguous cache has one shared length)")
+        cache = cache.prefill(k.astype(jnp.float32), v.astype(jnp.float32))
     return _merge_heads(p, out, cfg, x.dtype), cache
 
 
-def decode(p, x, cfg: ModelConfig, positions, cache: KV.QuantizedKVCache,
-           *, local: bool = False, impl: str = "auto"):
-    """One-token step against the INT8 cache (fused dequant attention)."""
+def decode(p, x, cfg: ModelConfig, positions, cache,
+           *, local: bool = False, impl: str = "auto", row_mask=None):
+    """One-token step against the INT8 cache (fused dequant attention).
+
+    `row_mask` (B,) bool freezes unmasked rows' paged caches (used by the
+    scheduler so empty rows between requests never advance)."""
     q, k, v = _project_qkv(p, x, cfg, positions)          # S == 1
-    cache = cache.append(k.astype(jnp.float32), v.astype(jnp.float32))
+    if isinstance(cache, PG.PagedQuantizedKVCache):
+        cache = cache.append(k.astype(jnp.float32), v.astype(jnp.float32),
+                             row_mask=row_mask)
+    else:
+        if row_mask is not None:
+            raise ValueError("row-masked decode requires the paged cache")
+        cache = cache.append(k.astype(jnp.float32), v.astype(jnp.float32))
     B, H, _, hd = q.shape
     window = cfg.sliding_window if (cfg.sliding_window or local) else None
-    if cache.per_channel:
+    if isinstance(cache, PG.PagedQuantizedKVCache):
+        out = _decode_paged(q[:, :, 0], cache, impl=impl)
+    elif cache.per_channel:
         out = ops.quant_attention_decode(
             q[:, :, 0], cache.k_q, cache.k_s, cache.v_q, cache.v_s,
             cache.length, window=window if cache.ring else None, impl=impl)
@@ -212,6 +231,25 @@ def _decode_blocked(q, cache: KV.QuantizedKVCache, *, window=None,
         window=win_q, impl=impl)
     # partials over the residual tail (exact, fp)
     m2, l2, o2 = _decode_partials_fp(q, cache.resid_k, cache.resid_v, n_tail)
+    return _merge_partials(o1, m1, l1, o2, m2, l2)
+
+
+def _decode_paged(q, cache: PG.PagedQuantizedKVCache, *, impl="auto"):
+    """Paged analogue of _decode_blocked: fused page-table kernel over each
+    row's flushed pages + exact fp residual tail, merged per row (rows flush
+    independently — lengths are per-row)."""
+    ps = cache.page_size
+    flushed = (cache.length // ps) * ps          # (B,) flushed per row
+    n_tail = cache.length % ps
+    o1, m1, l1 = ops.paged_attention_decode_partials(
+        q, cache.pool.k_q, cache.pool.k_s, cache.pool.v_q, cache.pool.v_s,
+        cache.page_table, flushed, impl=impl)
+    m2, l2, o2 = _decode_partials_fp(q, cache.resid_k, cache.resid_v, n_tail)
+    return _merge_partials(o1, m1, l1, o2, m2, l2)
+
+
+def _merge_partials(o1, m1, l1, o2, m2, l2):
+    """Softmax-merge two sets of flash partials into normalized outputs."""
     m = jnp.maximum(m1, m2)
     c1, c2 = jnp.exp(m1 - m), jnp.exp(m2 - m)
     l = l1 * c1 + l2 * c2
@@ -225,7 +263,8 @@ def _decode_partials_fp(q, rk, rv, n_tail):
     qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
     logits = jnp.einsum("bhgd,bhtd->bhgt", qg, rk.astype(jnp.float32))
     logits = logits / jnp.sqrt(jnp.asarray(hd, jnp.float32))
-    mask = jnp.arange(bs)[None, None, None, :] < n_tail
+    nt = jnp.broadcast_to(jnp.asarray(n_tail, jnp.int32), (B,))
+    mask = jnp.arange(bs)[None, None, None, :] < nt[:, None, None, None]
     logits = jnp.where(mask, logits, -1e30)
     m = jnp.max(logits, axis=-1, keepdims=True)
     m = jnp.maximum(m, -1e30 / 2)

@@ -132,12 +132,7 @@ def _apply_local(p, x, cfg: ModelConfig):
 
 def _apply_shard_map(p, x, cfg: ModelConfig, mesh):
     from jax.sharding import PartitionSpec as P
-    try:
-        from jax import shard_map as _shard_map       # jax >= 0.7
-        shard_map = lambda f, **kw: _shard_map(f, **kw)
-    except ImportError:                                # pragma: no cover
-        from jax.experimental.shard_map import shard_map as _sm
-        shard_map = lambda f, **kw: _sm(f, **kw)
+    from repro.parallel.shard import shard_map_compat
 
     fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     tp = "model" if "model" in mesh.axis_names else None
@@ -177,11 +172,10 @@ def _apply_shard_map(p, x, cfg: ModelConfig, mesh):
             aux = jax.lax.pmean(aux, batch_ax)   # replicate the scalar
         return out, aux
 
-    out, aux = shard_map(
+    out, aux = shard_map_compat(
         local_fn, mesh=mesh,
         in_specs=(w_spec, w_spec, wd_spec, P(None, None), x_spec),
         out_specs=(x_spec, P()),
-        check_vma=False,
     )(p["w_gate"], p["w_up"], p["w_down"], p["router"], x)
     return out, aux
 

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import kvcache as KV
+from repro.core import paging as PG
 from repro.models import attention, mlp, moe, rglru, xlstm
 from repro.models.common import (act_shard, embed_init, rmsnorm, rmsnorm_init,
                                  layernorm, layernorm_init, dense_init,
@@ -196,13 +197,33 @@ def _head(params, x, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
-                      state_quant: bool = True):
+                      state_quant: bool = True, *, paged: bool = False,
+                      n_pages: int | None = None):
     """Stacked caches: state["p{i}"] has leading dim n_groups; state["tail"]
-    is a list of unstacked caches."""
+    is a list of unstacked caches.
+
+    `paged=True` swaps the attention caches for PagedQuantizedKVCache views
+    over per-layer page pools of `n_pages` pages each (DESIGN.md §5). Paged
+    serving needs every layer's state to honor row-masked prefill, so it is
+    restricted to pure-attention stacks without sliding windows.
+    """
     period, n_groups, tail = _pattern_layout(cfg)
+    if paged:
+        bad = [k for k in cfg.block_pattern if k not in ("attn", "moe")]
+        if bad or cfg.sliding_window:
+            raise ValueError(
+                f"paged serving supports full-attention stacks only "
+                f"(got kinds={bad or cfg.block_pattern}, "
+                f"sliding_window={cfg.sliding_window})")
+        if n_pages is None:   # default: dense capacity (no oversubscription)
+            n_pages = batch * (max_len // cfg.quant.block_size) + 1
 
     def one(kind):
         if kind in ("attn", "local_attn", "moe"):
+            if paged:
+                return PG.PagedQuantizedKVCache.init(
+                    batch, cfg.n_kv_heads, max_len, cfg.head_dim, cfg.quant,
+                    n_pages=n_pages)
             eff = max_len
             if cfg.sliding_window:   # SWA (mixtral) / local attn (griffin)
                 eff = min(max_len, _round_block(cfg.sliding_window, cfg))
@@ -235,12 +256,18 @@ def _round_block(n, cfg: ModelConfig):
 # Block application — serving (prefill / decode)
 # ---------------------------------------------------------------------------
 
-def _block_serve(p, x, kind, cfg, positions, cache, mode: str):
+def _block_serve(p, x, kind, cfg, positions, cache, mode: str,
+                 row_mask=None):
     h = _norm(cfg, p["norm1"], x)
     if kind in ("attn", "local_attn", "moe"):
-        fn = attention.prefill if mode == "prefill" else attention.decode
-        h, cache = fn(p["attn"], h, cfg, positions, cache,
-                      local=kind == "local_attn")
+        if mode == "prefill":
+            h, cache = attention.prefill(p["attn"], h, cfg, positions, cache,
+                                         local=kind == "local_attn",
+                                         row_mask=row_mask)
+        else:
+            h, cache = attention.decode(p["attn"], h, cfg, positions, cache,
+                                        local=kind == "local_attn",
+                                        row_mask=row_mask)
     elif kind == "rglru":
         if mode == "prefill":
             h, cache = rglru.apply_seq(p["rglru"], h, cfg, None)
@@ -265,7 +292,8 @@ def _block_serve(p, x, kind, cfg, positions, cache, mode: str):
     return x, cache
 
 
-def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str):
+def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str,
+           row_mask=None):
     x, positions = _embed(params, tok, cfg, positions)
     period, n_groups, tail = _pattern_layout(cfg)
 
@@ -274,7 +302,7 @@ def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str):
         new_caches = {}
         for i, kind in enumerate(cfg.block_pattern):
             x, c = _block_serve(gparams[f"p{i}"], x, kind, cfg, positions,
-                                caches[f"p{i}"], mode)
+                                caches[f"p{i}"], mode, row_mask)
             new_caches[f"p{i}"] = c
         return x, new_caches
 
@@ -287,21 +315,31 @@ def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str):
     new_state["tail"] = []
     for j, bp in enumerate(params["tail"]):
         kind = cfg.block_kind(n_groups * period + j)
-        x, c = _block_serve(bp, x, kind, cfg, positions, state["tail"][j], mode)
+        x, c = _block_serve(bp, x, kind, cfg, positions, state["tail"][j],
+                            mode, row_mask)
         new_state["tail"].append(c)
     logits = _head(params, x, cfg)
     return logits, new_state
 
 
-def prefill(params, tokens, cfg: ModelConfig, state, *, positions=None):
-    """Prompt pass: returns (logits of last position (B, Vp), new state)."""
-    logits, state = _serve(params, tokens, cfg, state, positions, "prefill")
+def prefill(params, tokens, cfg: ModelConfig, state, *, positions=None,
+            row_mask=None):
+    """Prompt pass: returns (logits of last position (B, Vp), new state).
+
+    `row_mask` (B,) bool restricts cache writes to the masked rows (paged
+    caches only) — the continuous-batching scheduler uses it to prefill
+    mid-stream admissions without touching rows that are mid-decode."""
+    logits, state = _serve(params, tokens, cfg, state, positions, "prefill",
+                           row_mask)
     return logits[:, -1], state
 
 
-def decode_step(params, token, cfg: ModelConfig, state, pos):
+def decode_step(params, token, cfg: ModelConfig, state, pos, *,
+                row_mask=None):
     """One decode step. token (B, 1) int32 (or (B, 1, d) embeddings);
-    pos (B,) int32 current position. Returns (logits (B, Vp), state)."""
+    pos (B,) int32 current position. `row_mask` (B,) bool freezes unmasked
+    rows' paged caches. Returns (logits (B, Vp), state)."""
     positions = pos[:, None].astype(jnp.int32)
-    logits, state = _serve(params, token, cfg, state, positions, "decode")
+    logits, state = _serve(params, token, cfg, state, positions, "decode",
+                           row_mask)
     return logits[:, -1], state

@@ -31,6 +31,8 @@ LOGICAL_RULES: dict[str, tuple[str, ...]] = {
     "embed": (),                   # replicated
     "seq": (),
     "expert": (),                  # experts TP'd internally, not EP by default
+    "pages": (),                   # page pool replicated over data; kv_heads
+                                   # split it over "model" (see page_pool_specs)
 }
 
 _state = threading.local()
@@ -120,3 +122,73 @@ def act_shard(x: jax.Array, *logical: str | None) -> jax.Array:
 
 def named_sharding(mesh: Mesh, *parts) -> NamedSharding:
     return NamedSharding(mesh, P(*parts))
+
+
+def shard_map_compat(fn, *, mesh, in_specs, out_specs):
+    """`shard_map` across jax versions: import moved (experimental -> top
+    level at 0.7) and the replication-check kwarg was renamed
+    (check_rep -> check_vma); we always disable it."""
+    try:
+        from jax import shard_map as _sm
+    except ImportError:                                # pragma: no cover
+        from jax.experimental.shard_map import shard_map as _sm
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    try:
+        return _sm(fn, check_vma=False, **kw)
+    except TypeError:
+        return _sm(fn, check_rep=False, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache sharding (core/paging.py)
+#
+# The page pool is the serving-time analogue of the contiguous cache's
+# (batch -> data, kv_heads -> model) layout, except the page axis REPLACES
+# the batch axis as the capacity dimension: pages are not owned by a mesh
+# axis (any row may map any page), so the pool replicates over "data" and
+# shards its kv_heads dim over "model". Page tables and lengths are
+# batch-sharded host metadata; the free list is replicated allocator state.
+# ---------------------------------------------------------------------------
+
+PAGE_POOL_LOGICAL: dict[str, tuple[str | None, ...]] = {
+    "k_q": ("pages", None, "kv_heads", None),   # (n_pages, ps, H_kv, D)
+    "v_q": ("pages", None, "kv_heads", None),
+    "k_s": ("pages", "kv_heads", None),         # (n_pages, H_kv, D)
+    "v_s": ("pages", "kv_heads", None),
+    "free_stack": (None,),
+    "n_free": (),
+}
+
+PAGED_CACHE_LOGICAL: dict[str, tuple[str | None, ...]] = {
+    "page_table": ("batch", None),              # (B, max_blocks)
+    "resid_k": ("batch", "kv_heads", None, None),
+    "resid_v": ("batch", "kv_heads", None, None),
+    "length": ("batch",),
+}
+
+
+def page_pool_specs(pool, mesh: Mesh):
+    """PartitionSpec pytree for a `PagePool` (same structure as the pool)."""
+    import dataclasses as _dc
+    return _dc.replace(pool, **{
+        f: logical_spec(PAGE_POOL_LOGICAL[f], getattr(pool, f).shape, mesh)
+        for f in PAGE_POOL_LOGICAL})
+
+
+def paged_cache_specs(cache, mesh: Mesh):
+    """PartitionSpec pytree for a `PagedQuantizedKVCache`: pool leaves via
+    `page_pool_specs`, view leaves batch-sharded. Feed to NamedSharding /
+    jax.device_put / pjit in_shardings."""
+    import dataclasses as _dc
+    return _dc.replace(
+        cache, pool=page_pool_specs(cache.pool, mesh), **{
+            f: logical_spec(PAGED_CACHE_LOGICAL[f],
+                            getattr(cache, f).shape, mesh)
+            for f in PAGED_CACHE_LOGICAL})
+
+
+def paged_cache_shardings(cache, mesh: Mesh):
+    """NamedSharding pytree matching `paged_cache_specs`."""
+    specs = paged_cache_specs(cache, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -2,9 +2,14 @@
 
 The serve_step the dry-run lowers is `decode_step`: one new token per
 request against an INT8 cache of `seq_len` (the assignment's decode_* /
-long_* shapes). Batching is static (continuous batching would slot new
-requests into finished rows; the step function is row-independent so that
-is a host-side scheduling concern — serving/scheduler.py).
+long_* shapes). Two cache backends (DESIGN.md §5):
+
+  * contiguous (default) — one max_len slab per row, scalar cache length;
+    batching is static and the scheduler rebuilds state on admission.
+  * paged (``paged=True``) — fixed-size INT8 pages from a shared pool with
+    per-row page tables and lengths; prefill takes a ``row_mask`` so the
+    scheduler slots new requests into finished rows while others are
+    mid-decode (real continuous batching, serving/scheduler.py).
 """
 from __future__ import annotations
 
@@ -13,19 +18,29 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import encdec, transformer
 
 
-def make_serve_fns(cfg: ModelConfig, *, max_len: int):
-    """Returns (init_state, prefill, decode_step) closed over cfg."""
+def make_serve_fns(cfg: ModelConfig, *, max_len: int, paged: bool = False,
+                   n_pages: int | None = None):
+    """Returns (init_state, prefill, decode_step) closed over cfg.
+
+    ``paged=True`` backs the decode state with page pools of `n_pages` pages
+    per layer; `prefill(params, inputs, state, row_mask)` then restricts
+    cache writes to the masked rows."""
 
     if cfg.family == "encdec":
+        if paged:
+            raise ValueError("paged serving is decoder-only (whisper's "
+                             "cross-attention cache is write-once)")
+
         def init_state(batch):
             return encdec.init_decode_state(cfg, batch, max_len)
 
-        def prefill_fn(params, batch_inputs, state):
+        def prefill_fn(params, batch_inputs, state, row_mask=None):
             return encdec.prefill(params, batch_inputs["frames"],
                                   batch_inputs["tokens"], cfg, state)
 
@@ -33,14 +48,16 @@ def make_serve_fns(cfg: ModelConfig, *, max_len: int):
             return encdec.decode_step(params, token, cfg, state, pos)
     else:
         def init_state(batch):
-            return transformer.init_decode_state(cfg, batch, max_len)
+            return transformer.init_decode_state(cfg, batch, max_len,
+                                                 paged=paged, n_pages=n_pages)
 
-        def prefill_fn(params, batch_inputs, state):
+        def prefill_fn(params, batch_inputs, state, row_mask=None):
             return transformer.prefill(params, batch_inputs["tokens"], cfg,
-                                       state)
+                                       state, row_mask=row_mask)
 
-        def decode_fn(params, token, state, pos):
-            return transformer.decode_step(params, token, cfg, state, pos)
+        def decode_fn(params, token, state, pos, row_mask=None):
+            return transformer.decode_step(params, token, cfg, state, pos,
+                                           row_mask=row_mask)
 
     return init_state, prefill_fn, decode_fn
 
@@ -80,12 +97,45 @@ def _round8(n):
     return -(-n // 8) * 8
 
 
-def kv_cache_memory_report(cfg: ModelConfig, batch: int, seq: int) -> dict:
-    """Paper Table 1 for this arch: cache bytes at fp32 / bf16 / int8."""
-    return {
+def kv_cache_memory_report(cfg: ModelConfig, batch: int, seq: int,
+                           paged_cache=None) -> dict:
+    """Paper Table 1 for this arch: cache bytes at fp32 / bf16 / int8.
+
+    Pass a `PagedQuantizedKVCache` (possibly layer-stacked) to also report
+    pool occupancy: `pool_pages_allocated` counts pages reserved off the
+    free list, `pool_pages_live` counts pages actually holding tokens
+    (ceil(length / page_size) per row) — their ratio is how much of the
+    reservation the running requests are using."""
+    rep = {
         "fp32_bytes": cfg.kv_cache_bytes(batch, seq, 4),
         "bf16_bytes": cfg.kv_cache_bytes(batch, seq, 2),
         "int8_bytes": cfg.kv_cache_bytes(batch, seq, 1),
         "compression_vs_fp32": 4.0,
         "compression_vs_bf16": 2.0,
     }
+    if paged_cache is not None:
+        pool = paged_cache.pool
+        ps = pool.page_size
+        n_pages = pool.k_q.shape[-4]
+        capacity = n_pages - 1                      # page 0 is the sentinel
+        # leaves may carry stacked leading layer dims — every layer's
+        # allocator state is identical, so read the first
+        n_free = int(np.asarray(pool.n_free).reshape(-1)[0])
+        lengths = np.asarray(paged_cache.length).reshape(-1, batch)[0]
+        live = int(np.sum(-(-np.minimum(lengths, paged_cache.max_len) // ps)))
+        # one layer's pool bytes / n_pages == PagePool.page_bytes; divide out
+        # any stacked leading layer dims first
+        n = lambda a: a.size * a.dtype.itemsize
+        lead = int(np.prod(pool.k_q.shape[:-4], dtype=int))
+        page_bytes = sum(n(a) for a in (pool.k_q, pool.v_q, pool.k_s,
+                                        pool.v_s)) // max(lead, 1) // n_pages
+        allocated = capacity - n_free
+        rep.update({
+            "pool_pages_total": capacity,
+            "pool_pages_allocated": allocated,
+            "pool_pages_live": live,
+            "pool_page_bytes": page_bytes,
+            "pool_utilization": live / max(allocated, 1),
+            "pool_bytes_allocated": allocated * page_bytes,
+        })
+    return rep

@@ -1,11 +1,28 @@
 """Host-side continuous-batching scheduler (CPU logic, no jax tracing).
 
 Maintains a fixed pool of `batch` decode rows; finished/empty rows are
-refilled from a request queue between device steps. The device-side decode
-step is row-independent (engine.make_serve_fns), so slotting only requires
-overwriting one row of the token/pos arrays and resetting that row's cache
-slice — done with jax.lax-free host numpy updates followed by
-device_put (cheap relative to a decode step at production batch sizes).
+refilled from a request queue between device steps. Two backends:
+
+  * contiguous (default): the cache has one shared scalar length, so every
+    row must sit at the same position. Admissions therefore *rebuild* the
+    batch: all active rows' histories (prompt + generated so far) are
+    left-padded to a common length and re-prefilled together with the new
+    rows. This fixes the two historical bugs — rows admitted after the first
+    tick were never prefilled (decoding garbage from an empty cache), and a
+    finished row's cache slice leaked into the next request — at the cost of
+    recomputing prefill for rows that were mid-decode.
+
+  * paged (``paged=True``): the cache is a page pool with per-row page
+    tables and per-row lengths (core/paging.py), so rows live on independent
+    timelines. The scheduler allocates pages on admission (enough for the
+    padded prompt plus max_new_tokens), frees them on completion, and admits
+    by free-page budget instead of row count alone. Mid-stream admissions
+    prefill through a row mask — rows that are mid-decode are untouched, so
+    nothing is recomputed. This is the production path (DESIGN.md §6).
+
+The device-side step functions are row-independent (engine.make_serve_fns),
+so all of this is host bookkeeping plus cheap device_put pushes of page
+tables / lengths between steps.
 """
 from __future__ import annotations
 
@@ -16,6 +33,16 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.paging import PagedQuantizedKVCache
+
+
+def pages_for_request(prompt_len: int, max_new: int, page_size: int) -> int:
+    """Pages one request reserves in paged mode: its prompt padded to a page
+    multiple plus the full decode budget. The single source for this policy
+    — submit() validation and benchmark pool sizing both use it."""
+    padded = -(-max(prompt_len, 1) // page_size) * page_size
+    return -(-(padded + max_new) // page_size)
 
 
 @dataclasses.dataclass
@@ -31,12 +58,27 @@ class ContinuousBatcher:
     """Greedy continuous batching over a fixed row pool."""
 
     def __init__(self, params, cfg, *, batch: int, max_len: int,
-                 eos_id: int | None = None):
+                 eos_id: int | None = None, paged: bool = False,
+                 n_pages: int | None = None):
         from repro.serving.engine import make_serve_fns
         self.params, self.cfg = params, cfg
         self.batch, self.max_len = batch, max_len
         self.eos_id = eos_id
-        init_state, prefill, decode = make_serve_fns(cfg, max_len=max_len)
+        self.paged = paged
+        self.block = (cfg.quant.block_size
+                      if cfg.quant.granularity == "per_block" else 8)
+        if paged:
+            self.page_size = cfg.quant.block_size
+            self.max_blocks = max_len // self.page_size
+            if n_pages is None:   # dense capacity; pass less to oversubscribe
+                n_pages = batch * self.max_blocks + 1
+            self.n_pages = n_pages
+            # host-authoritative allocator state, pushed to device on change
+            self.free_pages: list[int] = list(range(1, n_pages))
+            self.tables = np.zeros((batch, self.max_blocks), np.int32)
+            self.row_pages: list[list[int]] = [[] for _ in range(batch)]
+        init_state, prefill, decode = make_serve_fns(
+            cfg, max_len=max_len, paged=paged, n_pages=n_pages)
         self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode)
         self._init_state = init_state
@@ -47,49 +89,43 @@ class ContinuousBatcher:
         self.state = None
 
     def submit(self, req: Request):
+        """Queue a request. Rejects impossible requests here — once queued,
+        admission must never fail, or earlier candidates popped in the same
+        tick would be stranded."""
+        if self._pad(len(req.prompt)) + req.max_new_tokens > self.max_len:
+            raise ValueError(f"request {req.uid}: prompt+max_new exceeds "
+                             f"max_len={self.max_len}")
+        if self.paged and pages_for_request(
+                len(req.prompt), req.max_new_tokens,
+                self.page_size) > self.n_pages - 1:
+            raise ValueError(f"request {req.uid} needs more pages than the "
+                             f"pool holds ({self.n_pages - 1}); raise n_pages")
         self.queue.append(req)
 
-    def _admit(self):
-        """Fill empty rows with queued requests (one prefill per admission
-        group; rows prefill together on first use)."""
-        new = []
-        for i in range(self.batch):
-            if self.rows[i] is None and self.queue:
-                self.rows[i] = self.queue.popleft()
-                new.append(i)
-        return new
+    # -- shared helpers ----------------------------------------------------
+    def _pad(self, n: int) -> int:
+        return -(-max(n, 1) // self.block) * self.block
+
+    def _sample(self, logits) -> np.ndarray:
+        return np.asarray(jnp.argmax(logits[..., :self.cfg.vocab], -1))
 
     def step(self) -> list[Request]:
-        """One scheduler tick: admit, prefill new rows, decode one token for
-        all active rows. Returns requests completed this tick."""
-        newly = self._admit()
-        if self.state is None:
-            if not newly:
-                return []
-            self.state = self._init_state(self.batch)
-            # batch the initial prefill over admitted rows (padded prompts)
-            bs = (self.cfg.quant.block_size
-                  if self.cfg.quant.granularity == "per_block" else 8)
-            S = max(len(self.rows[i].prompt) for i in newly)
-            S = -(-S // bs) * bs
-            toks = np.zeros((self.batch, S), np.int32)
-            for i in newly:
-                p = self.rows[i].prompt
-                toks[i, S - len(p):] = p          # left-pad
-            logits, self.state = self._prefill(
-                self.params, {"tokens": jnp.asarray(toks)}, self.state)
-            nxt = np.asarray(jnp.argmax(logits[..., :self.cfg.vocab], -1))
-            for i in newly:
-                self.tok[i, 0] = nxt[i]
-                self.pos[i] = S
+        """One scheduler tick: admit, prefill admitted rows, decode one token
+        for all active rows. Returns requests completed this tick."""
+        if self.paged:
+            return self._step_paged()
+        return self._step_contiguous()
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
+        out = []
+        for _ in range(max_ticks):
+            out.extend(self.step())
+            if not self.queue and all(r is None for r in self.rows):
+                break
+        return out
+
+    def _finish_tick(self, active: list[int], nxt: np.ndarray) -> list[Request]:
         done = []
-        active = [i for i, r in enumerate(self.rows) if r is not None]
-        if not active:
-            return []
-        logits, self.state = self._decode(
-            self.params, jnp.asarray(self.tok), self.state,
-            jnp.asarray(self.pos))
-        nxt = np.asarray(jnp.argmax(logits[..., :self.cfg.vocab], -1))
         for i in active:
             r = self.rows[i]
             r.generated.append(int(self.tok[i, 0]))
@@ -99,13 +135,194 @@ class ContinuousBatcher:
                     (self.eos_id is not None and nxt[i] == self.eos_id)):
                 r.done = True
                 done.append(r)
-                self.rows[i] = None
+                self._release_row(i)
         return done
 
-    def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
-        out = []
-        for _ in range(max_ticks):
-            out.extend(self.step())
-            if not self.queue and all(r is None for r in self.rows):
+    def _release_row(self, i: int):
+        self.rows[i] = None
+        self.pos[i] = 0
+        self.tok[i, 0] = 0
+        if self.paged:
+            self.free_pages.extend(self.row_pages[i])
+            self.row_pages[i] = []
+            self.tables[i, :] = 0
+            # device table/length stay stale until the next _sync_device
+            # (before any page is reallocated) — the dead row's output is
+            # discarded in the meantime
+
+    # -- contiguous backend ------------------------------------------------
+    def _admit_rows(self) -> list[int]:
+        """Fill empty rows, deferring candidates that would overflow the
+        cache after a rebuild: the rebuild restarts *every* active row at the
+        group's padded history length S, so each row's S + remaining decode
+        budget must fit max_len — a long-prompt candidate can push a
+        mid-decode row (or itself) past the end otherwise."""
+        active = [r for r in self.rows if r is not None]
+        new = []
+        free = [i for i in range(self.batch) if self.rows[i] is None]
+        while free[len(new):] and self.queue:
+            cand = self.queue[0]                 # validated at submit()
+            group = active + [self.rows[i] for i in new] + [cand]
+            S = self._pad(max(len(r.prompt) + len(r.generated)
+                              for r in group))
+            remaining = lambda r: r.max_new_tokens - len(r.generated)
+            if any(S + remaining(r) > self.max_len for r in group):
+                break                      # defer until rows free up
+            i = free[len(new)]
+            self.rows[i] = self.queue.popleft()
+            new.append(i)
+        return new
+
+    def _step_contiguous(self) -> list[Request]:
+        newly = self._admit_rows()
+        active = [i for i, r in enumerate(self.rows) if r is not None]
+        if not active:
+            return []
+        if newly:
+            # Rebuild: the contiguous cache has ONE scalar length, so every
+            # row must share a position. Re-prefill all active histories
+            # (prompt + generated) left-padded to a common block multiple;
+            # this prefills mid-stream admissions and scrubs recycled rows.
+            self.state = self._init_state(self.batch)
+            hist = {i: np.concatenate(
+                [self.rows[i].prompt,
+                 np.asarray(self.rows[i].generated, np.int32)])
+                for i in active}
+            S = self._pad(max(len(h) for h in hist.values()))
+            toks = np.zeros((self.batch, S), np.int32)
+            for i, h in hist.items():
+                toks[i, S - len(h):] = h          # left-pad
+            logits, self.state = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, self.state)
+            nxt = self._sample(logits)
+            for i in active:
+                self.tok[i, 0] = nxt[i]
+                self.pos[i] = S
+        logits, self.state = self._decode(
+            self.params, jnp.asarray(self.tok), self.state,
+            jnp.asarray(self.pos))
+        return self._finish_tick(active, self._sample(logits))
+
+    # -- paged backend -----------------------------------------------------
+    def _pages_needed(self, prompt_pad: int, max_new: int) -> int:
+        return -(-(prompt_pad + max_new) // self.page_size)
+
+    def _admit_paged(self) -> tuple[list[int], int]:
+        """Admit queued requests into free rows while the free-page budget
+        covers every selected row's padded prompt + decode reservation.
+        Returns (admitted row ids, common padded prompt length).
+
+        An admission group shares one padded prompt length S, so only
+        requests whose own padded length equals the group's join it; others
+        wait for a later tick. Padding a short prompt up to a longer row's S
+        would make it attend over pad tokens — diverging from a solo run —
+        and inflate its page reservation (DESIGN.md §6)."""
+        free_rows = [i for i in range(self.batch) if self.rows[i] is None]
+        selected: list[Request] = []
+        S = 0
+        while free_rows[len(selected):] and self.queue:
+            cand = self.queue[0]                 # validated at submit()
+            own = self._pad(len(cand.prompt))
+            if selected and own != S:
+                break                     # different pad length: next group
+            need = sum(self._pages_needed(own, r.max_new_tokens)
+                       for r in selected + [cand])
+            if need > len(self.free_pages):
                 break
-        return out
+            selected.append(self.queue.popleft())
+            S = own
+        newly = []
+        for req in selected:
+            i = free_rows[len(newly)]
+            self.rows[i] = req
+            n = self._pages_needed(S, req.max_new_tokens)
+            ids = [self.free_pages.pop() for _ in range(n)]
+            self.row_pages[i] = ids
+            self.tables[i, :] = 0
+            self.tables[i, :n] = ids
+            newly.append(i)
+        return newly, S
+
+    def _sync_device(self):
+        """Push host allocator state (page tables, per-row lengths, free
+        list) into every layer's cache leaf. Lengths: active rows mirror
+        self.pos; freed rows reset to 0."""
+        lengths = np.where(np.asarray([r is not None for r in self.rows]),
+                           self.pos, 0).astype(np.int32)
+        stack = np.zeros((self.n_pages,), np.int32)
+        stack[:len(self.free_pages)] = self.free_pages
+        n_free = np.int32(len(self.free_pages))
+        tables = self.tables
+
+        def upd(c: PagedQuantizedKVCache) -> PagedQuantizedKVCache:
+            pool = dataclasses.replace(
+                c.pool,
+                free_stack=jnp.broadcast_to(jnp.asarray(stack),
+                                            c.pool.free_stack.shape),
+                n_free=jnp.broadcast_to(jnp.asarray(n_free),
+                                        c.pool.n_free.shape))
+            return dataclasses.replace(
+                c, pool=pool,
+                page_table=jnp.broadcast_to(jnp.asarray(tables),
+                                            c.page_table.shape),
+                length=jnp.broadcast_to(jnp.asarray(lengths), c.length.shape))
+
+        def rec(x):
+            if isinstance(x, PagedQuantizedKVCache):
+                return upd(x)
+            if isinstance(x, dict):
+                return {k: rec(v) for k, v in x.items()}
+            if isinstance(x, (list, tuple)):
+                return type(x)(rec(v) for v in x)
+            return x
+
+        self.state = rec(self.state)
+
+    def _step_paged(self) -> list[Request]:
+        newly, S = self._admit_paged()
+        active = [i for i, r in enumerate(self.rows) if r is not None]
+        if not active:
+            return []
+        if self.state is None:
+            self.state = self._init_state(self.batch)
+        if newly:
+            self._sync_device()
+            toks = np.zeros((self.batch, S), np.int32)
+            mask = np.zeros((self.batch,), bool)
+            for i in newly:
+                p = self.rows[i].prompt
+                toks[i, S - len(p):] = p          # left-pad to the group S
+                mask[i] = True
+            logits, self.state = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, self.state,
+                jnp.asarray(mask))
+            nxt = self._sample(logits)
+            for i in newly:
+                self.tok[i, 0] = nxt[i]
+                self.pos[i] = S
+        row_mask = np.zeros((self.batch,), bool)
+        row_mask[active] = True                  # freeze empty rows' caches
+        logits, self.state = self._decode(
+            self.params, jnp.asarray(self.tok), self.state,
+            jnp.asarray(self.pos), jnp.asarray(row_mask))
+        done = self._finish_tick(active, self._sample(logits))
+        if done:
+            # zero freed rows' device tables/lengths and return their pages
+            # to the device free list immediately (keeps the device state an
+            # honest mirror for memory reports / checkpointing)
+            self._sync_device()
+        return done
+
+    # -- introspection -----------------------------------------------------
+    def pool_report(self) -> dict:
+        """Free/allocated/live page counts (paged mode only)."""
+        if not self.paged:
+            return {}
+        live = sum(-(-int(self.pos[i]) // self.page_size)
+                   for i, r in enumerate(self.rows) if r is not None)
+        allocated = (self.n_pages - 1) - len(self.free_pages)
+        return {"pages_total": self.n_pages - 1,
+                "pages_free": len(self.free_pages),
+                "pages_allocated": allocated,
+                "pages_live": live,
+                "utilization": live / max(allocated, 1)}

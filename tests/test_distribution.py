@@ -85,6 +85,31 @@ class TestParamShardings:
         kq = sh["p0"].k_q      # (n_groups, B, Hkv, T, D)
         assert kq.spec == P(None, "data", None, "model", None)
 
+    def test_paged_pool_specs(self):
+        """Page pool: pages replicated (any row may map any page), kv_heads
+        over model; tables/lengths batch-sharded; free list replicated."""
+        from repro.core import PagedQuantizedKVCache, QuantConfig
+        from repro.parallel.shard import paged_cache_specs
+        mesh = _mesh()
+        cfgq = QuantConfig(granularity="per_block", block_size=8)
+        cache = PagedQuantizedKVCache.init(8, 4, 64, 16, cfgq, n_pages=32)
+        specs = paged_cache_specs(cache, mesh)
+        assert specs.pool.k_q == P(None, None, "model", None)
+        assert specs.pool.k_s == P(None, "model", None)
+        assert specs.pool.free_stack == P(None)
+        assert specs.page_table == P("data", None)
+        assert specs.length == P("data")
+
+    def test_paged_pool_device_put(self):
+        from repro.core import PagedQuantizedKVCache, QuantConfig
+        from repro.parallel.shard import paged_cache_shardings
+        mesh = _mesh()
+        cfgq = QuantConfig(granularity="per_block", block_size=8)
+        cache = PagedQuantizedKVCache.init(8, 4, 64, 16, cfgq, n_pages=32)
+        sharded = jax.device_put(cache, paged_cache_shardings(cache, mesh))
+        assert sharded.pool.k_q.sharding.spec == P(None, None, "model", None)
+        assert sharded.page_table.sharding.spec == P("data", None)
+
 
 @needs_devices
 def test_sharded_train_step_runs():

@@ -51,6 +51,189 @@ def test_memory_report_paper_table1():
     assert rep["bf16_bytes"] == 2 * rep["int8_bytes"]
 
 
+def _solo_generate(params, cfg, prompt, max_new, *, paged):
+    b = ContinuousBatcher(params, cfg, batch=1, max_len=64, paged=paged)
+    b.submit(Request(uid=0, prompt=prompt, max_new_tokens=max_new))
+    done = b.run_to_completion(max_ticks=400)
+    assert len(done) == 1
+    return done[0].generated
+
+
+def test_contiguous_batcher_midstream_prefill_and_recycling():
+    """Rows admitted after the first tick must be prefilled, and a recycled
+    row must not leak the previous request's cache: with batch=1 every
+    request after the first is a mid-stream admission into a recycled row,
+    and each must match a fresh solo run exactly."""
+    cfg = get_config("internlm2_1_8b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(7))
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, cfg.vocab, (6,)).astype(np.int32)
+               for _ in range(3)]
+    solo = [_solo_generate(params, cfg, p, 4, paged=False) for p in prompts]
+    b = ContinuousBatcher(params, cfg, batch=1, max_len=64)
+    for i, p in enumerate(prompts):
+        b.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+    done = b.run_to_completion(max_ticks=400)
+    assert len(done) == 3
+    by_uid = {r.uid: r.generated for r in done}
+    for i in range(3):
+        assert by_uid[i] == solo[i], f"request {i} diverged from solo run"
+
+
+def test_paged_batcher_more_requests_than_rows():
+    """Acceptance: paged ContinuousBatcher with more queued requests than
+    rows completes everything, and mid-stream admissions (staggered
+    max_new_tokens force admissions while other rows are mid-decode) decode
+    exactly what a solo run decodes."""
+    cfg = get_config("internlm2_1_8b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(0, cfg.vocab, (6,)).astype(np.int32)
+               for _ in range(5)]
+    mnew = [6, 3, 5, 2, 4]
+    solo = [_solo_generate(params, cfg, p, m, paged=True)
+            for p, m in zip(prompts, mnew)]
+    b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True)
+    for i, (p, m) in enumerate(zip(prompts, mnew)):
+        b.submit(Request(uid=i, prompt=p, max_new_tokens=m))
+    done = b.run_to_completion(max_ticks=400)
+    assert len(done) == 5
+    by_uid = {r.uid: r.generated for r in done}
+    for i in range(5):
+        assert by_uid[i] == solo[i], f"request {i} diverged from solo run"
+    # all pages returned to the pool
+    rep = b.pool_report()
+    assert rep["pages_allocated"] == 0
+    assert rep["pages_free"] == rep["pages_total"]
+
+
+def test_paged_batcher_mixed_prompt_lengths_match_solo():
+    """Requests with different prompt lengths must not be padded into one
+    admission group (a short row padded to a long row's length would attend
+    over pad tokens); every request still matches its solo run exactly."""
+    cfg = get_config("internlm2_1_8b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.RandomState(4)
+    lens = [6, 38, 6, 14]
+    prompts = [rng.randint(0, cfg.vocab, (l,)).astype(np.int32)
+               for l in lens]
+    solo = [_solo_generate(params, cfg, p, 4, paged=True) for p in prompts]
+    b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True)
+    for i, p in enumerate(prompts):
+        b.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+    done = b.run_to_completion(max_ticks=400)
+    assert len(done) == 4
+    by_uid = {r.uid: r.generated for r in done}
+    for i in range(4):
+        assert by_uid[i] == solo[i], f"request {i} diverged from solo run"
+
+
+def test_contiguous_rebuild_defers_overflowing_admission():
+    """A mid-stream admission whose decode budget would not fit after the
+    rebuild (which restarts every row at the group's padded history length)
+    is deferred, not admitted into a cache it would overflow."""
+    cfg = get_config("internlm2_1_8b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.RandomState(5)
+    pa = rng.randint(0, cfg.vocab, (6,)).astype(np.int32)
+    pb = rng.randint(0, cfg.vocab, (6,)).astype(np.int32)
+    solo_b = _solo_generate_ml(params, cfg, pb, 24, 32)
+    b = ContinuousBatcher(params, cfg, batch=2, max_len=32)
+    b.submit(Request(uid=0, prompt=pa, max_new_tokens=16))
+    for _ in range(10):               # A mid-decode (history 8+10=18)
+        b.step()
+    # admitting B now would rebuild at S=pad(18)=24; 24+24 > 32 -> defer
+    b.submit(Request(uid=1, prompt=pb, max_new_tokens=24))
+    done = b.run_to_completion(max_ticks=400)
+    assert len(done) == 2
+    by_uid = {r.uid: r.generated for r in done}
+    assert len(by_uid[0]) == 16
+    assert by_uid[1] == solo_b        # B ran after A freed, uncorrupted
+
+
+def _solo_generate_ml(params, cfg, prompt, max_new, max_len):
+    b = ContinuousBatcher(params, cfg, batch=1, max_len=max_len)
+    b.submit(Request(uid=0, prompt=prompt, max_new_tokens=max_new))
+    return b.run_to_completion(max_ticks=400)[0].generated
+
+
+def test_batcher_rejects_oversized_request():
+    """Both backends reject a request whose padded prompt + max_new exceeds
+    max_len at submit() — once queued, admission must never fail (a raise
+    mid-admission would strand requests popped earlier in the same tick)."""
+    cfg = get_config("internlm2_1_8b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    for paged in (False, True):
+        b = ContinuousBatcher(params, cfg, batch=1, max_len=16, paged=paged)
+        good = Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=4)
+        b.submit(good)
+        with pytest.raises(ValueError, match="max_len"):
+            b.submit(Request(uid=1, prompt=np.arange(8, dtype=np.int32),
+                             max_new_tokens=20))
+        # the valid request is unaffected by the rejection
+        done = b.run_to_completion(max_ticks=100)
+        assert [r.uid for r in done] == [0]
+    # paged: a request that fits max_len but not the pool is also rejected
+    b = ContinuousBatcher(params, cfg, batch=1, max_len=64, paged=True,
+                          n_pages=2)
+    with pytest.raises(ValueError, match="pool"):
+        b.submit(Request(uid=2, prompt=np.arange(8, dtype=np.int32),
+                         max_new_tokens=24))
+
+
+def test_paged_batcher_admits_by_page_budget():
+    """With a pool that only fits one request's reservation, admission is
+    gated by free pages (not free rows) and the queue still drains."""
+    cfg = get_config("internlm2_1_8b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(0, cfg.vocab, (6,)).astype(np.int32)
+               for _ in range(3)]
+    solo = [_solo_generate(params, cfg, p, 4, paged=True) for p in prompts]
+    # one request needs ceil((8+4)/8)=2 pages; 3 allocatable pages => the
+    # second row can never be admitted concurrently... until a free.
+    b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True,
+                          n_pages=4)
+    for i, p in enumerate(prompts):
+        b.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+    saw_single_row = False
+    done = []
+    for _ in range(400):
+        done.extend(b.step())
+        active = sum(r is not None for r in b.rows)
+        if active == 1 and b.queue:
+            saw_single_row = True        # budget (not rows) limited admission
+        if not b.queue and all(r is None for r in b.rows):
+            break
+    assert len(done) == 3
+    assert saw_single_row
+    by_uid = {r.uid: r.generated for r in done}
+    for i in range(3):
+        assert by_uid[i] == solo[i]
+
+
+def test_memory_report_pool_utilization():
+    """kv_cache_memory_report reports allocated vs live pages for a paged
+    decode state."""
+    from repro.core import PagedQuantizedKVCache
+    cfg = get_config("internlm2_1_8b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True)
+    rng = np.random.RandomState(0)
+    b.submit(Request(uid=0, prompt=rng.randint(0, cfg.vocab, (6,))
+                     .astype(np.int32), max_new_tokens=12))
+    b.step()
+    cache = b.state["p0"]
+    assert isinstance(cache, PagedQuantizedKVCache)
+    rep = kv_cache_memory_report(cfg, batch=2, seq=64, paged_cache=cache)
+    assert rep["pool_pages_allocated"] == -(-(8 + 12) // 8)   # reservation
+    assert rep["pool_pages_live"] == 2          # 9 tokens after 1 decode
+    assert 0 < rep["pool_utilization"] <= 1
+    assert rep["pool_bytes_allocated"] == \
+        rep["pool_pages_allocated"] * rep["pool_page_bytes"]
+
+
 def test_decode_cache_stays_int8():
     """After many decode steps the cache storage remains int8 (no silent
     promotion)."""

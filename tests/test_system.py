@@ -115,7 +115,10 @@ def test_train_launcher_cli(tmp_path):
          "--seq", "32", "--ckpt-dir", str(tmp_path)],
         capture_output=True, text=True, timeout=600,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"}, cwd="/root/repo")
+             "HOME": "/root",
+             # without this the stripped env lets jax probe for a TPU
+             # runtime and the subprocess stalls for minutes
+             "JAX_PLATFORMS": "cpu"}, cwd="/root/repo")
     assert r.returncode == 0, r.stderr[-2000:]
     assert "step" in r.stdout
     from repro.checkpoint import latest_step
@@ -129,6 +132,6 @@ def test_serve_launcher_cli():
          "--prompt-len", "8", "--max-len", "64"],
         capture_output=True, text=True, timeout=600,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"}, cwd="/root/repo")
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"}, cwd="/root/repo")
     assert r.returncode == 0, r.stderr[-2000:]
     assert "completed 4/4" in r.stdout
