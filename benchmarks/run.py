@@ -1,5 +1,9 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# ``--json`` additionally writes BENCH_decode.json (machine-readable decode
+# perf: tokens/s, us/step, DMA-skip ratio for contiguous vs paged at two
+# length mixes) so the perf trajectory is tracked across PRs.
 import argparse
+import json
 import sys
 
 from benchmarks import (attention_error, bitwidth_ablation, e2e_decode,
@@ -24,6 +28,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-size workloads (up to 1B elements; slow on CPU)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="write the decode benchmark to BENCH_decode.json")
+    ap.add_argument("--json-path", default="BENCH_decode.json")
     args = ap.parse_args()
     failures = 0
     for name, mod in SUITES:
@@ -43,6 +50,15 @@ def main() -> None:
         except Exception as e:                        # pragma: no cover
             failures += 1
             print(f"{name},FAILED,{type(e).__name__}: {e}")
+    if args.json:
+        try:
+            data = e2e_decode.bench_json()
+            with open(args.json_path, "w") as f:
+                json.dump(data, f, indent=2)
+            print(f"# wrote {args.json_path}")
+        except Exception as e:                        # pragma: no cover
+            failures += 1
+            print(f"{args.json_path},FAILED,{type(e).__name__}: {e}")
     sys.exit(1 if failures else 0)
 
 

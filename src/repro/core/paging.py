@@ -43,6 +43,29 @@ from repro.core import quantization as Q
 SENTINEL_PAGE = 0   # never allocated; unmapped / masked writes land here
 
 
+def scatter_to_pool(k_q, k_s, v_q, v_s):
+    """Inverse of `gather_pages` for a dense row-major layout: pack every
+    block of a contiguous quantized cache (B, H, T, D) / scales (B, H, nb, D)
+    into pool arrays (1 + B*nb pages; page 0 stays the zero sentinel) plus
+    the page table mapping row b, logical block t -> page 1 + b*nb + t.
+    Used by tests/benchmarks to drive the paged kernel against a cache built
+    contiguously; page_size is inferred as T // nb."""
+    B, H, T, D = k_q.shape
+    nb = k_s.shape[2]
+    ps = T // nb
+
+    def q2p(x):             # (B, H, T, D) -> (B*nb, ps, H, D)
+        return x.reshape(B, H, nb, ps, D).transpose(0, 2, 3, 1, 4).reshape(
+            B * nb, ps, H, D)
+
+    def s2p(s):             # (B, H, nb, D) -> (B*nb, H, D)
+        return s.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B * nb, H, D)
+
+    pad = lambda a: jnp.concatenate([jnp.zeros_like(a[:1]), a], axis=0)
+    table = (1 + jnp.arange(B * nb, dtype=jnp.int32)).reshape(B, nb)
+    return (pad(q2p(k_q)), pad(s2p(k_s)), pad(q2p(v_q)), pad(s2p(v_s)), table)
+
+
 def gather_pages(pool_kq, pool_ks, pool_vq, pool_vs, page_table):
     """Materialize the contiguous cache layout from a page pool:
     int8 (B, H, NT*ps, D) + f32 scales (B, H, NT, D). Reference path — the

@@ -70,6 +70,8 @@ def quant_attention_decode(q, k_q, k_s, v_q, v_s, length, *, window=None,
     q (B, H, D); k_q/v_q (B, Hkv, T, D) int8; k_s/v_s (B, Hkv, nb, D) f32;
     length () or (B,) — absolute tokens written (ring caches: may exceed T);
     window — sliding-window size for ring caches (None = full).
+    The Pallas path is ONE flat-grid launch for the whole batch with
+    dead-block DMA skipping past each row's length (DESIGN.md §2).
     Returns (B, H, D) f32.
     """
     impl = resolve_impl(impl)
@@ -84,7 +86,8 @@ def quant_attention_decode(q, k_q, k_s, v_q, v_s, length, *, window=None,
 def quant_attention_decode_partials(q, k_q, k_s, v_q, v_s, length, *,
                                     window=None, impl: Impl = "auto"):
     """Flash partials (o_unnormalized, m, l) over the INT8 cache — used to
-    merge with the exact fp residual tail in blocked-scale decode."""
+    merge with the exact fp residual tail in blocked-scale decode. One
+    pallas_call over a (B, Hkv, NT) grid; no Python/vmap fan-out."""
     impl = resolve_impl(impl)
     if impl == "xla":
         return _decode_partials_xla(q, k_q, k_s, v_q, v_s, length, window)
@@ -103,6 +106,8 @@ def paged_attention_decode_partials(q, pool_kq, pool_ks, pool_vq, pool_vs,
     q (B, H, D); pool_kq/vq (P, ps, Hkv, D) int8; pool_ks/vs (P, Hkv, D) f32;
     page_table (B, NT) int32; lengths (B,) int32 — per-row valid tokens
     (pass the flushed prefix count; the residual tail merges separately).
+    Lengths also bound each row's page walk: the kernel never streams pages
+    (or reads table entries) past ceil(length / ps).
     Returns (o_unnormalized (B, H, D), m (B, H, 1), l (B, H, 1)).
     """
     impl = resolve_impl(impl)

@@ -23,6 +23,11 @@ def main(argv=None):
                     help="paged KV cache + page-budget admission")
     ap.add_argument("--pages", type=int, default=None,
                     help="pool size in pages (default: dense capacity)")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="max decode tokens per device dispatch (scanned "
+                         "decode loop; rounded down to a power of two); "
+                         "default: scan to the next completion boundary, "
+                         "1 = per-token ticks")
     args = ap.parse_args(argv)
 
     import jax
@@ -42,7 +47,7 @@ def main(argv=None):
     params = transformer.init_params(cfg, jax.random.PRNGKey(0))
     b = ContinuousBatcher(params, cfg, batch=args.batch,
                           max_len=args.max_len, paged=args.paged,
-                          n_pages=args.pages)
+                          n_pages=args.pages, chunk=args.chunk)
     rng = np.random.RandomState(0)
     for i in range(args.requests):
         b.submit(Request(uid=i,
@@ -55,7 +60,9 @@ def main(argv=None):
     total_toks = sum(len(r.generated) for r in done)
     print(f"[serve] completed {len(done)}/{args.requests} requests, "
           f"{total_toks} tokens in {dt:.1f}s "
-          f"({total_toks/dt:.1f} tok/s host-CPU)")
+          f"({total_toks/dt:.1f} tok/s host-CPU, "
+          f"{total_toks/max(b.ticks,1):.1f} tokens/dispatch "
+          f"over {b.ticks} ticks)")
     if args.paged:
         rep = b.pool_report()
         print(f"[serve] page pool: {rep['pages_total']} pages, "

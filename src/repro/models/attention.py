@@ -3,7 +3,9 @@
 Three entry points per layer:
     train(...)    — full causal (optionally sliding-window) attention, no cache
     prefill(...)  — causal attention over the prompt; quantizes K/V into cache
-    decode(...)   — one token vs the INT8 cache via the fused kernel (ops.py)
+    decode(...)   — one token vs the INT8 cache via the fused kernel (ops.py);
+                    both cache backends resolve to ONE flat-grid kernel launch
+                    for the whole batch with per-row dead-block DMA skipping
 
 RoPE / M-RoPE applied to q,k before caching (rotated keys are what the paper
 quantizes in serving systems: dequantized keys are directly dot-producted).
@@ -237,7 +239,8 @@ def _decode_blocked(q, cache: KV.QuantizedKVCache, *, window=None,
 def _decode_paged(q, cache: PG.PagedQuantizedKVCache, *, impl="auto"):
     """Paged analogue of _decode_blocked: fused page-table kernel over each
     row's flushed pages + exact fp residual tail, merged per row (rows flush
-    independently — lengths are per-row)."""
+    independently — lengths are per-row, and the kernel walks only each
+    row's live pages, never the table tail)."""
     ps = cache.page_size
     flushed = (cache.length // ps) * ps          # (B,) flushed per row
     n_tail = cache.length % ps

@@ -343,3 +343,29 @@ def decode_step(params, token, cfg: ModelConfig, state, pos, *,
     logits, state = _serve(params, token, cfg, state, positions, "decode",
                            row_mask)
     return logits[:, -1], state
+
+
+def decode_scan(params, token, cfg: ModelConfig, state, pos, *, steps: int,
+                row_mask=None):
+    """Greedy-decode `steps` tokens in ONE traced loop (`jax.lax.scan`) with
+    the cache state threaded functionally — a single device dispatch replaces
+    `steps` per-token dispatches (and their per-call argument pushes), which
+    is what the serving layer's chunked ticks and `greedy_generate` ride on.
+
+    `token` (B, 1) int32 is the *pending* token: already sampled, not yet fed
+    to the model. `pos` (B,) int32 is its position. `row_mask` (B,) bool is
+    held constant across the scan (paged caches: frozen rows never advance).
+
+    Returns (pending (B, 1), state, emitted (steps, B)): emitted[j] is the
+    token fed at step j — i.e. the generated sequence starting with `token` —
+    and `pending` is the next not-yet-fed sample, exactly as if decode_step
+    had been called `steps` times.
+    """
+    def body(carry, _):
+        tok, st, p = carry
+        logits, st = decode_step(params, tok, cfg, st, p, row_mask=row_mask)
+        nxt = jnp.argmax(logits[..., :cfg.vocab], -1).astype(jnp.int32)[:, None]
+        return (nxt, st, p + 1), tok[:, 0]
+    (token, state, pos), toks = jax.lax.scan(body, (token, state, pos),
+                                             length=steps)
+    return token, state, toks

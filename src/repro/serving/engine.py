@@ -65,32 +65,49 @@ def make_serve_fns(cfg: ModelConfig, *, max_len: int, paged: bool = False,
 def greedy_generate(params, cfg: ModelConfig, prompts: jax.Array, *,
                     steps: int, max_len: int | None = None):
     """Reference end-to-end generation (examples/serve.py): greedy decode
-    `steps` tokens after a batched prefill. Returns (B, steps) int32."""
+    `steps` tokens after a batched prefill. Returns (B, steps) int32.
+
+    The whole trajectory — prefill, prompt-remainder feed, and the decode
+    loop — is ONE jitted function: both token loops are `jax.lax.scan`s with
+    the cache state threaded functionally, so there is a single device
+    dispatch per call instead of one per token (the seed's per-token Python
+    loop re-pushed arguments and crossed the dispatch boundary every step).
+    """
     B, S = prompts.shape
     bs = (cfg.quant.block_size
           if cfg.quant.granularity == "per_block" else 8)
     max_len = max_len or (-(-(S + steps) // bs) * bs)
     init_state, prefill_fn, decode_fn = make_serve_fns(cfg, max_len=max_len)
-    state = init_state(B)
     # prefill wants a block-multiple prompt; feed the remainder via decode
     S0 = max(bs, (S // bs) * bs) if S >= bs else 0
-    decode_jit = jax.jit(decode_fn)
-    if S0:
-        logits, state = jax.jit(prefill_fn)(
-            params, {"tokens": prompts[:, :S0]}, state)
-    else:
-        logits = None
-    for j in range(S0, S):
-        logits, state = decode_jit(params, prompts[:, j][:, None], state,
-                                   jnp.full((B,), j, jnp.int32))
-    toks = []
-    tok = jnp.argmax(logits[..., :cfg.vocab], -1)[:, None]
-    for i in range(steps):
-        toks.append(tok[:, 0])
-        pos = jnp.full((B,), S + i, jnp.int32)
-        logits, state = decode_jit(params, tok, state, pos)
-        tok = jnp.argmax(logits[..., :cfg.vocab], -1)[:, None]
-    return jnp.stack(toks, axis=1)
+
+    @jax.jit
+    def generate(params, prompts):
+        state = init_state(B)
+        if S0:
+            logits, state = prefill_fn(params, {"tokens": prompts[:, :S0]},
+                                       state)
+        if S0 < S:
+            def feed(carry, tok):           # teacher-forced remainder
+                st, p = carry
+                lg, st = decode_fn(params, tok[:, None], st, p)
+                return (st, p + 1), lg
+            (state, _), logit_seq = jax.lax.scan(
+                feed, (state, jnp.full((B,), S0, jnp.int32)),
+                prompts[:, S0:].T)
+            logits = logit_seq[-1]
+
+        def step(carry, _):                 # greedy decode
+            tok, st, p = carry
+            lg, st = decode_fn(params, tok, st, p)
+            nxt = jnp.argmax(lg[..., :cfg.vocab], -1).astype(jnp.int32)[:, None]
+            return (nxt, st, p + 1), tok[:, 0]
+        tok0 = jnp.argmax(logits[..., :cfg.vocab], -1).astype(jnp.int32)[:, None]
+        _, toks = jax.lax.scan(
+            step, (tok0, state, jnp.full((B,), S, jnp.int32)), length=steps)
+        return toks.T
+
+    return generate(params, prompts.astype(jnp.int32))
 
 
 def _round8(n):

@@ -23,6 +23,18 @@ refilled from a request queue between device steps. Two backends:
 The device-side step functions are row-independent (engine.make_serve_fns),
 so all of this is host bookkeeping plus cheap device_put pushes of page
 tables / lengths between steps.
+
+Chunked scanned decode: instead of one device dispatch per token, a tick
+scans up to `chunk` decode steps in one `jax.lax.scan`
+(models/transformer.decode_scan) and post-processes the emitted tokens on
+the host. The chunk never exceeds the smallest remaining decode budget
+among active rows, so no row outruns its reservation; rows that hit EOS
+mid-chunk simply have their trailing tokens discarded (greedy decode is
+causal, so tokens before the EOS are unaffected by what was appended
+after). `chunk=None` (default) scans to the next completion boundary;
+`chunk=1` restores per-token ticks (tick == token, used by tests that
+observe scheduler state between individual tokens, and by the encoder-
+decoder family which has no scan path).
 """
 from __future__ import annotations
 
@@ -59,12 +71,18 @@ class ContinuousBatcher:
 
     def __init__(self, params, cfg, *, batch: int, max_len: int,
                  eos_id: int | None = None, paged: bool = False,
-                 n_pages: int | None = None):
+                 n_pages: int | None = None, chunk: int | None = None):
         from repro.serving.engine import make_serve_fns
         self.params, self.cfg = params, cfg
         self.batch, self.max_len = batch, max_len
         self.eos_id = eos_id
         self.paged = paged
+        # decode tokens per device dispatch: None = scan to the next
+        # completion boundary; 1 = per-token ticks (also forced for encdec,
+        # which has no transformer decode_scan path)
+        self.chunk = 1 if cfg.family == "encdec" else chunk
+        self._chunk_fns: dict[int, Any] = {}
+        self.ticks = 0
         self.block = (cfg.quant.block_size
                       if cfg.quant.granularity == "per_block" else 8)
         if paged:
@@ -110,8 +128,11 @@ class ContinuousBatcher:
         return np.asarray(jnp.argmax(logits[..., :self.cfg.vocab], -1))
 
     def step(self) -> list[Request]:
-        """One scheduler tick: admit, prefill admitted rows, decode one token
-        for all active rows. Returns requests completed this tick."""
+        """One scheduler tick: admit, prefill admitted rows, decode one
+        chunk (up to `chunk` tokens, one device dispatch) for all active
+        rows. Returns requests completed this tick. `self.ticks` counts
+        ticks taken since construction (tokens/dispatch telemetry)."""
+        self.ticks += 1
         if self.paged:
             return self._step_paged()
         return self._step_contiguous()
@@ -137,6 +158,81 @@ class ContinuousBatcher:
                 done.append(r)
                 self._release_row(i)
         return done
+
+    # -- chunked scanned decode --------------------------------------------
+    _EOS_CHUNK_CAP = 8
+
+    def _chunk_len(self, active: list[int]) -> int:
+        """Decode steps for this tick's scan: bounded by the smallest
+        remaining budget among active rows (no row outruns its page
+        reservation / max_new), then rounded down to a power of two so the
+        set of compiled scan lengths stays O(log max_new). With an eos_id
+        configured, rows can finish long before their budget — discarded
+        scan tail + slot held past EOS — so the auto chunk is additionally
+        capped to bound that waste."""
+        rem = min(self.rows[i].max_new_tokens - len(self.rows[i].generated)
+                  for i in active)
+        n = rem if self.chunk is None else min(self.chunk, rem)
+        if self.eos_id is not None and self.chunk is None:
+            n = min(n, self._EOS_CHUNK_CAP)
+        n = max(n, 1)
+        return 1 << (n.bit_length() - 1)
+
+    def _chunk_fn(self, n: int):
+        fn = self._chunk_fns.get(n)
+        if fn is None:
+            from repro.models import transformer as T
+            cfg = self.cfg
+            if self.paged:
+                def run(params, tok, state, pos, row_mask):
+                    return T.decode_scan(params, tok, cfg, state, pos,
+                                         steps=n, row_mask=row_mask)
+            else:
+                def run(params, tok, state, pos):
+                    return T.decode_scan(params, tok, cfg, state, pos,
+                                         steps=n)
+            fn = self._chunk_fns[n] = jax.jit(run)
+        return fn
+
+    def _finish_chunk(self, active: list[int], toks: np.ndarray,
+                      pending: np.ndarray) -> list[Request]:
+        """Host bookkeeping after an n-step scan: `toks` (n, B) are the
+        tokens fed at each step (the generated stream), `pending` (B, 1) the
+        next not-yet-fed sample. Rows completing mid-chunk (EOS / budget)
+        release immediately; their trailing chunk tokens are discarded."""
+        n = toks.shape[0]
+        done = []
+        for i in active:
+            r = self.rows[i]
+            finished = False
+            for j in range(n):
+                r.generated.append(int(toks[j, i]))
+                nxt = toks[j + 1, i] if j + 1 < n else pending[i, 0]
+                if (len(r.generated) >= r.max_new_tokens or
+                        (self.eos_id is not None and nxt == self.eos_id)):
+                    r.done = finished = True
+                    done.append(r)
+                    self._release_row(i)
+                    break
+            if not finished:
+                self.tok[i, 0] = pending[i, 0]
+                self.pos[i] += n
+        return done
+
+    def _decode_tick(self, active: list[int],
+                     row_mask: np.ndarray | None = None) -> list[Request]:
+        """Decode one chunk for the active rows and run host bookkeeping."""
+        n = self._chunk_len(active)
+        args = (self.params, jnp.asarray(self.tok), self.state,
+                jnp.asarray(self.pos))
+        if row_mask is not None:
+            args += (jnp.asarray(row_mask),)
+        if n == 1:          # per-token path (chunk=1 / encdec)
+            logits, self.state = self._decode(*args)
+            return self._finish_tick(active, self._sample(logits))
+        pending, self.state, toks = self._chunk_fn(n)(*args)
+        return self._finish_chunk(active, np.asarray(toks),
+                                  np.asarray(pending))
 
     def _release_row(self, i: int):
         self.rows[i] = None
@@ -198,10 +294,7 @@ class ContinuousBatcher:
             for i in active:
                 self.tok[i, 0] = nxt[i]
                 self.pos[i] = S
-        logits, self.state = self._decode(
-            self.params, jnp.asarray(self.tok), self.state,
-            jnp.asarray(self.pos))
-        return self._finish_tick(active, self._sample(logits))
+        return self._decode_tick(active)
 
     # -- paged backend -----------------------------------------------------
     def _pages_needed(self, prompt_pad: int, max_new: int) -> int:
@@ -302,10 +395,7 @@ class ContinuousBatcher:
                 self.pos[i] = S
         row_mask = np.zeros((self.batch,), bool)
         row_mask[active] = True                  # freeze empty rows' caches
-        logits, self.state = self._decode(
-            self.params, jnp.asarray(self.tok), self.state,
-            jnp.asarray(self.pos), jnp.asarray(row_mask))
-        done = self._finish_tick(active, self._sample(logits))
+        done = self._decode_tick(active, row_mask)
         if done:
             # zero freed rows' device tables/lengths and return their pages
             # to the device free list immediately (keeps the device state an

@@ -132,6 +132,118 @@ def test_partials_merge_equals_full():
                                rtol=3e-5, atol=3e-5)
 
 
+# -- length-aware flat-grid decode (ISSUE 2) --------------------------------
+
+def _quantized_cache(B=4, Hkv=2, G=3, T=256, D=64, block=64, seed=7):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Hkv * G, D))
+    k = jax.random.normal(ks[1], (B, Hkv, T, D))
+    v = jax.random.normal(ks[2], (B, Hkv, T, D))
+    kq, kss = Q.quantize_blocked(k, block)
+    vq, vs = Q.quantize_blocked(v, block)
+    return q, kq, kss, vq, vs
+
+
+@pytest.mark.parametrize("length", [0, 1, 63, 64, 256])   # {0,1,bt-1,bt,max}
+def test_flat_decode_length_edges_match_xla(length):
+    """Normalized flat-grid output vs the XLA reference at the block-edge
+    lengths where the index_map clamp changes behaviour (bt=64, T=256)."""
+    q, kq, kss, vq, vs = _quantized_cache()
+    ln = jnp.asarray(length, jnp.int32)
+    out = QA.quant_attention_decode(q, kq, kss, vq, vs, ln, interpret=True)
+    expect = ops.quant_attention_decode(q, kq, kss, vq, vs, ln, impl="xla")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-2, atol=2e-2)
+    if length == 0:
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_flat_decode_ragged_lengths_match_seed_kernel():
+    """Ragged per-row lengths through ONE flat-grid launch must match the
+    seed per-(row, head) vmap fan-out bit-for-bit (same kernel math; only
+    the launch geometry and DMA schedule changed)."""
+    q, kq, kss, vq, vs = _quantized_cache()
+    lengths = jnp.asarray([0, 1, 200, 256], jnp.int32)
+    o, m, l = QA.quant_attention_decode_partials(q, kq, kss, vq, vs, lengths,
+                                                 interpret=True)
+    ov, mv, lv = QA.quant_attention_decode_partials_vmap(
+        q, kq, kss, vq, vs, lengths, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(ov))
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mv))
+    np.testing.assert_array_equal(np.asarray(l), np.asarray(lv))
+
+
+def test_flat_decode_ring_wrap_window_matches_xla():
+    """Ring caches: absolute lengths beyond T with a sliding window — age
+    masking must survive the flat grid + DMA clamp (clamping is by live
+    *slots*, which is all of T once the ring wraps)."""
+    q, kq, kss, vq, vs = _quantized_cache()
+    lengths = jnp.asarray([300, 257, 256, 512], jnp.int32)   # all wrapped
+    out = QA.quant_attention_decode(q, kq, kss, vq, vs, lengths, window=100,
+                                    interpret=True)
+    expect = ops.quant_attention_decode(q, kq, kss, vq, vs, lengths,
+                                        window=100, impl="xla")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_flat_decode_skip_dead_is_invisible():
+    """DMA-level dead-block skipping must be numerically invisible: clamped
+    steps stream a stale tile but never compute on it."""
+    q, kq, kss, vq, vs = _quantized_cache()
+    lengths = jnp.asarray([0, 1, 100, 192], jnp.int32)
+    a = QA.quant_attention_decode_partials(q, kq, kss, vq, vs, lengths,
+                                           skip_dead=True, interpret=True)
+    b = QA.quant_attention_decode_partials(q, kq, kss, vq, vs, lengths,
+                                           skip_dead=False, interpret=True)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_paged_decode_ragged_lengths_and_bounded_walk():
+    """Paged kernel at ragged flushed lengths (incl. 0) vs the XLA gather
+    reference, and skip_dead (bounded page walk) must be invisible."""
+    from repro.core.paging import scatter_to_pool
+    q, kq, kss, vq, vs = _quantized_cache()
+    pk, pks, pv, pvs, table = scatter_to_pool(kq, kss, vq, vs)
+    flushed = jnp.asarray([0, 64, 128, 256], jnp.int32)
+    o, m, l = QA.paged_attention_decode_partials(q, pk, pks, pv, pvs, table,
+                                                 flushed, interpret=True)
+    out = o / jnp.maximum(l, 1e-30)
+    expect = ops.paged_attention_decode(q, pk, pks, pv, pvs, table, flushed,
+                                        impl="xla")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)   # length-0 row
+    o2, m2, l2 = QA.paged_attention_decode_partials(
+        q, pk, pks, pv, pvs, table, flushed, skip_dead=False, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(o2))
+    np.testing.assert_array_equal(np.asarray(l), np.asarray(l2))
+
+
+def test_flat_decode_is_single_pallas_call():
+    """Acceptance: quant_attention_decode_partials issues exactly ONE
+    pallas_call for the whole batch — no Python/vmap fan-out."""
+    q, kq, kss, vq, vs = _quantized_cache()
+    lengths = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda *a: QA.quant_attention_decode_partials(*a, interpret=True))(
+        q, kq, kss, vq, vs, lengths)
+    assert str(jaxpr).count("pallas_call[") == 1
+    # and the whole batch flows through it: the (B, Hkv, NT) grid, not vmap
+    assert "vmapped_dims=()" in str(jaxpr)
+
+
+def test_dma_skip_ratio_metric():
+    assert QA.dma_skip_ratio(np.full(4, 256), 64, 256) == 0.0
+    assert QA.dma_skip_ratio(np.full(4, 64), 64, 256) == 0.75
+    # length 0 still revisits one block (the clamp floor)
+    assert QA.dma_skip_ratio(np.asarray([0, 256]), 64, 256) == \
+        pytest.approx(3 / 8)
+    # ring: absolute length beyond max_len clamps to max_len
+    assert QA.dma_skip_ratio(np.asarray([512, 300]), 64, 256) == 0.0
+
+
 @pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
 def test_ops_dispatch_consistency(impl):
     x = jax.random.normal(jax.random.PRNGKey(6), (256, 128))

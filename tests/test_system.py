@@ -65,14 +65,29 @@ def test_training_with_grad_compression_tracks_uncompressed():
 def test_quantized_vs_finer_cache_generation_agreement():
     """Greedy generations with coarse (paper per-channel) and fine
     (per-block-8) caches agree on most tokens — the paper's 'minimal impact
-    on downstream behaviour' claim at system level."""
+    on downstream behaviour' claim at system level.
+
+    The model is briefly trained first: at random init the logit argmax
+    margins are noise-level, so agreement between two quantizations was a
+    coin flip (the historical 0.59-vs-0.7 flake). A few steps on the
+    structured synthetic data sharpen the margins the claim presumes, and
+    prompts are drawn from that training distribution."""
     import dataclasses
     from repro.core.quantization import QuantConfig
     from repro.serving import greedy_generate
 
     base = get_config("llama3_2_3b", smoke=True)
     params = T.init_params(base, jax.random.PRNGKey(3))
-    prompts = jax.random.randint(jax.random.PRNGKey(4), (4, 8), 0, base.vocab)
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(
+        base, AdamWConfig(lr=1e-3, warmup_steps=3, total_steps=40)))
+    data = SyntheticLM(DataConfig(seq_len=64, global_batch=8,
+                                  vocab=base.vocab, seed=1))
+    for i in range(25):
+        params, opt, _ = step(params, opt,
+                              {k: jnp.asarray(v) for k, v in
+                               data.batch_at(i).items()})
+    prompts = jnp.asarray(data.batch_at(100)["tokens"][:4, :8])
     cfg_pc = dataclasses.replace(base, quant=QuantConfig(
         granularity="per_channel"))
     cfg_fine = dataclasses.replace(base, quant=QuantConfig(
@@ -80,7 +95,7 @@ def test_quantized_vs_finer_cache_generation_agreement():
     out_pc = greedy_generate(params, cfg_pc, prompts, steps=8)
     out_fine = greedy_generate(params, cfg_fine, prompts, steps=8)
     agreement = float(jnp.mean((out_pc == out_fine).astype(jnp.float32)))
-    assert agreement >= 0.7, agreement
+    assert agreement >= 0.9, agreement
 
 
 def test_microbatched_step_matches_full_batch():
