@@ -8,7 +8,8 @@ import sys
 
 from benchmarks import (attention_error, bitwidth_ablation, e2e_decode,
                         error_bench, kernel_bench, kernel_variants,
-                        memory_table, paged_vs_contiguous, perplexity_delta)
+                        memory_table, paged_vs_contiguous, perplexity_delta,
+                        prefix_cache)
 
 SUITES = [
     ("table1_memory", memory_table),
@@ -20,6 +21,7 @@ SUITES = [
     ("beyond_paper_bitwidth_ablation", bitwidth_ablation),
     ("beyond_paper_perplexity_delta", perplexity_delta),
     ("beyond_paper_paged_vs_contiguous", paged_vs_contiguous),
+    ("beyond_paper_prefix_cache", prefix_cache),
 ]
 
 

@@ -7,10 +7,12 @@ from repro.core.quantization import (QMAX, QuantConfig, attention_score_error,
 from repro.core.kvcache import (KVCacheLike, QuantizedKVCache,
                                 fp_cache_append, fp_cache_init,
                                 fp_cache_prefill)
-from repro.core.paging import PagePool, PagedQuantizedKVCache
+from repro.core.paging import (HostPageAllocator, PagePool,
+                               PagedQuantizedKVCache, chain_hashes)
 
 __all__ = [
-    "KVCacheLike", "PagePool", "PagedQuantizedKVCache",
+    "HostPageAllocator", "KVCacheLike", "PagePool", "PagedQuantizedKVCache",
+    "chain_hashes",
     "QMAX", "QuantConfig", "QuantizedKVCache", "attention_score_error",
     "compute_scales", "dequantize", "dequantize_blocked", "fake_quant",
     "fp_cache_append", "fp_cache_init", "fp_cache_prefill", "l2_error",

@@ -6,19 +6,25 @@ Paging (vLLM-style) breaks the cache into fixed-size pages owned by a shared
 pool; each sequence holds a page table mapping logical token blocks to
 physical pages, so capacity is bounded by *actual* tokens (DESIGN.md §5).
 
-Two pytrees:
+Two device pytrees plus one host-side policy object:
 
-``PagePool`` — the physical storage + allocator state:
+``PagePool`` — the physical storage + allocator state (DESIGN.md §5):
     k_q, v_q    int8  (n_pages, page_size, H_kv, D)
     k_s, v_s    f32   (n_pages, H_kv, D)    one scale row per page
     free_stack  int32 (n_pages,)            free page ids; top = n_free-1
     n_free      int32 ()
 
-``PagedQuantizedKVCache`` — a batched *view* into one pool:
+``PagedQuantizedKVCache`` — a batched *view* into one pool (DESIGN.md §5):
     pool        PagePool
     page_table  int32 (B, max_blocks)       physical page per logical block
     resid_k/v   ref_dtype (B, H_kv, page_size, D)  unquantized current page
     length      int32 (B,)                  per-row tokens written
+
+``HostPageAllocator`` — the host-authoritative allocation policy
+(DESIGN.md §7): free list, per-page refcounts, the content-hash index that
+backs automatic prefix caching, and the LRU of evictable cached pages. The
+scheduler owns one instance and mirrors its state into the device pytrees
+between steps; nothing on the device ever sees a refcount.
 
 Key invariants:
   * page_size == quantization block size: one scale row per page, so scales
@@ -29,18 +35,245 @@ Key invariants:
   * `length` is per-row (unlike the contiguous cache's scalar): rows live on
     independent timelines, which is what makes real continuous batching
     possible (serving/scheduler.py).
+  * A page is only ever written by the flush (or prefill scatter) that fills
+    it; flushed pages are immutable. Sharing therefore never needs a device
+    copy: copy-on-write is a host-side *retarget* of a table entry before
+    the flush, and the fp residual already holds the full page content
+    (DESIGN.md §7).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from collections import OrderedDict
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import quantization as Q
 
 SENTINEL_PAGE = 0   # never allocated; unmapped / masked writes land here
+
+
+# ---------------------------------------------------------------------------
+# Content-hash chain + host-side allocator (automatic prefix caching)
+# ---------------------------------------------------------------------------
+
+_CHAIN_SEED = b"repro-paged-int8-v1"
+
+
+def chain_hashes(tokens, page_size: int, parent: bytes | None = None):
+    """Hash chain over a page-aligned token stream (DESIGN.md §7).
+
+    ``tokens`` (T,) int array with T a multiple of ``page_size``. Returns a
+    list of ``T // page_size`` digests where digest ``i`` commits to *all*
+    tokens in pages ``0..i`` — ``h_i = H(h_{i-1} || tokens[i*ps:(i+1)*ps])``
+    — so equal digests imply equal full prefixes, which is what lets a page
+    be shared purely by digest equality. ``parent`` seeds the chain (pass a
+    previous digest to extend a stream, e.g. past the prompt into generated
+    tokens)."""
+    toks = np.ascontiguousarray(np.asarray(tokens, dtype=np.int32))
+    if toks.ndim != 1 or toks.size % page_size:
+        raise ValueError(f"token stream of shape {toks.shape} is not a "
+                         f"multiple of page_size={page_size}")
+    h = parent if parent is not None else _CHAIN_SEED
+    out = []
+    for i in range(toks.size // page_size):
+        blk = toks[i * page_size:(i + 1) * page_size].tobytes()
+        h = hashlib.blake2b(h + blk, digest_size=16).digest()
+        out.append(h)
+    return out
+
+
+class HostPageAllocator:
+    """Host-authoritative page allocator with optional prefix caching
+    (DESIGN.md §7).
+
+    Owns three disjoint populations of the pool's ``n_pages - 1``
+    allocatable pages (page 0 is the sentinel and never enters any of them):
+
+      * ``free``   — pages holding nothing; allocation pops from here first.
+      * ``ref``    — page -> refcount > 0 for pages referenced by >= 1 row.
+      * ``lru``    — *cached* pages: refcount 0 but still resident in the
+                     content-hash ``index``; evicted oldest-first only when
+                     ``alloc`` runs out of free pages (decref-with-reclaim).
+
+    The content-hash ``index`` maps chain digests (see `chain_hashes`) to
+    page ids; ``hash_of`` is its inverse. A registered page's contents must
+    never change — `ensure_private` is the copy-on-write gate callers use
+    before flushing into a page that is shared (refcount > 1) or indexed.
+
+    All state is plain Python (no jax); the scheduler mirrors it into the
+    device `PagePool` pytree between steps (serving/scheduler.py)."""
+
+    def __init__(self, n_pages: int, *, prefix_cache: bool = False):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the sentinel)")
+        self.n_pages = n_pages
+        self.prefix_cache = prefix_cache
+        self.free: list[int] = list(range(1, n_pages))
+        self.ref: dict[int, int] = {}
+        self.index: dict[bytes, int] = {}
+        self.hash_of: dict[int, bytes] = {}
+        self.lru: OrderedDict[int, None] = OrderedDict()
+        # counters surfaced via ContinuousBatcher.pool_report / benchmarks
+        self.hits = 0           # pages resolved from the index
+        self.misses = 0         # prompt pages that had to be computed
+        self.reclaims = 0       # cached pages evicted to satisfy alloc
+        self.cow_retargets = 0  # shared pages replaced before a flush
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        """Truly-free pages (the device ``free_stack`` mirrors exactly this
+        set — cached pages still hold data and are not on the device list)."""
+        return len(self.free)
+
+    @property
+    def n_cached(self) -> int:
+        """Evictable cached pages (refcount 0, still indexed)."""
+        return len(self.lru)
+
+    @property
+    def available(self) -> int:
+        """Pages an admission may claim: free now + evictable via reclaim."""
+        return len(self.free) + len(self.lru)
+
+    def available_after_adopt(self, chain) -> int:
+        """Pages allocatable once the digests in ``chain`` are adopted.
+        Adopted pages that currently sit on the LRU stop being evictable,
+        so gating an admission on plain `available` overcounts by exactly
+        those — adopt-then-alloc could raise mid-admission otherwise
+        (admission must never fail after a request is popped)."""
+        on_lru = sum(1 for h in chain if self.index.get(h) in self.lru)
+        return len(self.free) + len(self.lru) - on_lru
+
+    # -- allocation --------------------------------------------------------
+    def alloc(self, n: int) -> list[int]:
+        """Claim ``n`` pages (refcount 1 each). Free pages first; then the
+        LRU cache is reclaimed oldest-first, un-indexing each victim. Raises
+        if ``n > self.available`` — admission must gate on `available`."""
+        if n > self.available:
+            raise ValueError(f"alloc({n}) exceeds available={self.available}")
+        ids = [self.free.pop() for _ in range(min(n, len(self.free)))]
+        while len(ids) < n:                    # reclaim cached pages, LRU
+            page, _ = self.lru.popitem(last=False)
+            del self.index[self.hash_of.pop(page)]
+            self.reclaims += 1
+            ids.append(page)
+        for p in ids:
+            self.ref[p] = 1
+        return ids
+
+    def incref(self, page: int) -> None:
+        """Add a reference to an already-referenced page (fork / sharing)."""
+        if self.ref.get(page, 0) <= 0:
+            raise ValueError(f"incref of unreferenced page {page}")
+        self.ref[page] += 1
+
+    def release(self, pages) -> None:
+        """Drop one reference per page. A count reaching 0 sends the page to
+        the LRU if it is indexed (still hittable, evictable under pressure)
+        or back to the free list otherwise. A count below 0 is a refcounting
+        bug and raises."""
+        for p in pages:
+            c = self.ref.get(p, 0) - 1
+            if c < 0:
+                raise ValueError(f"refcount underflow on page {p}")
+            if c:
+                self.ref[p] = c
+                continue
+            del self.ref[p]
+            if p in self.hash_of:
+                self.lru[p] = None            # most-recently-used end
+            else:
+                self.free.append(p)
+
+    # -- prefix cache ------------------------------------------------------
+    def match(self, chain) -> int:
+        """Longest prefix of ``chain`` (list of digests) resident in the
+        index. Pure lookup: no refcounts change."""
+        if not self.prefix_cache:
+            return 0
+        n = 0
+        for h in chain:
+            if h not in self.index:
+                break
+            n += 1
+        return n
+
+    def adopt(self, chain) -> list[int]:
+        """Resolve each digest in ``chain`` to its resident page and take a
+        reference — cached (LRU) pages are revived, referenced pages just
+        gain a holder. Returns the page ids in chain order."""
+        ids = []
+        for h in chain:
+            p = self.index[h]
+            if p in self.lru:
+                del self.lru[p]
+                self.ref[p] = 1
+            else:
+                self.ref[p] += 1
+            ids.append(p)
+        self.hits += len(ids)
+        return ids
+
+    def register(self, page: int, digest: bytes) -> bool:
+        """Publish an immutable (fully flushed) page under its chain digest.
+        First writer wins: if the digest is already indexed (an identical
+        page exists) the call is a no-op and the caller's page stays a
+        private, unindexed duplicate. Returns True iff registered.
+        Re-registering a page under a second digest raises — it would
+        orphan the first index entry, which would dangle after reclaim and
+        resolve future hits to a reallocated page."""
+        if not self.prefix_cache or digest in self.index:
+            return False
+        if page in self.hash_of:
+            raise ValueError(f"page {page} is already registered; a page "
+                             f"holds exactly one digest (immutable content)")
+        self.index[digest] = page
+        self.hash_of[page] = digest
+        return True
+
+    # -- copy-on-write -----------------------------------------------------
+    def ensure_private(self, page: int) -> int | None:
+        """Copy-on-write gate: call before a row flushes into ``page``.
+
+        Returns None when the page is exclusively owned and unindexed (the
+        common case — flush may proceed in place). Otherwise allocates a
+        replacement page, drops this row's reference on the shared one, and
+        returns the replacement id; the caller must retarget the row's table
+        entry before the flush. No device copy is needed: the flush writes
+        the entire page from the row's fp residual (DESIGN.md §7)."""
+        if self.ref.get(page, 0) <= 1 and page not in self.hash_of:
+            return None
+        if not self.available:
+            # admission budgets pages_for_request() exactly; a CoW page is
+            # extra. Only fork_row creates flush-shared pages, so forking
+            # callers must leave headroom (one page per diverging fork).
+            raise ValueError(
+                "copy-on-write retarget needs a free page: leave pool "
+                "headroom when forking (DESIGN.md §7)")
+        new = self.alloc(1)[0]
+        self.release([page])
+        self.cow_retargets += 1
+        return new
+
+
+def live_page_count(tables, lengths, page_size: int) -> int:
+    """Distinct physical pages holding tokens across rows: ``tables``
+    (B, NT) int page table, ``lengths`` (B,) tokens per row (0 for empty
+    rows). Prefix-cache hits alias one page into several rows' tables, so
+    summing per-row block counts would double-count — occupancy reports
+    must count distinct pages (DESIGN.md §7). The sentinel never counts."""
+    live: set[int] = set()
+    for b in range(len(lengths)):
+        nb = -(-int(lengths[b]) // page_size)
+        live.update(int(p) for p in tables[b][:nb])
+    live.discard(SENTINEL_PAGE)
+    return len(live)
 
 
 def scatter_to_pool(k_q, k_s, v_q, v_s):
@@ -49,7 +282,7 @@ def scatter_to_pool(k_q, k_s, v_q, v_s):
     into pool arrays (1 + B*nb pages; page 0 stays the zero sentinel) plus
     the page table mapping row b, logical block t -> page 1 + b*nb + t.
     Used by tests/benchmarks to drive the paged kernel against a cache built
-    contiguously; page_size is inferred as T // nb."""
+    contiguously; page_size is inferred as T // nb. DESIGN.md §5."""
     B, H, T, D = k_q.shape
     nb = k_s.shape[2]
     ps = T // nb
@@ -68,8 +301,9 @@ def scatter_to_pool(k_q, k_s, v_q, v_s):
 
 def gather_pages(pool_kq, pool_ks, pool_vq, pool_vs, page_table):
     """Materialize the contiguous cache layout from a page pool:
-    int8 (B, H, NT*ps, D) + f32 scales (B, H, NT, D). Reference path — the
-    fused kernel gathers pages via its index_map instead."""
+    pool int8 (n_pages, ps, H, D) + table (B, NT) -> int8 (B, H, NT*ps, D)
+    + f32 scales (B, H, NT, D). Reference path — the fused kernel gathers
+    pages via its index_map instead (DESIGN.md §5)."""
     B, NT = page_table.shape
     _, ps, H, D = pool_kq.shape
 
@@ -88,7 +322,11 @@ def gather_pages(pool_kq, pool_ks, pool_vq, pool_vs, page_table):
          meta_fields=["page_size"])
 @dataclasses.dataclass
 class PagePool:
-    """Shared physical page storage + functional free-list allocator."""
+    """Shared physical page storage + functional free-list allocator
+    (DESIGN.md §5): k_q/v_q int8 (n_pages, page_size, H_kv, D), k_s/v_s f32
+    (n_pages, H_kv, D) — one scale row per page — plus an int32 free stack.
+    Device-side pytree; allocation *policy* (refcounts, prefix caching)
+    lives in the host-side `HostPageAllocator` (DESIGN.md §7)."""
     k_q: jax.Array          # int8 (n_pages, page_size, H_kv, D)
     v_q: jax.Array
     k_s: jax.Array          # f32  (n_pages, H_kv, D)
@@ -156,12 +394,16 @@ class PagePool:
          meta_fields=[])
 @dataclasses.dataclass
 class PagedQuantizedKVCache:
-    """Per-batch-row page-table view over a shared PagePool.
+    """Per-batch-row page-table view over a shared PagePool (DESIGN.md §5):
+    page_table int32 (B, max_blocks), fp residual (B, H_kv, page_size, D)
+    holding each row's current partial page, length int32 (B,) per-row
+    tokens written.
 
     Mirrors the contiguous `QuantizedKVCache` interface (prefill / append /
     dequantized / max_len / memory_bytes) so models/attention.py can swap the
     two behind one code path; granularity is always per_block with
-    block_size == page_size.
+    block_size == page_size. `prefill_at` / `fork_row` are the chunked-
+    prefill and sharing entry points of DESIGN.md §7.
     """
     pool: PagePool
     page_table: jax.Array   # int32 (B, max_blocks); SENTINEL_PAGE = unmapped
@@ -221,28 +463,16 @@ class PagedQuantizedKVCache:
                                    self.resid_v, self.length)))
 
     # -- prefill -----------------------------------------------------------
-    def prefill(self, k: jax.Array, v: jax.Array,
-                row_mask: jax.Array | None = None) -> "PagedQuantizedKVCache":
-        """Quantize a (B, H, T, D) prefix into this view's mapped pages.
-
-        T must be a multiple of page_size (pad upstream, as for the
-        contiguous cache). `row_mask` (B,) bool selects which rows are
-        written — unmasked rows keep their cache and length untouched, which
-        is what lets the scheduler prefill mid-stream admissions while other
-        rows are mid-decode (their scatters are redirected to the sentinel
-        page). The masked rows' first T//page_size table entries must be
-        mapped before the call.
-        """
+    def _scatter_chunk(self, k, v, ids):
+        """Quantize a (B, H, T, D) page-aligned chunk and scatter it into
+        physical pages ``ids`` (B, T//ps) int32. Returns the updated pool.
+        Shared by `prefill` (whole prompt at block 0) and `prefill_at`
+        (chunked prefill at a per-row block cursor, DESIGN.md §7)."""
         B, H, T, D = k.shape
         ps = self.page_size
-        if T % ps:
-            raise ValueError(f"T={T} not a multiple of page_size={ps}")
         nb = T // ps
         k_q, k_s = Q.quantize_blocked(k, ps)       # (B,H,T,D), (B,H,nb,D)
         v_q, v_s = Q.quantize_blocked(v, ps)
-        ids = self.page_table[:, :nb]              # (B, nb)
-        if row_mask is not None:
-            ids = jnp.where(row_mask[:, None], ids, SENTINEL_PAGE)
         flat_ids = ids.reshape(-1)                 # (B*nb,)
 
         def to_pages(x_q):
@@ -255,12 +485,34 @@ class PagedQuantizedKVCache:
             return s.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(
                 B * nb, H, D)
 
-        pool = dataclasses.replace(
+        return dataclasses.replace(
             self.pool,
             k_q=self.pool.k_q.at[flat_ids].set(to_pages(k_q)),
             v_q=self.pool.v_q.at[flat_ids].set(to_pages(v_q)),
             k_s=self.pool.k_s.at[flat_ids].set(scales_to_pages(k_s)),
             v_s=self.pool.v_s.at[flat_ids].set(scales_to_pages(v_s)))
+
+    def prefill(self, k: jax.Array, v: jax.Array,
+                row_mask: jax.Array | None = None) -> "PagedQuantizedKVCache":
+        """Quantize a (B, H, T, D) prefix into this view's mapped pages.
+
+        T must be a multiple of page_size (pad upstream, as for the
+        contiguous cache). `row_mask` (B,) bool selects which rows are
+        written — unmasked rows keep their cache and length untouched, which
+        is what lets the scheduler prefill mid-stream admissions while other
+        rows are mid-decode (their scatters are redirected to the sentinel
+        page). The masked rows' first T//page_size table entries must be
+        mapped before the call. Owned by DESIGN.md §5/§6; the prefix-cache
+        lookup-then-fill variant is `prefill_at` (DESIGN.md §7)."""
+        B, H, T, D = k.shape
+        ps = self.page_size
+        if T % ps:
+            raise ValueError(f"T={T} not a multiple of page_size={ps}")
+        nb = T // ps
+        ids = self.page_table[:, :nb]              # (B, nb)
+        if row_mask is not None:
+            ids = jnp.where(row_mask[:, None], ids, SENTINEL_PAGE)
+        pool = self._scatter_chunk(k, v, ids)
         T_arr = jnp.asarray(T, jnp.int32)
         if row_mask is None:
             length = jnp.full_like(self.length, T_arr)
@@ -273,6 +525,59 @@ class PagedQuantizedKVCache:
             resid_v = jnp.where(keep, 0, self.resid_v)
         return dataclasses.replace(self, pool=pool, length=length,
                                    resid_k=resid_k, resid_v=resid_v)
+
+    def prefill_at(self, k: jax.Array, v: jax.Array, start_block: jax.Array,
+                   row_mask: jax.Array | None = None
+                   ) -> "PagedQuantizedKVCache":
+        """Lookup-then-fill chunk write for chunked prefill (DESIGN.md §7).
+
+        Quantizes a page-aligned (B, H, T, D) chunk into logical blocks
+        ``[start_block, start_block + T//ps)`` of each row's table —
+        ``start_block`` (B,) int32 is the per-row block cursor (cache-hit
+        pages before it are already resident and are never rewritten).
+        Masked rows get ``length = start_block*ps + T`` and a cleared
+        residual (chunks are page-aligned so there is no fp tail); unmasked
+        rows scatter to the sentinel and keep their state, exactly as in
+        `prefill`."""
+        B, H, T, D = k.shape
+        ps = self.page_size
+        if T % ps:
+            raise ValueError(f"T={T} not a multiple of page_size={ps}")
+        nb = T // ps
+        blk = start_block[:, None] + jnp.arange(nb, dtype=jnp.int32)[None]
+        ids = jnp.take_along_axis(self.page_table, blk, axis=1)   # (B, nb)
+        if row_mask is not None:
+            ids = jnp.where(row_mask[:, None], ids, SENTINEL_PAGE)
+        pool = self._scatter_chunk(k, v, ids)
+        new_len = start_block.astype(jnp.int32) * ps + T
+        if row_mask is None:
+            length = new_len
+            resid_k = jnp.zeros_like(self.resid_k)
+            resid_v = jnp.zeros_like(self.resid_v)
+        else:
+            length = jnp.where(row_mask, new_len, self.length)
+            keep = row_mask[:, None, None, None]
+            resid_k = jnp.where(keep, 0, self.resid_k)
+            resid_v = jnp.where(keep, 0, self.resid_v)
+        return dataclasses.replace(self, pool=pool, length=length,
+                                   resid_k=resid_k, resid_v=resid_v)
+
+    # -- fork (shared pages + copy-on-write) -------------------------------
+    def fork_row(self, src: int, dst: int) -> "PagedQuantizedKVCache":
+        """Clone row ``src``'s view into row ``dst``: page table row, fp
+        residual, and length. Physical pages become shared between the two
+        rows — the caller must take references via
+        `HostPageAllocator.incref` and, before either row's next flush into
+        a still-shared page, retarget through
+        `HostPageAllocator.ensure_private` (copy-on-write; the residual
+        copy taken here IS the private page content, so no device copy is
+        ever needed). DESIGN.md §7."""
+        return dataclasses.replace(
+            self,
+            page_table=self.page_table.at[dst].set(self.page_table[src]),
+            resid_k=self.resid_k.at[dst].set(self.resid_k[src]),
+            resid_v=self.resid_v.at[dst].set(self.resid_v[src]),
+            length=self.length.at[dst].set(self.length[src]))
 
     # -- decode append -----------------------------------------------------
     def append(self, k: jax.Array, v: jax.Array,
@@ -325,6 +630,21 @@ class PagedQuantizedKVCache:
         (see `gather_pages`)."""
         return gather_pages(self.pool.k_q, self.pool.k_s, self.pool.v_q,
                             self.pool.v_s, self.page_table)
+
+    def dequantized_prefix(self, n_blocks: int, dtype=jnp.float32
+                           ) -> tuple[jax.Array, jax.Array]:
+        """Dequantized (k, v) of each row's first ``n_blocks`` logical
+        blocks: (B, H_kv, n_blocks*ps, D), no residual overlay. This is
+        chunked prefill's history read (DESIGN.md §7) — cursors are
+        page-aligned so there is no fp tail, and gathering only the blocks
+        below the dispatch's cursor bound avoids materializing max_len per
+        chunk. ``n_blocks`` is static (the scheduler rounds it to a power
+        of two to bound the compile set)."""
+        k_q, k_s, v_q, v_s = gather_pages(
+            self.pool.k_q, self.pool.k_s, self.pool.v_q, self.pool.v_s,
+            self.page_table[:, :n_blocks])
+        return (Q.dequantize_blocked(k_q, k_s, dtype=dtype),
+                Q.dequantize_blocked(v_q, v_s, dtype=dtype))
 
     def dequantized(self, dtype=jnp.float32) -> tuple[jax.Array, jax.Array]:
         """Full cache in `dtype` with the exact residual tail overlaid

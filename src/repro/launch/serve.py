@@ -28,7 +28,20 @@ def main(argv=None):
                          "decode loop; rounded down to a power of two); "
                          "default: scan to the next completion boundary, "
                          "1 = per-token ticks")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="automatic prefix caching: shared prompt pages "
+                         "resolve from a content-hash index instead of "
+                         "being re-quantized (implies --paged, "
+                         "DESIGN.md §7)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens per prefill dispatch (rounded up "
+                         "to a page multiple); enables chunked prefill "
+                         "admission so long prompts interleave with decode "
+                         "ticks (implies --paged; default with "
+                         "--prefix-cache: 4 pages)")
     args = ap.parse_args(argv)
+    if args.prefix_cache or args.prefill_chunk:
+        args.paged = True
 
     import jax
     import numpy as np
@@ -47,7 +60,9 @@ def main(argv=None):
     params = transformer.init_params(cfg, jax.random.PRNGKey(0))
     b = ContinuousBatcher(params, cfg, batch=args.batch,
                           max_len=args.max_len, paged=args.paged,
-                          n_pages=args.pages, chunk=args.chunk)
+                          n_pages=args.pages, chunk=args.chunk,
+                          prefix_cache=args.prefix_cache,
+                          prefill_chunk=args.prefill_chunk)
     rng = np.random.RandomState(0)
     for i in range(args.requests):
         b.submit(Request(uid=i,
@@ -66,7 +81,13 @@ def main(argv=None):
     if args.paged:
         rep = b.pool_report()
         print(f"[serve] page pool: {rep['pages_total']} pages, "
-              f"{rep['pages_free']} free after drain")
+              f"{rep['pages_free']} free after drain, "
+              f"{rep['pages_cached']} cached")
+        if args.prefix_cache:
+            print(f"[serve] prefix cache: hit rate "
+                  f"{rep['page_hit_rate']:.2f} "
+                  f"({rep['page_hits']} hits / {rep['page_misses']} misses), "
+                  f"{rep['reclaims']} reclaims")
     for r in done[:3]:
         print(f"  req {r.uid}: {r.generated}")
     return 0 if len(done) == args.requests else 1

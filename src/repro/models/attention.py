@@ -182,6 +182,74 @@ def prefill(p, x, cfg: ModelConfig, positions, cache, *, local: bool = False,
     return _merge_heads(p, out, cfg, x.dtype), cache
 
 
+def prefill_chunk(p, x, cfg: ModelConfig, positions, cache, *, row_mask=None,
+                  hist_blocks: int | None = None):
+    """One page-aligned prompt chunk under chunked prefill (DESIGN.md §7).
+
+    The chunk's queries attend causally within the chunk *plus* over the
+    row's already-resident prefix read back from its INT8 pages
+    (dequantized) — so a chunk computes identically whether the pages
+    before it were cache hits or were filled by this prompt's earlier
+    chunks, which is what makes hit and miss prefills bitwise-equal. The
+    chunk's K/V are then quantized into pages at the row's block cursor
+    (`PagedQuantizedKVCache.prefill_at`).
+
+    `x` (B, C, d) with C a multiple of page_size; `positions` (B, C)
+    absolute positions — positions[:, 0] is each row's resident-history
+    length (page-aligned by construction). `row_mask` (B,) bool as in
+    `prefill`. `hist_blocks` (static) bounds the history read: only that
+    many leading blocks are gathered/dequantized — the scheduler passes the
+    dispatch group's cursor bound so a chunk never materializes max_len;
+    None reads the full table, 0 skips history entirely (first chunk)."""
+    if not isinstance(cache, PG.PagedQuantizedKVCache):
+        raise ValueError("chunked prefill requires the paged cache")
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    hist_len = positions[:, 0].astype(jnp.int32)            # (B,)
+    nb = cache.max_blocks if hist_blocks is None else \
+        min(hist_blocks, cache.max_blocks)
+    hk = hv = None
+    if nb:
+        hk, hv = cache.dequantized_prefix(nb)       # (B, Hkv, nb*ps, D)
+    out = _chunk_attention(q, k, v, hk, hv, hist_len)
+    cache = cache.prefill_at(k.astype(jnp.float32), v.astype(jnp.float32),
+                             hist_len // cache.page_size, row_mask=row_mask)
+    return _merge_heads(p, out.astype(x.dtype), cfg, x.dtype), cache
+
+
+def _chunk_attention(q, k, v, hk, hv, hist_len):
+    """Exact fp attention of chunk queries over (resident history ‖ chunk).
+
+    q (B, H, C, hd); k/v (B, Hkv, C, hd) the chunk's own keys; hk/hv
+    (B, Hkv, HT, hd) the dequantized history view (None when the dispatch
+    has no resident history); hist_len (B,) tokens of real history per
+    row, <= HT. One softmax over the concatenated key axis — history
+    masked by hist_len, chunk masked causally."""
+    B, H, C, hd = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qg = q.reshape(B, Hkv, G, C, hd).astype(jnp.float32) * scale
+    lc = jnp.einsum("bhgcd,bhtd->bhgct", qg, k.astype(jnp.float32))
+    mc = (jnp.arange(C)[None, :] <= jnp.arange(C)[:, None])  # (C, C) causal
+    lc = jnp.where(mc[None, None, None], lc, -1e30)
+    if hk is None:
+        logits, vs = lc, v.astype(jnp.float32)
+    else:
+        HT = hk.shape[2]
+        lh = jnp.einsum("bhgcd,bhtd->bhgct", qg, hk.astype(jnp.float32))
+        mh = (jnp.arange(HT)[None, :] < hist_len[:, None])   # (B, HT)
+        lh = jnp.where(mh[:, None, None, None, :], lh, -1e30)
+        logits = jnp.concatenate([lh, lc], axis=-1)          # (..., HT+C)
+        vs = jnp.concatenate([hv.astype(jnp.float32),
+                              v.astype(jnp.float32)], axis=2)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    pexp = jnp.exp(logits - m)
+    pexp = jnp.where(logits <= -1e30 / 2, 0.0, pexp)
+    l = jnp.sum(pexp, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgct,bhtd->bhgcd", pexp / jnp.maximum(l, 1e-30), vs)
+    return out.reshape(B, H, C, hd)
+
+
 def decode(p, x, cfg: ModelConfig, positions, cache,
            *, local: bool = False, impl: str = "auto", row_mask=None):
     """One-token step against the INT8 cache (fused dequant attention).

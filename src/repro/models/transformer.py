@@ -257,13 +257,17 @@ def _round_block(n, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def _block_serve(p, x, kind, cfg, positions, cache, mode: str,
-                 row_mask=None):
+                 row_mask=None, hist_blocks=None):
     h = _norm(cfg, p["norm1"], x)
     if kind in ("attn", "local_attn", "moe"):
         if mode == "prefill":
             h, cache = attention.prefill(p["attn"], h, cfg, positions, cache,
                                          local=kind == "local_attn",
                                          row_mask=row_mask)
+        elif mode == "chunk":
+            h, cache = attention.prefill_chunk(p["attn"], h, cfg, positions,
+                                               cache, row_mask=row_mask,
+                                               hist_blocks=hist_blocks)
         else:
             h, cache = attention.decode(p["attn"], h, cfg, positions, cache,
                                         local=kind == "local_attn",
@@ -293,7 +297,7 @@ def _block_serve(p, x, kind, cfg, positions, cache, mode: str,
 
 
 def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str,
-           row_mask=None):
+           row_mask=None, hist_blocks=None):
     x, positions = _embed(params, tok, cfg, positions)
     period, n_groups, tail = _pattern_layout(cfg)
 
@@ -302,7 +306,7 @@ def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str,
         new_caches = {}
         for i, kind in enumerate(cfg.block_pattern):
             x, c = _block_serve(gparams[f"p{i}"], x, kind, cfg, positions,
-                                caches[f"p{i}"], mode, row_mask)
+                                caches[f"p{i}"], mode, row_mask, hist_blocks)
             new_caches[f"p{i}"] = c
         return x, new_caches
 
@@ -316,7 +320,7 @@ def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str,
     for j, bp in enumerate(params["tail"]):
         kind = cfg.block_kind(n_groups * period + j)
         x, c = _block_serve(bp, x, kind, cfg, positions, state["tail"][j],
-                            mode, row_mask)
+                            mode, row_mask, hist_blocks)
         new_state["tail"].append(c)
     logits = _head(params, x, cfg)
     return logits, new_state
@@ -331,6 +335,30 @@ def prefill(params, tokens, cfg: ModelConfig, state, *, positions=None,
     mid-stream admissions without touching rows that are mid-decode."""
     logits, state = _serve(params, tokens, cfg, state, positions, "prefill",
                            row_mask)
+    return logits[:, -1], state
+
+
+def prefill_chunk(params, tokens, cfg: ModelConfig, state, *, start,
+                  row_mask=None, hist_blocks=None):
+    """One chunked-prefill step (DESIGN.md §7): run a page-aligned prompt
+    chunk whose queries attend over the rows' already-resident INT8 pages
+    plus causally within the chunk, and quantize its K/V into pages at each
+    row's cursor.
+
+    `tokens` (B, C) int32 with C a multiple of the page size; `start` (B,)
+    int32 is each row's resident token count (the chunk's first absolute
+    position — page-aligned). `row_mask` (B,) bool restricts cache writes
+    as in `prefill`; unmasked rows' logits are garbage and must be ignored.
+    `hist_blocks` (static int) bounds the per-layer history gather to the
+    dispatch group's cursor — see `attention.prefill_chunk`. Returns
+    (last-position logits (B, Vp), new state). Paged caches only — the
+    scheduler's chunked admission is the caller (serving/scheduler.py).
+    """
+    C = tokens.shape[1]
+    positions = (start[:, None].astype(jnp.int32) +
+                 jnp.arange(C, dtype=jnp.int32)[None])
+    logits, state = _serve(params, tokens, cfg, state, positions, "chunk",
+                           row_mask, hist_blocks)
     return logits[:, -1], state
 
 

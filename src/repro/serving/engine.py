@@ -10,6 +10,12 @@ long_* shapes). Two cache backends (DESIGN.md §5):
     per-row page tables and lengths; prefill takes a ``row_mask`` so the
     scheduler slots new requests into finished rows while others are
     mid-decode (real continuous batching, serving/scheduler.py).
+
+The paged backend additionally supports chunked prefill
+(`make_chunk_prefill_fn`, DESIGN.md §7): prompts are fed one page-aligned
+chunk at a time with each chunk attending over the rows' already-resident
+INT8 pages — the admission path that automatic prefix caching (shared
+pages skip compute) and long-prompt interleaving ride on.
 """
 from __future__ import annotations
 
@@ -60,6 +66,34 @@ def make_serve_fns(cfg: ModelConfig, *, max_len: int, paged: bool = False,
                                            row_mask=row_mask)
 
     return init_state, prefill_fn, decode_fn
+
+
+def make_chunk_prefill_fn(cfg: ModelConfig, *, hist_blocks: int | None = None):
+    """Chunk-prefill step for chunked admission (DESIGN.md §7), closed over
+    cfg: ``chunk_prefill(params, tokens, state, start, row_mask)`` with
+    tokens (B, C) int32 (C a page multiple), start (B,) int32 resident
+    token counts, row_mask (B,) bool — returns (last-position logits
+    (B, Vp), new state). ``hist_blocks`` statically bounds each layer's
+    history gather (the scheduler keeps one jitted closure per bound, a
+    power-of-two set). Paged decoder-only stacks only."""
+    if cfg.family == "encdec":
+        raise ValueError("chunked prefill is decoder-only")
+    # same precondition init_decode_state(paged=True) enforces, restated
+    # here so the contract is local: _chunk_attention has no window/local
+    # handling and recurrent blocks have no multi-token chunk step
+    bad = [k for k in cfg.block_pattern if k not in ("attn", "moe")]
+    if bad or cfg.sliding_window:
+        raise ValueError(
+            f"chunked prefill requires a full-attention stack (got "
+            f"kinds={bad or cfg.block_pattern}, "
+            f"sliding_window={cfg.sliding_window})")
+
+    def chunk_prefill(params, tokens, state, start, row_mask):
+        return transformer.prefill_chunk(params, tokens, cfg, state,
+                                         start=start, row_mask=row_mask,
+                                         hist_blocks=hist_blocks)
+
+    return chunk_prefill
 
 
 def greedy_generate(params, cfg: ModelConfig, prompts: jax.Array, *,
@@ -139,7 +173,13 @@ def kv_cache_memory_report(cfg: ModelConfig, batch: int, seq: int,
         # allocator state is identical, so read the first
         n_free = int(np.asarray(pool.n_free).reshape(-1)[0])
         lengths = np.asarray(paged_cache.length).reshape(-1, batch)[0]
-        live = int(np.sum(-(-np.minimum(lengths, paged_cache.max_len) // ps)))
+        # distinct physical pages holding tokens (paging.live_page_count):
+        # with prefix caching one page may appear in several rows' tables
+        from repro.core.paging import live_page_count
+        nt = paged_cache.max_len // ps
+        tables = np.asarray(paged_cache.page_table).reshape(-1, batch, nt)[0]
+        live = live_page_count(
+            tables, np.minimum(lengths, paged_cache.max_len), ps)
         # one layer's pool bytes / n_pages == PagePool.page_bytes; divide out
         # any stacked leading layer dims first
         n = lambda a: a.size * a.dtype.itemsize

@@ -35,6 +35,19 @@ after). `chunk=None` (default) scans to the next completion boundary;
 `chunk=1` restores per-token ticks (tick == token, used by tests that
 observe scheduler state between individual tokens, and by the encoder-
 decoder family which has no scan path).
+
+Chunked prefill + automatic prefix caching (paged only, DESIGN.md §7):
+``prefill_chunk=N`` switches paged admission from group prefill to per-row
+chunked prefill — each admitted prompt is fed in page-aligned chunks of N
+tokens interleaved with decode ticks, so one long prompt never stalls the
+running batch, and the equal-padded-length grouping constraint disappears
+(rows prefill independently through a row mask). ``prefix_cache=True``
+additionally resolves full pages of each new prompt against a content-hash
+index (`core.paging.HostPageAllocator`): hit pages are adopted by
+refcount instead of recomputed and their chunks are skipped outright;
+completed requests' pages are released into an evictable LRU rather than
+freed, so future identical prefixes keep hitting until pool pressure
+reclaims them.
 """
 from __future__ import annotations
 
@@ -46,19 +59,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import paging as PG
 from repro.core.paging import PagedQuantizedKVCache
 
 
 def pages_for_request(prompt_len: int, max_new: int, page_size: int) -> int:
     """Pages one request reserves in paged mode: its prompt padded to a page
-    multiple plus the full decode budget. The single source for this policy
-    — submit() validation and benchmark pool sizing both use it."""
+    multiple plus the full decode budget (DESIGN.md §6). The single source
+    for this policy — submit() validation and benchmark pool sizing both
+    use it. Prefix-cache hits reduce what admission actually *allocates*,
+    never what submit() validates against (worst case: no hits)."""
     padded = -(-max(prompt_len, 1) // page_size) * page_size
     return -(-(padded + max_new) // page_size)
 
 
 @dataclasses.dataclass
 class Request:
+    """One generation request (DESIGN.md §6): prompt (S,) int32, a decode
+    budget, and the greedy-decoded output accumulated in `generated`."""
     uid: int
     prompt: np.ndarray              # (S,) int32
     max_new_tokens: int
@@ -67,11 +85,19 @@ class Request:
 
 
 class ContinuousBatcher:
-    """Greedy continuous batching over a fixed row pool."""
+    """Greedy continuous batching over a fixed pool of `batch` rows
+    (DESIGN.md §6). Backends: contiguous (rebuild on admit), paged
+    (`paged=True`: page-budget admission, masked prefill, per-row
+    timelines), and paged with chunked prefill / automatic prefix caching
+    (`prefill_chunk=` / `prefix_cache=True`, DESIGN.md §7). `submit` queues
+    requests; `step` runs one scheduler tick; `run_to_completion` drains
+    the queue and returns finished `Request`s."""
 
     def __init__(self, params, cfg, *, batch: int, max_len: int,
                  eos_id: int | None = None, paged: bool = False,
-                 n_pages: int | None = None, chunk: int | None = None):
+                 n_pages: int | None = None, chunk: int | None = None,
+                 prefix_cache: bool = False,
+                 prefill_chunk: int | None = None):
         from repro.serving.engine import make_serve_fns
         self.params, self.cfg = params, cfg
         self.batch, self.max_len = batch, max_len
@@ -85,16 +111,46 @@ class ContinuousBatcher:
         self.ticks = 0
         self.block = (cfg.quant.block_size
                       if cfg.quant.granularity == "per_block" else 8)
+        self.prefix_cache = bool(prefix_cache)
+        # chunked admission (DESIGN.md §7) replaces group prefill whenever
+        # prefix caching or an explicit prefill chunk size is requested
+        self.chunked_admission = bool(prefix_cache or prefill_chunk)
+        if self.chunked_admission and not paged:
+            raise ValueError("prefix caching / chunked prefill require the "
+                             "paged backend (paged=True)")
         if paged:
             self.page_size = cfg.quant.block_size
             self.max_blocks = max_len // self.page_size
             if n_pages is None:   # dense capacity; pass less to oversubscribe
                 n_pages = batch * self.max_blocks + 1
             self.n_pages = n_pages
-            # host-authoritative allocator state, pushed to device on change
-            self.free_pages: list[int] = list(range(1, n_pages))
+            # host-authoritative allocator (free list + refcounts + prefix
+            # index), mirrored to the device pytree on change
+            self.allocator = PG.HostPageAllocator(
+                n_pages, prefix_cache=self.prefix_cache)
             self.tables = np.zeros((batch, self.max_blocks), np.int32)
             self.row_pages: list[list[int]] = [[] for _ in range(batch)]
+            # copy-on-write scan before decode: armed only when something
+            # can actually share a flush target (fork_row wiring) — the
+            # scheduler itself never forks, so scanning every tick would
+            # guard a structurally impossible case (DESIGN.md §7)
+            self.cow_armed = False
+        if self.chunked_admission:
+            pc = prefill_chunk or 4 * self.page_size
+            self.prefill_chunk_tokens = -(-pc // self.page_size) * \
+                self.page_size
+            # one jitted chunk fn per static history bound (pow2 set)
+            self._chunk_prefill_fns: dict[int, Any] = {}
+            # id(request) -> (padded toks, chain): computed once per request,
+            # not once per tick while admission is blocked on pool pressure
+            self._admit_memo: dict[int, tuple] = {}
+            # rows mid-prompt: row -> {"toks", "cursor", "S"}
+            self.prefilling: dict[int, dict] = {}
+            # per-row padded token stream + its page hash chain, kept until
+            # release for decode-page promotion (prefix mode)
+            self.streams: list[np.ndarray | None] = [None] * batch
+            self.row_chain: list[list[bytes] | None] = [None] * batch
+            self._pf_rr = 0     # round-robin cursor over prefilling rows
         init_state, prefill, decode = make_serve_fns(
             cfg, max_len=max_len, paged=paged, n_pages=n_pages)
         self._prefill = jax.jit(prefill)
@@ -105,6 +161,12 @@ class ContinuousBatcher:
         self.pos = np.zeros((batch,), np.int32)
         self.tok = np.zeros((batch, 1), np.int32)
         self.state = None
+
+    @property
+    def free_pages(self) -> list[int]:
+        """Truly-free page ids (host authoritative; excludes evictable
+        cached pages — see `HostPageAllocator`)."""
+        return self.allocator.free
 
     def submit(self, req: Request):
         """Queue a request. Rejects impossible requests here — once queued,
@@ -223,6 +285,8 @@ class ContinuousBatcher:
                      row_mask: np.ndarray | None = None) -> list[Request]:
         """Decode one chunk for the active rows and run host bookkeeping."""
         n = self._chunk_len(active)
+        if self.paged and self.cow_armed and self._cow_retarget(active, n):
+            self._sync_device()          # retargeted tables before the scan
         args = (self.params, jnp.asarray(self.tok), self.state,
                 jnp.asarray(self.pos))
         if row_mask is not None:
@@ -235,16 +299,47 @@ class ContinuousBatcher:
                                   np.asarray(pending))
 
     def _release_row(self, i: int):
+        """Return row ``i`` to the pool. Paged: decref-with-reclaim — in
+        prefix mode the row's kept, fully-flushed decode pages are first
+        promoted into the hash index, then every page reference is dropped
+        (`HostPageAllocator.release`): pages still shared survive, indexed
+        pages park on the evictable LRU, the rest go back to the free list
+        (DESIGN.md §7)."""
+        if self.paged and self.prefix_cache:
+            self._promote_on_release(i)
         self.rows[i] = None
         self.pos[i] = 0
         self.tok[i, 0] = 0
         if self.paged:
-            self.free_pages.extend(self.row_pages[i])
+            self.allocator.release(self.row_pages[i])
             self.row_pages[i] = []
             self.tables[i, :] = 0
             # device table/length stay stale until the next _sync_device
             # (before any page is reallocated) — the dead row's output is
             # discarded in the meantime
+        if self.chunked_admission:
+            self.prefilling.pop(i, None)
+            self.streams[i] = None
+            self.row_chain[i] = None
+
+    def _promote_on_release(self, i: int):
+        """Publish the completing row's decode pages under the prompt's
+        extended hash chain, so a future prompt that continues this
+        conversation (old prompt + generated tokens + new turn) hits them.
+        Only blocks whose ps tokens are all *kept* are promoted — a block
+        reaching into tokens discarded after an EOS mid-scan holds KV the
+        request never acknowledged."""
+        r, stream, chain = self.rows[i], self.streams[i], self.row_chain[i]
+        if r is None or stream is None or not chain:
+            return
+        ps = self.page_size
+        S, nb = len(stream), len(stream) // ps
+        kept = S + len(r.generated)
+        if kept // ps <= nb:
+            return
+        gen = np.asarray(r.generated, np.int32)[:(kept // ps) * ps - S]
+        for j, h in enumerate(PG.chain_hashes(gen, ps, parent=chain[-1])):
+            self.allocator.register(int(self.tables[i, nb + j]), h)
 
     # -- contiguous backend ------------------------------------------------
     def _admit_rows(self) -> list[int]:
@@ -298,7 +393,9 @@ class ContinuousBatcher:
 
     # -- paged backend -----------------------------------------------------
     def _pages_needed(self, prompt_pad: int, max_new: int) -> int:
-        return -(-(prompt_pad + max_new) // self.page_size)
+        # delegates to the module-level single source of the reservation
+        # policy (padding is idempotent: prompt_pad is already a multiple)
+        return pages_for_request(prompt_pad, max_new, self.page_size)
 
     def _admit_paged(self) -> tuple[list[int], int]:
         """Admit queued requests into free rows while the free-page budget
@@ -320,7 +417,7 @@ class ContinuousBatcher:
                 break                     # different pad length: next group
             need = sum(self._pages_needed(own, r.max_new_tokens)
                        for r in selected + [cand])
-            if need > len(self.free_pages):
+            if need > self.allocator.available:
                 break
             selected.append(self.queue.popleft())
             S = own
@@ -329,7 +426,7 @@ class ContinuousBatcher:
             i = free_rows[len(newly)]
             self.rows[i] = req
             n = self._pages_needed(S, req.max_new_tokens)
-            ids = [self.free_pages.pop() for _ in range(n)]
+            ids = self.allocator.alloc(n)
             self.row_pages[i] = ids
             self.tables[i, :] = 0
             self.tables[i, :n] = ids
@@ -372,6 +469,8 @@ class ContinuousBatcher:
         self.state = rec(self.state)
 
     def _step_paged(self) -> list[Request]:
+        if self.chunked_admission:
+            return self._step_paged_chunked()
         newly, S = self._admit_paged()
         active = [i for i, r in enumerate(self.rows) if r is not None]
         if not active:
@@ -403,16 +502,213 @@ class ContinuousBatcher:
             self._sync_device()
         return done
 
+    # -- chunked prefill admission + prefix caching (DESIGN.md §7) ---------
+    def _cap_hits(self, match_pages: int, nb_prompt: int) -> int:
+        """Usable hit length for a prompt of ``nb_prompt`` pages, given a
+        ``match_pages``-deep index match. Hits are rounded down to a chunk
+        boundary (so the remaining chunks land on the same grid a miss run
+        uses — the bitwise hit==miss property needs identical chunking) and
+        capped below the full prompt (the final chunk must always compute:
+        it produces the last-position logits the first token is sampled
+        from)."""
+        cp = self.prefill_chunk_tokens // self.page_size
+        h = min(match_pages, nb_prompt)
+        h -= h % cp
+        if h >= nb_prompt:
+            h = nb_prompt - cp
+        return max(h, 0)
+
+    def _admit_chunked(self) -> bool:
+        """Admit queued requests into free rows, one at a time (no padded-
+        length grouping — rows prefill independently). For each candidate:
+        match its padded prompt's hash chain against the index, adopt hit
+        pages by refcount, allocate the rest (reclaiming evictable cached
+        pages LRU-first under pressure), and start its prefill cursor past
+        the hits. Admission is gated by `HostPageAllocator.available`.
+        Returns True when page tables changed (device sync required)."""
+        changed = False
+        for i in range(self.batch):
+            if self.rows[i] is not None or not self.queue:
+                continue
+            cand = self.queue[0]                 # validated at submit()
+            S = self._pad(len(cand.prompt))
+            nb = S // self.page_size
+            total = self._pages_needed(S, cand.max_new_tokens)
+            if id(cand) in self._admit_memo:     # blocked-head retry
+                toks, chain = self._admit_memo[id(cand)]
+            else:
+                toks = np.zeros((S,), np.int32)
+                toks[S - len(cand.prompt):] = cand.prompt
+                chain = (PG.chain_hashes(toks, self.page_size)
+                         if self.prefix_cache else [])
+                self._admit_memo[id(cand)] = (toks, chain)
+            hit = self._cap_hits(self.allocator.match(chain), nb) \
+                if self.prefix_cache else 0
+            # gate on what is allocatable AFTER adoption: hit pages sitting
+            # on the LRU stop being evictable the moment they are adopted
+            if total - hit > self.allocator.available_after_adopt(chain[:hit]):
+                break                            # FCFS: wait for releases
+            self.queue.popleft()
+            self._admit_memo.pop(id(cand), None)
+            ids = (self.allocator.adopt(chain[:hit]) if hit else []) \
+                + self.allocator.alloc(total - hit)
+            if self.prefix_cache:
+                self.allocator.misses += nb - hit
+            self.rows[i] = cand
+            self.row_pages[i] = ids
+            self.tables[i, :] = 0
+            self.tables[i, :total] = ids
+            self.streams[i] = toks
+            self.row_chain[i] = chain
+            self.prefilling[i] = {"toks": toks, "cursor": hit * self.page_size,
+                                  "S": S}
+            self.pos[i] = hit * self.page_size
+            self.tok[i, 0] = 0
+            changed = True
+        return changed
+
+    def _chunk_prefill_fn(self, max_start: int):
+        """Jitted chunk fn for a dispatch whose deepest cursor is
+        ``max_start`` tokens: the static history-gather bound is the cursor
+        in blocks rounded up to a power of two (compile set stays
+        O(log max_blocks); masking trims the over-approximation), so a
+        chunk never materializes max_len of history (DESIGN.md §7)."""
+        blocks = -(-max_start // self.page_size)
+        hb = 0 if blocks == 0 else min(1 << (blocks - 1).bit_length(),
+                                       self.max_blocks)
+        fn = self._chunk_prefill_fns.get(hb)
+        if fn is None:
+            from repro.serving.engine import make_chunk_prefill_fn
+            fn = self._chunk_prefill_fns[hb] = jax.jit(
+                make_chunk_prefill_fn(self.cfg, hist_blocks=hb))
+        return fn
+
+    def _advance_prefill(self):
+        """Advance one page-aligned prompt chunk for the mid-prefill rows.
+
+        Every prefilling row whose next chunk has the same token count as
+        the round-robin head's rides the same dispatch (per-row ``start``
+        cursors make one traced shape serve rows at different offsets);
+        rows with a different (final, short) chunk wait for their own tick.
+        Each chunk attends over its row's resident pages — cache hits
+        included — and its freshly written pages are published to the hash
+        index immediately, so a concurrent identical prompt shares them
+        while this one is still prefilling. A row's final chunk yields its
+        last-position logits; the row then joins the decode set in the same
+        tick."""
+        if not self.prefilling:
+            return
+        order = sorted(self.prefilling)
+        head = order[self._pf_rr % len(order)]
+        self._pf_rr += 1
+        c_of = {i: min(self.prefill_chunk_tokens,
+                       st["S"] - st["cursor"])
+                for i, st in self.prefilling.items()}
+        c = c_of[head]
+        group = [i for i in order if c_of[i] == c]
+        toks = np.zeros((self.batch, c), np.int32)
+        start = np.zeros((self.batch,), np.int32)
+        mask = np.zeros((self.batch,), bool)
+        for i in group:
+            st = self.prefilling[i]
+            toks[i] = st["toks"][st["cursor"]:st["cursor"] + c]
+            start[i] = st["cursor"]
+            mask[i] = True
+        logits, self.state = self._chunk_prefill_fn(int(start.max()))(
+            self.params, jnp.asarray(toks), self.state, jnp.asarray(start),
+            jnp.asarray(mask))
+        sampled = None
+        for i in group:
+            st = self.prefilling[i]
+            if self.prefix_cache:
+                ps = self.page_size
+                for b in range(st["cursor"] // ps, (st["cursor"] + c) // ps):
+                    self.allocator.register(int(self.tables[i, b]),
+                                            self.row_chain[i][b])
+            st["cursor"] += c
+            self.pos[i] = st["cursor"]
+            if st["cursor"] == st["S"]:
+                if sampled is None:
+                    sampled = self._sample(logits)
+                self.tok[i, 0] = sampled[i]
+                del self.prefilling[i]
+
+    def _cow_retarget(self, active: list[int], n: int) -> bool:
+        """Copy-on-write gate before an n-step decode scan: any block the
+        scan will flush must be privately owned — a shared or indexed page
+        is immutable (another row, or a future hit, reads it). Structurally
+        the scheduler's own decode always flushes into the row's private
+        reservation pages, so this runs only when `cow_armed` is set by a
+        caller that wired `fork_row` sharing into the batch (beam-search-
+        style); the check is O(active · blocks-per-scan) host work.
+        Returns True if tables changed."""
+        ps = self.page_size
+        changed = False
+        for i in active:
+            pos = int(self.pos[i])
+            for b in range(pos // ps, (pos + n) // ps):
+                page = int(self.tables[i, b])
+                if page == PG.SENTINEL_PAGE:
+                    continue
+                new = self.allocator.ensure_private(page)
+                if new is not None:
+                    self.row_pages[i][self.row_pages[i].index(page)] = new
+                    self.tables[i, b] = new
+                    changed = True
+        return changed
+
+    def _step_paged_chunked(self) -> list[Request]:
+        """One tick of chunked admission: admit (hash-match + adopt +
+        alloc), advance one prefill chunk, then decode one scanned chunk
+        for the rows that are past prefill. Prefill and decode interleave
+        tick by tick, so a long prompt never stalls running decodes."""
+        if self.state is None:
+            self.state = self._init_state(self.batch)
+        if self._admit_chunked():
+            self._sync_device()      # hit pages + cursors live before use
+        self._advance_prefill()
+        active = [i for i, r in enumerate(self.rows)
+                  if r is not None and i not in self.prefilling]
+        done: list[Request] = []
+        if active:
+            row_mask = np.zeros((self.batch,), bool)
+            row_mask[active] = True
+            done = self._decode_tick(active, row_mask)
+        if done:
+            self._sync_device()
+        return done
+
     # -- introspection -----------------------------------------------------
     def pool_report(self) -> dict:
-        """Free/allocated/live page counts (paged mode only)."""
+        """Pool occupancy + prefix-cache counters (paged mode only).
+
+        ``pages_allocated`` counts referenced pages, ``pages_cached`` the
+        evictable LRU population (refcount 0, still hittable), and the two
+        never overlap; ``pages_live`` counts *distinct physical* pages
+        holding tokens (`core.paging.live_page_count` — prefix hits alias
+        one page into several rows, so a per-row sum would double-count).
+        Prefix mode adds the
+        `HostPageAllocator` counters (hits / misses / reclaims /
+        cow_retargets) and the page hit rate."""
         if not self.paged:
             return {}
-        live = sum(-(-int(self.pos[i]) // self.page_size)
-                   for i, r in enumerate(self.rows) if r is not None)
-        allocated = (self.n_pages - 1) - len(self.free_pages)
-        return {"pages_total": self.n_pages - 1,
-                "pages_free": len(self.free_pages),
-                "pages_allocated": allocated,
-                "pages_live": live,
-                "utilization": live / max(allocated, 1)}
+        lengths = [int(self.pos[i]) if r is not None else 0
+                   for i, r in enumerate(self.rows)]
+        live = PG.live_page_count(self.tables, lengths, self.page_size)
+        a = self.allocator
+        allocated = (self.n_pages - 1) - a.n_free - a.n_cached
+        rep = {"pages_total": self.n_pages - 1,
+               "pages_free": a.n_free,
+               "pages_cached": a.n_cached,
+               "pages_allocated": allocated,
+               "pages_live": live,
+               "utilization": live / max(allocated, 1)}
+        if self.prefix_cache:
+            rep.update({
+                "page_hits": a.hits,
+                "page_misses": a.misses,
+                "page_hit_rate": a.hits / max(a.hits + a.misses, 1),
+                "reclaims": a.reclaims,
+                "cow_retargets": a.cow_retargets,
+            })
+        return rep
