@@ -1,0 +1,54 @@
+"""CI skip budget: fail when the pytest skip count grows past the recorded
+baseline.
+
+The tier-1 job runs pytest with ``-rs`` (every skip and its reason lands in
+the job log) and ``--junitxml``; this script parses that XML and compares
+the skip count against the baseline recorded in the workflow. Skips are a
+budget, not a free pass: the recorded baseline covers the known
+environment-conditional skips (hypothesis-gated property tests on bare
+containers), and any NEW perpetually-skipped test pushes the count over and
+fails the job — so tests can't quietly rot into skipped-forever.
+
+    python .github/scripts/check_skips.py pytest-junit.xml --baseline 5
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import xml.etree.ElementTree as ET
+
+
+def count_skips(junit_path: str) -> tuple[int, list[str]]:
+    root = ET.parse(junit_path).getroot()
+    suites = root.iter("testsuite") if root.tag == "testsuites" else [root]
+    n, names = 0, []
+    for suite in suites:
+        for case in suite.iter("testcase"):
+            sk = case.find("skipped")
+            if sk is not None:
+                n += 1
+                names.append(f"{case.get('classname')}::{case.get('name')}"
+                             f" — {sk.get('message', '')}")
+    return n, names
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("junit_xml")
+    ap.add_argument("--baseline", type=int, required=True,
+                    help="recorded skip-count baseline; more skips fail")
+    args = ap.parse_args(argv)
+    n, names = count_skips(args.junit_xml)
+    for s in names:
+        print(f"[skip-budget] skipped: {s}")
+    if n > args.baseline:
+        print(f"[skip-budget] FAIL: {n} skipped tests > recorded baseline "
+              f"{args.baseline} — either un-skip the new ones or consciously "
+              f"raise the baseline in ci.yml")
+        return 1
+    print(f"[skip-budget] OK: {n} skipped <= baseline {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,9 +4,13 @@ The paper makes cached bytes 4x cheaper; prefix caching (DESIGN.md §7)
 makes *shared* bytes free — identical prompt prefixes across requests
 resolve to already-resident INT8 pages instead of being re-quantized. This
 drives the paged continuous-batching scheduler over request mixes whose
-prompts share 0% / 50% / 90% of their tokens and reports, with prefix
-caching disabled (whole-prompt group prefill) vs enabled (chunked prefill
-+ hash-index lookup):
+prompts share 0% / 50% / 90% of their tokens AND have *mixed total
+lengths* (spread over every residue mod page_size — the case varlen
+prefill freed: pre-varlen, left-padding made hits require length
+congruence mod page_size, so a benchmark of equal-length groups never
+exercised real traffic). Both arms run the same varlen chunked prefill;
+the only difference is the hash-index lookup, so the ratios isolate
+caching itself:
 
   * TTFT (time to first token, mean over requests from queue start) — the
     metric prefix caching targets: hit chunks skip compute entirely
@@ -15,7 +19,8 @@ caching disabled (whole-prompt group prefill) vs enabled (chunked prefill
 
 On this CPU container the absolute times are host-bound; the *ratios* are
 the architecture-level result. ``--json`` writes BENCH_prefix.json (CI
-uploads it alongside BENCH_decode.json).
+uploads it and gates regressions on the shared90 TTFT speedup —
+benchmarks/check_regression.py).
 """
 from __future__ import annotations
 
@@ -40,9 +45,10 @@ MIXES = [
 
 N_REQUESTS = 8
 BATCH = 4
-PROMPT_LEN = 512         # 64 pages of 8 — long enough for compute to matter
+PROMPT_LEN = 512         # base length — 64 pages of 8
+LEN_JITTER = 16          # per-request spread: lengths cover every mod-8 residue
 MAX_NEW = 8
-MAX_LEN = PROMPT_LEN + MAX_NEW
+MAX_LEN = PROMPT_LEN + LEN_JITTER + MAX_NEW
 PREFILL_CHUNK = 32       # 4 pages per chunk dispatch
 REPEATS = 3              # keep the least-noisy measured run
 # 2x the running working set: prefix caching needs headroom — a pool sized
@@ -50,11 +56,19 @@ REPEATS = 3              # keep the least-noisy measured run
 N_PAGES = 2 * BATCH * (MAX_LEN // 8) + 1
 
 
+def _len(i):
+    """Request i's prompt length: mixed on purpose — (i*5) % 16 walks every
+    residue mod 8 across the 8-request queue, so no two consecutive
+    requests are congruent mod page_size (hits here are exactly what the
+    pre-varlen alignment caveat forbade)."""
+    return PROMPT_LEN + (i * 5) % LEN_JITTER
+
+
 def _prompts(rng, frac, n=N_REQUESTS):
     shared = rng.randint(0, 250, (int(PROMPT_LEN * frac),))
     return [np.concatenate([shared,
-                            rng.randint(0, 250, (PROMPT_LEN - len(shared),))])
-            .astype(np.int32) for _ in range(n)]
+                            rng.randint(0, 250, (_len(i) - len(shared),))])
+            .astype(np.int32) for i in range(n)]
 
 
 def _drive(batcher, prompts):
@@ -84,10 +98,13 @@ def _bench_one(params, cfg, frac, *, prefix_cache, seed):
     """Steady-state serving measurement (the motivating workload is a
     resident shared system prompt, not a cold cache): after a jit-warmup
     drive on unrelated prompts and ONE unmeasured request that makes the
-    mix's shared prefix resident, time the 8-request queue."""
-    kw = dict(batch=BATCH, max_len=MAX_LEN, paged=True, n_pages=N_PAGES)
+    mix's shared prefix resident, time the 8-request queue. Both arms use
+    identical varlen chunked prefill — `prefix_cache` toggles only the
+    hash-index lookup, so the speedup is caching, not chunking."""
+    kw = dict(batch=BATCH, max_len=MAX_LEN, paged=True, n_pages=N_PAGES,
+              prefill_chunk=PREFILL_CHUNK)
     if prefix_cache:
-        kw.update(prefix_cache=True, prefill_chunk=PREFILL_CHUNK)
+        kw.update(prefix_cache=True)
     b = ContinuousBatcher(params, cfg, **kw)
     # jit caches live on the batcher's closures — warm them with unrelated
     # prompts (offset token stream never collides with measured hashes)
@@ -102,14 +119,15 @@ def _bench_one(params, cfg, frac, *, prefix_cache, seed):
     _drive(b, [np.concatenate([shared, warm_tail]).astype(np.int32)])
     if prefix_cache:
         h0 = (b.allocator.hits, b.allocator.misses, b.allocator.reclaims)
-    # repeat with fresh unique tails (steady traffic: same system prompt,
-    # new user turns) and keep the least-noisy run — this is a host-timed
+    # repeat with fresh unique tails at the mixed per-request lengths
+    # (steady traffic: same system prompt, new user turns of varying
+    # lengths) and keep the least-noisy run — this is a host-timed
     # benchmark on a shared CPU container
     ttft, tps = np.inf, 0.0
     for _ in range(REPEATS):
         fresh = [np.concatenate(
-            [shared, rng.randint(0, 250, (PROMPT_LEN - len(shared),))])
-            .astype(np.int32) for _ in range(N_REQUESTS)]
+            [shared, rng.randint(0, 250, (_len(i) - len(shared),))])
+            .astype(np.int32) for i in range(N_REQUESTS)]
         t, s = _drive(b, fresh)
         ttft, tps = min(ttft, t), max(tps, s)
     rep = b.pool_report()
@@ -140,6 +158,9 @@ def _bench_config():
 def run():
     cfg = _bench_config()
     params = T.init_params(cfg, jax.random.PRNGKey(0))
+    # the mix must actually exercise varlen sharing: lengths spread over
+    # several residues mod page_size, so hits here were impossible pre-varlen
+    assert len({_len(i) % 8 for i in range(N_REQUESTS)}) >= 4
     rows = []
     for seed, (name, frac) in enumerate(MIXES):
         ttft_off, tps_off, _ = _bench_one(params, cfg, frac,
@@ -149,7 +170,9 @@ def run():
         rows.append({
             "bench": "prefix_cache", "config": name,
             "shared_frac": frac,
-            "prompt_len": PROMPT_LEN, "max_new": MAX_NEW,
+            "prompt_len": PROMPT_LEN,
+            "prompt_lens": [_len(i) for i in range(N_REQUESTS)],
+            "max_new": MAX_NEW,
             "requests": N_REQUESTS, "batch": BATCH,
             "prefill_chunk": PREFILL_CHUNK,
             "ttft_ms_disabled": ttft_off * 1e3,

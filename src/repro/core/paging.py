@@ -73,7 +73,14 @@ def chain_hashes(tokens, page_size: int, parent: bytes | None = None):
     — so equal digests imply equal full prefixes, which is what lets a page
     be shared purely by digest equality. ``parent`` seeds the chain (pass a
     previous digest to extend a stream, e.g. past the prompt into generated
-    tokens)."""
+    tokens).
+
+    Callers hash the *unpadded* token stream: the scheduler digests only a
+    prompt's full pages (``tokens[:len(prompt) // page_size * page_size]``),
+    so two prompts sharing a prefix produce equal digests at *any* total
+    lengths — no pad tokens enter the chain, hence no pad-width (length mod
+    page_size) agreement condition. The partial final page is never hashed:
+    it lives in the fp residual, mutable until decode fills it."""
     toks = np.ascontiguousarray(np.asarray(tokens, dtype=np.int32))
     if toks.ndim != 1 or toks.size % page_size:
         raise ValueError(f"token stream of shape {toks.shape} is not a "
@@ -496,14 +503,16 @@ class PagedQuantizedKVCache:
                 row_mask: jax.Array | None = None) -> "PagedQuantizedKVCache":
         """Quantize a (B, H, T, D) prefix into this view's mapped pages.
 
-        T must be a multiple of page_size (pad upstream, as for the
-        contiguous cache). `row_mask` (B,) bool selects which rows are
-        written — unmasked rows keep their cache and length untouched, which
-        is what lets the scheduler prefill mid-stream admissions while other
-        rows are mid-decode (their scatters are redirected to the sentinel
-        page). The masked rows' first T//page_size table entries must be
-        mapped before the call. Owned by DESIGN.md §5/§6; the prefix-cache
-        lookup-then-fill variant is `prefill_at` (DESIGN.md §7)."""
+        T must be a multiple of page_size — this is the whole-prompt,
+        page-aligned entry point used by direct-API callers and tests; the
+        serving scheduler always goes through `prefill_at`, whose per-row
+        ``valid`` handles unpadded prompts (varlen, DESIGN.md §7).
+        `row_mask` (B,) bool selects which rows are written — unmasked rows
+        keep their cache and length untouched, which is what lets a caller
+        prefill mid-stream admissions while other rows are mid-decode
+        (their scatters are redirected to the sentinel page). The masked
+        rows' first T//page_size table entries must be mapped before the
+        call. Owned by DESIGN.md §5/§6."""
         B, H, T, D = k.shape
         ps = self.page_size
         if T % ps:
@@ -527,38 +536,60 @@ class PagedQuantizedKVCache:
                                    resid_k=resid_k, resid_v=resid_v)
 
     def prefill_at(self, k: jax.Array, v: jax.Array, start_block: jax.Array,
-                   row_mask: jax.Array | None = None
+                   row_mask: jax.Array | None = None,
+                   valid: jax.Array | None = None
                    ) -> "PagedQuantizedKVCache":
-        """Lookup-then-fill chunk write for chunked prefill (DESIGN.md §7).
+        """Lookup-then-fill chunk write for varlen chunked prefill
+        (DESIGN.md §7).
 
-        Quantizes a page-aligned (B, H, T, D) chunk into logical blocks
-        ``[start_block, start_block + T//ps)`` of each row's table —
-        ``start_block`` (B,) int32 is the per-row block cursor (cache-hit
-        pages before it are already resident and are never rewritten).
-        Masked rows get ``length = start_block*ps + T`` and a cleared
-        residual (chunks are page-aligned so there is no fp tail); unmasked
-        rows scatter to the sentinel and keep their state, exactly as in
-        `prefill`."""
+        Quantizes the *full pages* of a (B, H, T, D) chunk (T a page
+        multiple — the dispatch width) into logical blocks starting at
+        ``start_block`` (B,) int32, each row's page-aligned block cursor
+        (cache-hit pages before it are already resident and never
+        rewritten). ``valid`` (B,) int32 is each row's true token count in
+        the chunk (default T, the fully-valid case): only the
+        ``valid // ps`` full pages are scattered — the partial tail
+        ``valid % ps`` lands in the row's fp residual at offsets
+        ``[0, valid % ps)``, exactly where `append` expects it, so decode
+        continues mid-page with no pad tokens anywhere. Masked rows get
+        ``length = start_block*ps + valid``; unmasked rows scatter to the
+        sentinel and keep their state, exactly as in `prefill`."""
         B, H, T, D = k.shape
         ps = self.page_size
         if T % ps:
             raise ValueError(f"T={T} not a multiple of page_size={ps}")
         nb = T // ps
         blk = start_block[:, None] + jnp.arange(nb, dtype=jnp.int32)[None]
+        blk = jnp.minimum(blk, self.max_blocks - 1)   # tail blocks are masked
         ids = jnp.take_along_axis(self.page_table, blk, axis=1)   # (B, nb)
+        if valid is None:
+            valid_t = jnp.full((B,), T, jnp.int32)
+        else:
+            valid_t = jnp.asarray(valid, jnp.int32)
+        full = valid_t // ps                          # (B,) full chunk pages
+        ids = jnp.where(jnp.arange(nb, dtype=jnp.int32)[None] < full[:, None],
+                        ids, SENTINEL_PAGE)
         if row_mask is not None:
             ids = jnp.where(row_mask[:, None], ids, SENTINEL_PAGE)
         pool = self._scatter_chunk(k, v, ids)
-        new_len = start_block.astype(jnp.int32) * ps + T
+        # partial tail -> fp residual (page positions [0, valid % ps))
+        src = jnp.minimum(full[:, None] * ps +
+                          jnp.arange(ps, dtype=jnp.int32)[None], T - 1)
+        in_tail = (jnp.arange(ps, dtype=jnp.int32)[None] <
+                   (valid_t - full * ps)[:, None])    # (B, ps)
+        gat = lambda x: jnp.where(
+            in_tail[:, None, :, None],
+            jnp.take_along_axis(x.astype(self.resid_k.dtype),
+                                src[:, None, :, None], axis=2), 0)
+        rk, rv = gat(k), gat(v)
+        new_len = start_block.astype(jnp.int32) * ps + valid_t
         if row_mask is None:
-            length = new_len
-            resid_k = jnp.zeros_like(self.resid_k)
-            resid_v = jnp.zeros_like(self.resid_v)
+            length, resid_k, resid_v = new_len, rk, rv
         else:
             length = jnp.where(row_mask, new_len, self.length)
             keep = row_mask[:, None, None, None]
-            resid_k = jnp.where(keep, 0, self.resid_k)
-            resid_v = jnp.where(keep, 0, self.resid_v)
+            resid_k = jnp.where(keep, rk, self.resid_k)
+            resid_v = jnp.where(keep, rv, self.resid_v)
         return dataclasses.replace(self, pool=pool, length=length,
                                    resid_k=resid_k, resid_v=resid_v)
 

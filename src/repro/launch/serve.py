@@ -20,7 +20,9 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--paged", action="store_true",
-                    help="paged KV cache + page-budget admission")
+                    help="paged KV cache + page-budget admission over "
+                         "unpadded prompts (varlen chunked prefill — "
+                         "DESIGN.md §6/§7)")
     ap.add_argument("--pages", type=int, default=None,
                     help="pool size in pages (default: dense capacity)")
     ap.add_argument("--chunk", type=int, default=None,
@@ -29,16 +31,19 @@ def main(argv=None):
                          "default: scan to the next completion boundary, "
                          "1 = per-token ticks")
     ap.add_argument("--prefix-cache", action="store_true",
-                    help="automatic prefix caching: shared prompt pages "
-                         "resolve from a content-hash index instead of "
-                         "being re-quantized (implies --paged, "
+                    help="automatic prefix caching: a prompt's full pages "
+                         "resolve from a content-hash index over the raw "
+                         "(unpadded) token stream instead of being "
+                         "re-quantized — prompts sharing a prefix share "
+                         "pages at any lengths (implies --paged, "
                          "DESIGN.md §7)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="prompt tokens per prefill dispatch (rounded up "
-                         "to a page multiple); enables chunked prefill "
-                         "admission so long prompts interleave with decode "
-                         "ticks (implies --paged; default with "
-                         "--prefix-cache: 4 pages)")
+                         "to a page multiple; default 4 pages). Paged "
+                         "admission is always varlen chunked prefill — "
+                         "long prompts interleave with decode ticks and "
+                         "the final partial chunk carries a per-row valid "
+                         "length (implies --paged)")
     args = ap.parse_args(argv)
     if args.prefix_cache or args.prefill_chunk:
         args.paged = True

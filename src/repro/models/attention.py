@@ -183,8 +183,8 @@ def prefill(p, x, cfg: ModelConfig, positions, cache, *, local: bool = False,
 
 
 def prefill_chunk(p, x, cfg: ModelConfig, positions, cache, *, row_mask=None,
-                  hist_blocks: int | None = None):
-    """One page-aligned prompt chunk under chunked prefill (DESIGN.md §7).
+                  hist_blocks: int | None = None, valid=None):
+    """One prompt chunk under varlen chunked prefill (DESIGN.md §7).
 
     The chunk's queries attend causally within the chunk *plus* over the
     row's already-resident prefix read back from its INT8 pages
@@ -194,13 +194,20 @@ def prefill_chunk(p, x, cfg: ModelConfig, positions, cache, *, row_mask=None,
     chunk's K/V are then quantized into pages at the row's block cursor
     (`PagedQuantizedKVCache.prefill_at`).
 
-    `x` (B, C, d) with C a multiple of page_size; `positions` (B, C)
-    absolute positions — positions[:, 0] is each row's resident-history
-    length (page-aligned by construction). `row_mask` (B,) bool as in
-    `prefill`. `hist_blocks` (static) bounds the history read: only that
-    many leading blocks are gathered/dequantized — the scheduler passes the
-    dispatch group's cursor bound so a chunk never materializes max_len;
-    None reads the full table, 0 skips history entirely (first chunk)."""
+    `x` (B, C, d) with C a multiple of page_size — the *dispatch width*;
+    `valid` (B,) int32 is each row's true token count in the chunk
+    (None = fully valid). Tokens past `valid` are dispatch padding, not
+    prompt padding: causal masking already hides them from valid queries
+    (they sit strictly *after* every valid position), their cache writes
+    are masked off inside `prefill_at`, and their outputs are garbage the
+    caller discards — so a final partial chunk needs no extra mask plumbing
+    beyond the write path. `positions` (B, C) absolute positions —
+    positions[:, 0] is each row's resident-history length (page-aligned by
+    construction). `row_mask` (B,) bool as in `prefill`. `hist_blocks`
+    (static) bounds the history read: only that many leading blocks are
+    gathered/dequantized — the scheduler passes the dispatch group's cursor
+    bound so a chunk never materializes max_len; None reads the full
+    table, 0 skips history entirely (first chunk)."""
     if not isinstance(cache, PG.PagedQuantizedKVCache):
         raise ValueError("chunked prefill requires the paged cache")
     q, k, v = _project_qkv(p, x, cfg, positions)
@@ -212,7 +219,8 @@ def prefill_chunk(p, x, cfg: ModelConfig, positions, cache, *, row_mask=None,
         hk, hv = cache.dequantized_prefix(nb)       # (B, Hkv, nb*ps, D)
     out = _chunk_attention(q, k, v, hk, hv, hist_len)
     cache = cache.prefill_at(k.astype(jnp.float32), v.astype(jnp.float32),
-                             hist_len // cache.page_size, row_mask=row_mask)
+                             hist_len // cache.page_size, row_mask=row_mask,
+                             valid=valid)
     return _merge_heads(p, out.astype(x.dtype), cfg, x.dtype), cache
 
 

@@ -257,7 +257,7 @@ def _round_block(n, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def _block_serve(p, x, kind, cfg, positions, cache, mode: str,
-                 row_mask=None, hist_blocks=None):
+                 row_mask=None, hist_blocks=None, valid=None):
     h = _norm(cfg, p["norm1"], x)
     if kind in ("attn", "local_attn", "moe"):
         if mode == "prefill":
@@ -267,7 +267,8 @@ def _block_serve(p, x, kind, cfg, positions, cache, mode: str,
         elif mode == "chunk":
             h, cache = attention.prefill_chunk(p["attn"], h, cfg, positions,
                                                cache, row_mask=row_mask,
-                                               hist_blocks=hist_blocks)
+                                               hist_blocks=hist_blocks,
+                                               valid=valid)
         else:
             h, cache = attention.decode(p["attn"], h, cfg, positions, cache,
                                         local=kind == "local_attn",
@@ -297,7 +298,7 @@ def _block_serve(p, x, kind, cfg, positions, cache, mode: str,
 
 
 def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str,
-           row_mask=None, hist_blocks=None):
+           row_mask=None, hist_blocks=None, valid=None):
     x, positions = _embed(params, tok, cfg, positions)
     period, n_groups, tail = _pattern_layout(cfg)
 
@@ -306,7 +307,8 @@ def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str,
         new_caches = {}
         for i, kind in enumerate(cfg.block_pattern):
             x, c = _block_serve(gparams[f"p{i}"], x, kind, cfg, positions,
-                                caches[f"p{i}"], mode, row_mask, hist_blocks)
+                                caches[f"p{i}"], mode, row_mask, hist_blocks,
+                                valid)
             new_caches[f"p{i}"] = c
         return x, new_caches
 
@@ -320,7 +322,7 @@ def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str,
     for j, bp in enumerate(params["tail"]):
         kind = cfg.block_kind(n_groups * period + j)
         x, c = _block_serve(bp, x, kind, cfg, positions, state["tail"][j],
-                            mode, row_mask, hist_blocks)
+                            mode, row_mask, hist_blocks, valid)
         new_state["tail"].append(c)
     logits = _head(params, x, cfg)
     return logits, new_state
@@ -339,27 +341,36 @@ def prefill(params, tokens, cfg: ModelConfig, state, *, positions=None,
 
 
 def prefill_chunk(params, tokens, cfg: ModelConfig, state, *, start,
-                  row_mask=None, hist_blocks=None):
-    """One chunked-prefill step (DESIGN.md §7): run a page-aligned prompt
-    chunk whose queries attend over the rows' already-resident INT8 pages
-    plus causally within the chunk, and quantize its K/V into pages at each
+                  row_mask=None, hist_blocks=None, valid=None):
+    """One varlen chunked-prefill step (DESIGN.md §7): run a prompt chunk
+    whose queries attend over the rows' already-resident INT8 pages plus
+    causally within the chunk, and quantize its K/V into pages at each
     row's cursor.
 
-    `tokens` (B, C) int32 with C a multiple of the page size; `start` (B,)
-    int32 is each row's resident token count (the chunk's first absolute
-    position — page-aligned). `row_mask` (B,) bool restricts cache writes
-    as in `prefill`; unmasked rows' logits are garbage and must be ignored.
-    `hist_blocks` (static int) bounds the per-layer history gather to the
-    dispatch group's cursor — see `attention.prefill_chunk`. Returns
-    (last-position logits (B, Vp), new state). Paged caches only — the
-    scheduler's chunked admission is the caller (serving/scheduler.py).
-    """
+    `tokens` (B, C) int32 with C a multiple of the page size — the dispatch
+    width; `start` (B,) int32 is each row's resident token count (the
+    chunk's first absolute position — page-aligned). `valid` (B,) int32 is
+    each row's true token count within the chunk (None = C everywhere):
+    the final, partial chunk of an unpadded prompt dispatches at a pow2
+    page width with `valid < C`, and the returned logits are read at each
+    row's *last valid position* — the position the first sampled token
+    conditions on — rather than column C-1. `row_mask` (B,) bool restricts
+    cache writes as in `prefill`; unmasked rows' logits are garbage and
+    must be ignored. `hist_blocks` (static int) bounds the per-layer
+    history gather to the dispatch group's cursor — see
+    `attention.prefill_chunk`. Returns (last-valid-position logits (B, Vp),
+    new state). Paged caches only — the scheduler's chunked admission is
+    the caller (serving/scheduler.py)."""
     C = tokens.shape[1]
     positions = (start[:, None].astype(jnp.int32) +
                  jnp.arange(C, dtype=jnp.int32)[None])
     logits, state = _serve(params, tokens, cfg, state, positions, "chunk",
-                           row_mask, hist_blocks)
-    return logits[:, -1], state
+                           row_mask, hist_blocks, valid)
+    if valid is None:
+        return logits[:, -1], state
+    last = jnp.maximum(valid.astype(jnp.int32) - 1, 0)       # (B,)
+    return jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0], \
+        state
 
 
 def decode_step(params, token, cfg: ModelConfig, state, pos, *,

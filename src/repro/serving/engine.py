@@ -11,11 +11,14 @@ long_* shapes). Two cache backends (DESIGN.md §5):
     scheduler slots new requests into finished rows while others are
     mid-decode (real continuous batching, serving/scheduler.py).
 
-The paged backend additionally supports chunked prefill
-(`make_chunk_prefill_fn`, DESIGN.md §7): prompts are fed one page-aligned
-chunk at a time with each chunk attending over the rows' already-resident
-INT8 pages — the admission path that automatic prefix caching (shared
-pages skip compute) and long-prompt interleaving ride on.
+The paged backend's admission path is varlen chunked prefill
+(`make_chunk_prefill_fn`, DESIGN.md §7): *unpadded* prompts are fed one
+chunk at a time — full chunks page-aligned, the final partial chunk
+dispatched at a pow2 page width with a per-row valid length — with each
+chunk attending over the rows' already-resident INT8 pages. This is the
+path automatic prefix caching (shared pages skip compute) and long-prompt
+interleaving ride on; no pad token ever enters the cache or the hash
+chain.
 """
 from __future__ import annotations
 
@@ -69,13 +72,16 @@ def make_serve_fns(cfg: ModelConfig, *, max_len: int, paged: bool = False,
 
 
 def make_chunk_prefill_fn(cfg: ModelConfig, *, hist_blocks: int | None = None):
-    """Chunk-prefill step for chunked admission (DESIGN.md §7), closed over
-    cfg: ``chunk_prefill(params, tokens, state, start, row_mask)`` with
-    tokens (B, C) int32 (C a page multiple), start (B,) int32 resident
-    token counts, row_mask (B,) bool — returns (last-position logits
-    (B, Vp), new state). ``hist_blocks`` statically bounds each layer's
-    history gather (the scheduler keeps one jitted closure per bound, a
-    power-of-two set). Paged decoder-only stacks only."""
+    """Chunk-prefill step for varlen chunked admission (DESIGN.md §7),
+    closed over cfg: ``chunk_prefill(params, tokens, state, start, valid,
+    row_mask)`` with tokens (B, C) int32 (C a page multiple — the dispatch
+    width), start (B,) int32 resident token counts, valid (B,) int32 true
+    token counts within the chunk (final partial chunks dispatch with
+    valid < C; logits are read at each row's last valid position), row_mask
+    (B,) bool — returns (last-valid-position logits (B, Vp), new state).
+    ``hist_blocks`` statically bounds each layer's history gather (the
+    scheduler keeps one jitted closure per bound, a power-of-two set).
+    Paged decoder-only stacks only."""
     if cfg.family == "encdec":
         raise ValueError("chunked prefill is decoder-only")
     # same precondition init_decode_state(paged=True) enforces, restated
@@ -88,9 +94,10 @@ def make_chunk_prefill_fn(cfg: ModelConfig, *, hist_blocks: int | None = None):
             f"kinds={bad or cfg.block_pattern}, "
             f"sliding_window={cfg.sliding_window})")
 
-    def chunk_prefill(params, tokens, state, start, row_mask):
+    def chunk_prefill(params, tokens, state, start, valid, row_mask):
         return transformer.prefill_chunk(params, tokens, cfg, state,
-                                         start=start, row_mask=row_mask,
+                                         start=start, valid=valid,
+                                         row_mask=row_mask,
                                          hist_blocks=hist_blocks)
 
     return chunk_prefill

@@ -15,10 +15,12 @@ refilled from a request queue between device steps. Two backends:
   * paged (``paged=True``): the cache is a page pool with per-row page
     tables and per-row lengths (core/paging.py), so rows live on independent
     timelines. The scheduler allocates pages on admission (enough for the
-    padded prompt plus max_new_tokens), frees them on completion, and admits
-    by free-page budget instead of row count alone. Mid-stream admissions
-    prefill through a row mask — rows that are mid-decode are untouched, so
-    nothing is recomputed. This is the production path (DESIGN.md §6).
+    *unpadded* prompt plus max_new_tokens), frees them on completion, and
+    admits by free-page budget instead of row count alone. Admission is
+    always per-row varlen chunked prefill (below) — no prompt is ever
+    padded, and mid-stream admissions write through a row mask so rows that
+    are mid-decode are untouched. This is the production path
+    (DESIGN.md §6).
 
 The device-side step functions are row-independent (engine.make_serve_fns),
 so all of this is host bookkeeping plus cheap device_put pushes of page
@@ -36,18 +38,29 @@ after). `chunk=None` (default) scans to the next completion boundary;
 observe scheduler state between individual tokens, and by the encoder-
 decoder family which has no scan path).
 
-Chunked prefill + automatic prefix caching (paged only, DESIGN.md §7):
-``prefill_chunk=N`` switches paged admission from group prefill to per-row
-chunked prefill — each admitted prompt is fed in page-aligned chunks of N
-tokens interleaved with decode ticks, so one long prompt never stalls the
-running batch, and the equal-padded-length grouping constraint disappears
-(rows prefill independently through a row mask). ``prefix_cache=True``
-additionally resolves full pages of each new prompt against a content-hash
+Varlen chunked prefill + automatic prefix caching (paged, DESIGN.md §7):
+every admitted prompt enters *unpadded* and is fed in chunks of
+``prefill_chunk`` tokens (default 4 pages) interleaved with decode ticks,
+so one long prompt never stalls the running batch and rows of arbitrary
+lengths admit together. Full chunks are page-aligned; the final partial
+chunk dispatches at a pow2 page width with a per-row valid length — its
+full pages are scattered and its sub-page tail lands in the row's fp
+residual, so decode continues mid-page and no pad token ever exists.
+Rows whose next chunk needs the same dispatch width share one dispatch
+(the compile set of chunk shapes is the pow2 widths up to
+``prefill_chunk``). ``prefix_cache=True`` additionally resolves the *full
+pages* of each new prompt's unpadded token stream against a content-hash
 index (`core.paging.HostPageAllocator`): hit pages are adopted by
-refcount instead of recomputed and their chunks are skipped outright;
-completed requests' pages are released into an evictable LRU rather than
-freed, so future identical prefixes keep hitting until pool pressure
-reclaims them.
+refcount instead of recomputed and their chunks are skipped outright —
+two prompts sharing a prefix share pages at ANY lengths (no length-mod-
+page_size congruence, the pre-varlen alignment caveat); completed
+requests' pages are released into an evictable LRU rather than freed, so
+future identical prefixes keep hitting until pool pressure reclaims them.
+
+The contiguous backend is pad-retaining legacy: its single scalar cache
+length structurally requires a common (left-padded) history length per
+rebuild, so it keeps the padded layout and is excluded from prefix
+caching. The paged path is the production one.
 """
 from __future__ import annotations
 
@@ -64,13 +77,14 @@ from repro.core.paging import PagedQuantizedKVCache
 
 
 def pages_for_request(prompt_len: int, max_new: int, page_size: int) -> int:
-    """Pages one request reserves in paged mode: its prompt padded to a page
-    multiple plus the full decode budget (DESIGN.md §6). The single source
-    for this policy — submit() validation and benchmark pool sizing both
-    use it. Prefix-cache hits reduce what admission actually *allocates*,
-    never what submit() validates against (worst case: no hits)."""
-    padded = -(-max(prompt_len, 1) // page_size) * page_size
-    return -(-(padded + max_new) // page_size)
+    """Pages one request reserves in paged mode: its *unpadded* prompt plus
+    the full decode budget, rounded up to whole pages (DESIGN.md §6) —
+    varlen prefill means the prompt's partial final page and the first
+    decode tokens share one page. The single source for this policy —
+    submit() validation and benchmark pool sizing both use it. Prefix-cache
+    hits reduce what admission actually *allocates*, never what submit()
+    validates against (worst case: no hits)."""
+    return -(-(max(prompt_len, 1) + max_new) // page_size)
 
 
 @dataclasses.dataclass
@@ -86,12 +100,13 @@ class Request:
 
 class ContinuousBatcher:
     """Greedy continuous batching over a fixed pool of `batch` rows
-    (DESIGN.md §6). Backends: contiguous (rebuild on admit), paged
-    (`paged=True`: page-budget admission, masked prefill, per-row
-    timelines), and paged with chunked prefill / automatic prefix caching
-    (`prefill_chunk=` / `prefix_cache=True`, DESIGN.md §7). `submit` queues
-    requests; `step` runs one scheduler tick; `run_to_completion` drains
-    the queue and returns finished `Request`s."""
+    (DESIGN.md §6). Backends: contiguous (pad-retaining legacy — rebuild on
+    admit) and paged (`paged=True`: page-budget admission over *unpadded*
+    prompts, per-row timelines, varlen chunked prefill — `prefill_chunk=`
+    sizes the chunk, `prefix_cache=True` adds automatic prefix caching,
+    DESIGN.md §7). `submit` queues requests; `step` runs one scheduler
+    tick; `run_to_completion` drains the queue and returns finished
+    `Request`s."""
 
     def __init__(self, params, cfg, *, batch: int, max_len: int,
                  eos_id: int | None = None, paged: bool = False,
@@ -112,10 +127,7 @@ class ContinuousBatcher:
         self.block = (cfg.quant.block_size
                       if cfg.quant.granularity == "per_block" else 8)
         self.prefix_cache = bool(prefix_cache)
-        # chunked admission (DESIGN.md §7) replaces group prefill whenever
-        # prefix caching or an explicit prefill chunk size is requested
-        self.chunked_admission = bool(prefix_cache or prefill_chunk)
-        if self.chunked_admission and not paged:
+        if (prefix_cache or prefill_chunk) and not paged:
             raise ValueError("prefix caching / chunked prefill require the "
                              "paged backend (paged=True)")
         if paged:
@@ -135,19 +147,20 @@ class ContinuousBatcher:
             # scheduler itself never forks, so scanning every tick would
             # guard a structurally impossible case (DESIGN.md §7)
             self.cow_armed = False
-        if self.chunked_admission:
+            # paged admission is ALWAYS per-row varlen chunked prefill
+            # (DESIGN.md §7) — there is no padded group-prefill path left
             pc = prefill_chunk or 4 * self.page_size
             self.prefill_chunk_tokens = -(-pc // self.page_size) * \
                 self.page_size
             # one jitted chunk fn per static history bound (pow2 set)
             self._chunk_prefill_fns: dict[int, Any] = {}
-            # id(request) -> (padded toks, chain): computed once per request,
+            # id(request) -> (toks, chain): computed once per request,
             # not once per tick while admission is blocked on pool pressure
             self._admit_memo: dict[int, tuple] = {}
             # rows mid-prompt: row -> {"toks", "cursor", "S"}
             self.prefilling: dict[int, dict] = {}
-            # per-row padded token stream + its page hash chain, kept until
-            # release for decode-page promotion (prefix mode)
+            # per-row *unpadded* token stream + the hash chain over its full
+            # pages, kept until release for decode-page promotion (prefix)
             self.streams: list[np.ndarray | None] = [None] * batch
             self.row_chain: list[list[bytes] | None] = [None] * batch
             self._pf_rr = 0     # round-robin cursor over prefilling rows
@@ -169,17 +182,25 @@ class ContinuousBatcher:
         return self.allocator.free
 
     def submit(self, req: Request):
-        """Queue a request. Rejects impossible requests here — once queued,
-        admission must never fail, or earlier candidates popped in the same
-        tick would be stranded."""
-        if self._pad(len(req.prompt)) + req.max_new_tokens > self.max_len:
+        """Queue a request (DESIGN.md §6). Rejects impossible requests here
+        — once queued, admission must never fail, or earlier candidates
+        popped in the same tick would be stranded. Paged capacity is
+        unpadded (varlen prefill); the legacy contiguous backend still pads
+        to a block multiple and validates accordingly."""
+        if self.paged:
+            if len(req.prompt) < 1:
+                raise ValueError(f"request {req.uid}: empty prompt")
+            if len(req.prompt) + req.max_new_tokens > self.max_len:
+                raise ValueError(f"request {req.uid}: prompt+max_new exceeds "
+                                 f"max_len={self.max_len}")
+            if pages_for_request(len(req.prompt), req.max_new_tokens,
+                                 self.page_size) > self.n_pages - 1:
+                raise ValueError(f"request {req.uid} needs more pages than "
+                                 f"the pool holds ({self.n_pages - 1}); "
+                                 f"raise n_pages")
+        elif self._pad(len(req.prompt)) + req.max_new_tokens > self.max_len:
             raise ValueError(f"request {req.uid}: prompt+max_new exceeds "
                              f"max_len={self.max_len}")
-        if self.paged and pages_for_request(
-                len(req.prompt), req.max_new_tokens,
-                self.page_size) > self.n_pages - 1:
-            raise ValueError(f"request {req.uid} needs more pages than the "
-                             f"pool holds ({self.n_pages - 1}); raise n_pages")
         self.queue.append(req)
 
     # -- shared helpers ----------------------------------------------------
@@ -317,7 +338,6 @@ class ContinuousBatcher:
             # device table/length stay stale until the next _sync_device
             # (before any page is reallocated) — the dead row's output is
             # discarded in the meantime
-        if self.chunked_admission:
             self.prefilling.pop(i, None)
             self.streams[i] = None
             self.row_chain[i] = None
@@ -325,20 +345,26 @@ class ContinuousBatcher:
     def _promote_on_release(self, i: int):
         """Publish the completing row's decode pages under the prompt's
         extended hash chain, so a future prompt that continues this
-        conversation (old prompt + generated tokens + new turn) hits them.
+        conversation (unpadded old prompt + generated tokens + new turn)
+        hits them at any length. The prompt's hash chain covers only its
+        full pages, so the extension stream starts at the prompt's partial
+        tail (those tokens share their page with the first generated ones).
         Only blocks whose ps tokens are all *kept* are promoted — a block
         reaching into tokens discarded after an EOS mid-scan holds KV the
-        request never acknowledged."""
+        request never acknowledged. DESIGN.md §7."""
         r, stream, chain = self.rows[i], self.streams[i], self.row_chain[i]
-        if r is None or stream is None or not chain:
+        if r is None or stream is None:
             return
         ps = self.page_size
-        S, nb = len(stream), len(stream) // ps
+        S, nb = len(stream), len(stream) // ps       # nb = full prompt pages
         kept = S + len(r.generated)
         if kept // ps <= nb:
             return
-        gen = np.asarray(r.generated, np.int32)[:(kept // ps) * ps - S]
-        for j, h in enumerate(PG.chain_hashes(gen, ps, parent=chain[-1])):
+        ext = np.concatenate([stream[nb * ps:],
+                              np.asarray(r.generated, np.int32)])
+        ext = ext[:(kept // ps) * ps - nb * ps]
+        parent = chain[-1] if chain else None        # S < ps: seed the chain
+        for j, h in enumerate(PG.chain_hashes(ext, ps, parent=parent)):
             self.allocator.register(int(self.tables[i, nb + j]), h)
 
     # -- contiguous backend ------------------------------------------------
@@ -392,46 +418,10 @@ class ContinuousBatcher:
         return self._decode_tick(active)
 
     # -- paged backend -----------------------------------------------------
-    def _pages_needed(self, prompt_pad: int, max_new: int) -> int:
+    def _pages_needed(self, prompt_len: int, max_new: int) -> int:
         # delegates to the module-level single source of the reservation
-        # policy (padding is idempotent: prompt_pad is already a multiple)
-        return pages_for_request(prompt_pad, max_new, self.page_size)
-
-    def _admit_paged(self) -> tuple[list[int], int]:
-        """Admit queued requests into free rows while the free-page budget
-        covers every selected row's padded prompt + decode reservation.
-        Returns (admitted row ids, common padded prompt length).
-
-        An admission group shares one padded prompt length S, so only
-        requests whose own padded length equals the group's join it; others
-        wait for a later tick. Padding a short prompt up to a longer row's S
-        would make it attend over pad tokens — diverging from a solo run —
-        and inflate its page reservation (DESIGN.md §6)."""
-        free_rows = [i for i in range(self.batch) if self.rows[i] is None]
-        selected: list[Request] = []
-        S = 0
-        while free_rows[len(selected):] and self.queue:
-            cand = self.queue[0]                 # validated at submit()
-            own = self._pad(len(cand.prompt))
-            if selected and own != S:
-                break                     # different pad length: next group
-            need = sum(self._pages_needed(own, r.max_new_tokens)
-                       for r in selected + [cand])
-            if need > self.allocator.available:
-                break
-            selected.append(self.queue.popleft())
-            S = own
-        newly = []
-        for req in selected:
-            i = free_rows[len(newly)]
-            self.rows[i] = req
-            n = self._pages_needed(S, req.max_new_tokens)
-            ids = self.allocator.alloc(n)
-            self.row_pages[i] = ids
-            self.tables[i, :] = 0
-            self.tables[i, :n] = ids
-            newly.append(i)
-        return newly, S
+        # policy (unpadded prompt + decode budget, in whole pages)
+        return pages_for_request(prompt_len, max_new, self.page_size)
 
     def _sync_device(self):
         """Push host allocator state (page tables, per-row lengths, free
@@ -468,82 +458,49 @@ class ContinuousBatcher:
 
         self.state = rec(self.state)
 
-    def _step_paged(self) -> list[Request]:
-        if self.chunked_admission:
-            return self._step_paged_chunked()
-        newly, S = self._admit_paged()
-        active = [i for i, r in enumerate(self.rows) if r is not None]
-        if not active:
-            return []
-        if self.state is None:
-            self.state = self._init_state(self.batch)
-        if newly:
-            self._sync_device()
-            toks = np.zeros((self.batch, S), np.int32)
-            mask = np.zeros((self.batch,), bool)
-            for i in newly:
-                p = self.rows[i].prompt
-                toks[i, S - len(p):] = p          # left-pad to the group S
-                mask[i] = True
-            logits, self.state = self._prefill(
-                self.params, {"tokens": jnp.asarray(toks)}, self.state,
-                jnp.asarray(mask))
-            nxt = self._sample(logits)
-            for i in newly:
-                self.tok[i, 0] = nxt[i]
-                self.pos[i] = S
-        row_mask = np.zeros((self.batch,), bool)
-        row_mask[active] = True                  # freeze empty rows' caches
-        done = self._decode_tick(active, row_mask)
-        if done:
-            # zero freed rows' device tables/lengths and return their pages
-            # to the device free list immediately (keeps the device state an
-            # honest mirror for memory reports / checkpointing)
-            self._sync_device()
-        return done
-
-    # -- chunked prefill admission + prefix caching (DESIGN.md §7) ---------
-    def _cap_hits(self, match_pages: int, nb_prompt: int) -> int:
-        """Usable hit length for a prompt of ``nb_prompt`` pages, given a
-        ``match_pages``-deep index match. Hits are rounded down to a chunk
-        boundary (so the remaining chunks land on the same grid a miss run
-        uses — the bitwise hit==miss property needs identical chunking) and
-        capped below the full prompt (the final chunk must always compute:
-        it produces the last-position logits the first token is sampled
-        from)."""
-        cp = self.prefill_chunk_tokens // self.page_size
-        h = min(match_pages, nb_prompt)
-        h -= h % cp
-        if h >= nb_prompt:
-            h = nb_prompt - cp
-        return max(h, 0)
+    # -- varlen chunked admission + prefix caching (DESIGN.md §7) ----------
+    def _cap_hits(self, match_pages: int, prompt_len: int) -> int:
+        """Usable hit length in *tokens* for an unpadded prompt of
+        ``prompt_len`` tokens, given a ``match_pages``-deep index match
+        over its full pages. Hits are rounded down to a chunk boundary (so
+        the remaining chunks land on the same grid a miss run uses — the
+        bitwise hit==miss property needs identical chunking) and capped
+        below the prompt's final chunk (it must always compute: it produces
+        the last-valid-position logits the first token is sampled from)."""
+        cp = self.prefill_chunk_tokens
+        cpp = cp // self.page_size
+        n_chunks = -(-prompt_len // cp)
+        hit_chunks = min(match_pages // cpp, n_chunks - 1)
+        return max(hit_chunks, 0) * cp
 
     def _admit_chunked(self) -> bool:
-        """Admit queued requests into free rows, one at a time (no padded-
-        length grouping — rows prefill independently). For each candidate:
-        match its padded prompt's hash chain against the index, adopt hit
-        pages by refcount, allocate the rest (reclaiming evictable cached
-        pages LRU-first under pressure), and start its prefill cursor past
-        the hits. Admission is gated by `HostPageAllocator.available`.
-        Returns True when page tables changed (device sync required)."""
+        """Admit queued requests into free rows, one at a time (no length
+        grouping of any kind — rows prefill independently). For each
+        candidate: hash the *unpadded* prompt's full pages, match the chain
+        against the index, adopt hit pages by refcount, allocate the rest
+        (reclaiming evictable cached pages LRU-first under pressure), and
+        start its prefill cursor past the hits. Admission is gated by
+        `HostPageAllocator.available_after_adopt`. Returns True when page
+        tables changed (device sync required). DESIGN.md §7."""
+        ps = self.page_size
         changed = False
         for i in range(self.batch):
             if self.rows[i] is not None or not self.queue:
                 continue
             cand = self.queue[0]                 # validated at submit()
-            S = self._pad(len(cand.prompt))
-            nb = S // self.page_size
+            S = len(cand.prompt)                 # true length — no padding
+            nb = S // ps                         # hashable full pages
             total = self._pages_needed(S, cand.max_new_tokens)
             if id(cand) in self._admit_memo:     # blocked-head retry
                 toks, chain = self._admit_memo[id(cand)]
             else:
-                toks = np.zeros((S,), np.int32)
-                toks[S - len(cand.prompt):] = cand.prompt
-                chain = (PG.chain_hashes(toks, self.page_size)
+                toks = np.asarray(cand.prompt, np.int32)
+                chain = (PG.chain_hashes(toks[:nb * ps], ps)
                          if self.prefix_cache else [])
                 self._admit_memo[id(cand)] = (toks, chain)
-            hit = self._cap_hits(self.allocator.match(chain), nb) \
+            hit_toks = self._cap_hits(self.allocator.match(chain), S) \
                 if self.prefix_cache else 0
+            hit = hit_toks // ps                 # adopted pages
             # gate on what is allocatable AFTER adoption: hit pages sitting
             # on the LRU stop being evictable the moment they are adopted
             if total - hit > self.allocator.available_after_adopt(chain[:hit]):
@@ -560,9 +517,8 @@ class ContinuousBatcher:
             self.tables[i, :total] = ids
             self.streams[i] = toks
             self.row_chain[i] = chain
-            self.prefilling[i] = {"toks": toks, "cursor": hit * self.page_size,
-                                  "S": S}
-            self.pos[i] = hit * self.page_size
+            self.prefilling[i] = {"toks": toks, "cursor": hit_toks, "S": S}
+            self.pos[i] = hit_toks
             self.tok[i, 0] = 0
             changed = True
         return changed
@@ -583,45 +539,67 @@ class ContinuousBatcher:
                 make_chunk_prefill_fn(self.cfg, hist_blocks=hb))
         return fn
 
-    def _advance_prefill(self):
-        """Advance one page-aligned prompt chunk for the mid-prefill rows.
+    def _chunk_width(self, rem: int) -> int:
+        """Dispatch width (tokens) for a row whose prompt has ``rem`` tokens
+        left: full chunks use the configured chunk size; a final partial
+        chunk is rounded up to a power-of-two page count (capped at the
+        chunk size), so the compile set of chunk shapes stays
+        O(log chunk_pages) instead of one shape per possible remainder —
+        the varlen analogue of the padded path's fixed grid (DESIGN.md §7).
+        Tokens between ``rem`` and the width are dispatch padding: masked
+        out of every write and never part of any row's stream."""
+        cp = self.prefill_chunk_tokens
+        if rem >= cp:
+            return cp
+        pages = -(-rem // self.page_size)
+        return min(self.page_size * (1 << (pages - 1).bit_length()), cp)
 
-        Every prefilling row whose next chunk has the same token count as
-        the round-robin head's rides the same dispatch (per-row ``start``
-        cursors make one traced shape serve rows at different offsets);
-        rows with a different (final, short) chunk wait for their own tick.
-        Each chunk attends over its row's resident pages — cache hits
-        included — and its freshly written pages are published to the hash
-        index immediately, so a concurrent identical prompt shares them
-        while this one is still prefilling. A row's final chunk yields its
-        last-position logits; the row then joins the decode set in the same
-        tick."""
+    def _advance_prefill(self):
+        """Advance one prompt chunk for the mid-prefill rows.
+
+        Every prefilling row whose next chunk needs the same dispatch
+        *width* as the round-robin head's rides the same dispatch — per-row
+        ``start`` cursors and ``valid`` lengths make one traced shape serve
+        rows at different offsets AND different final-chunk lengths (rows
+        only wait for their own tick when their pow2 width differs). Each
+        chunk attends over its row's resident pages — cache hits included —
+        and its freshly *completed* pages are published to the hash index
+        immediately, so a concurrent identical prompt shares them while
+        this one is still prefilling; a final chunk's partial page stays
+        unpublished (it lives in the fp residual, still mutable). A row's
+        final chunk yields its last-valid-position logits; the row then
+        joins the decode set in the same tick. DESIGN.md §7."""
         if not self.prefilling:
             return
+        ps = self.page_size
         order = sorted(self.prefilling)
         head = order[self._pf_rr % len(order)]
         self._pf_rr += 1
-        c_of = {i: min(self.prefill_chunk_tokens,
-                       st["S"] - st["cursor"])
-                for i, st in self.prefilling.items()}
-        c = c_of[head]
-        group = [i for i in order if c_of[i] == c]
-        toks = np.zeros((self.batch, c), np.int32)
+        rem_of = {i: st["S"] - st["cursor"]
+                  for i, st in self.prefilling.items()}
+        w = self._chunk_width(rem_of[head])
+        group = [i for i in order if self._chunk_width(rem_of[i]) == w]
+        toks = np.zeros((self.batch, w), np.int32)
         start = np.zeros((self.batch,), np.int32)
+        valid = np.zeros((self.batch,), np.int32)
         mask = np.zeros((self.batch,), bool)
         for i in group:
             st = self.prefilling[i]
-            toks[i] = st["toks"][st["cursor"]:st["cursor"] + c]
+            c = min(self.prefill_chunk_tokens, rem_of[i])
+            toks[i, :c] = st["toks"][st["cursor"]:st["cursor"] + c]
             start[i] = st["cursor"]
+            valid[i] = c
             mask[i] = True
         logits, self.state = self._chunk_prefill_fn(int(start.max()))(
             self.params, jnp.asarray(toks), self.state, jnp.asarray(start),
-            jnp.asarray(mask))
+            jnp.asarray(valid), jnp.asarray(mask))
         sampled = None
         for i in group:
             st = self.prefilling[i]
+            c = int(valid[i])
             if self.prefix_cache:
-                ps = self.page_size
+                # only pages fully covered by [cursor, cursor + c) are
+                # immutable and publishable; a trailing partial page is not
                 for b in range(st["cursor"] // ps, (st["cursor"] + c) // ps):
                     self.allocator.register(int(self.tables[i, b]),
                                             self.row_chain[i][b])
@@ -657,11 +635,12 @@ class ContinuousBatcher:
                     changed = True
         return changed
 
-    def _step_paged_chunked(self) -> list[Request]:
-        """One tick of chunked admission: admit (hash-match + adopt +
-        alloc), advance one prefill chunk, then decode one scanned chunk
-        for the rows that are past prefill. Prefill and decode interleave
-        tick by tick, so a long prompt never stalls running decodes."""
+    def _step_paged(self) -> list[Request]:
+        """One paged tick — always varlen chunked admission (DESIGN.md §7):
+        admit (hash-match + adopt + alloc), advance one prefill chunk, then
+        decode one scanned chunk for the rows that are past prefill.
+        Prefill and decode interleave tick by tick, so a long prompt never
+        stalls running decodes."""
         if self.state is None:
             self.state = self._init_state(self.batch)
         if self._admit_chunked():

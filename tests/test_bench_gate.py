@@ -1,0 +1,114 @@
+"""The CI bench regression gate gates itself: synthetic >15% regressions
+must fail `benchmarks/check_regression.compare`, in-band noise and
+uniform hardware slowdowns must pass, and the committed artifacts must
+parse into a non-empty metric set (so the CI step can never pass
+vacuously)."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.check_regression import (collect, compare, decode_metrics,
+                                         prefix_metrics, main)
+
+
+def _decode(tokens_s=1000.0, us_per_step=500.0, seed_tokens_s=500.0,
+            seed_us_per_step=1000.0):
+    return {"mixes": {"full_len": {"e2e": {
+        "tokens_s": tokens_s, "us_per_step": us_per_step,
+        "seed_tokens_s": seed_tokens_s,
+        "seed_us_per_step": seed_us_per_step}}}}
+
+
+def _prefix(speedup=2.5, hit_rate=0.87):
+    return {"rows": [{"config": "shared90", "ttft_speedup": speedup,
+                      "page_hit_rate": hit_rate},
+                     {"config": "shared00", "ttft_speedup": 0.8,
+                      "page_hit_rate": 0.0}]}
+
+
+def test_gate_fails_on_synthetic_regressions():
+    base = collect(_decode(), _prefix())
+    # >15% tokens/s drop (seed measurement unchanged -> real regression)
+    assert compare(base, collect(_decode(tokens_s=800.0), _prefix()))
+    # >15% us/step increase (lower-is-better direction)
+    assert compare(base, collect(_decode(us_per_step=600.0), _prefix()))
+    # >15% TTFT-speedup drop at the 90% mix
+    assert compare(base, collect(_decode(), _prefix(speedup=2.0)))
+    # hit-rate collapse (hardware-independent structural signal)
+    assert compare(base, collect(_decode(), _prefix(hit_rate=0.4)))
+
+
+def test_gate_passes_within_threshold_and_on_improvement():
+    base = collect(_decode(), _prefix())
+    ok = collect(_decode(tokens_s=900.0, us_per_step=560.0),
+                 _prefix(speedup=2.2))          # all within 15%
+    assert compare(base, ok) == []
+    better = collect(_decode(tokens_s=5000.0, us_per_step=100.0),
+                     _prefix(speedup=9.0))
+    assert compare(base, better) == []
+
+
+def test_gate_cancels_uniform_hardware_slowdown():
+    """A runner that is 2x slower than the baseline host moves the measured
+    AND seed timings together; the gated metrics are same-run ratios, so
+    nothing trips — the gate flags code regressions, not runner draws."""
+    base = collect(_decode(), _prefix())
+    slow_host = collect(_decode(tokens_s=500.0, us_per_step=1000.0,
+                                seed_tokens_s=250.0,
+                                seed_us_per_step=2000.0), _prefix())
+    assert compare(base, slow_host) == []
+
+
+def test_gate_fails_on_deleted_metric():
+    """Removing a benchmark must not green-wash its regression."""
+    base = collect(_decode(), _prefix())
+    assert compare(base, collect(_decode(), None))   # prefix metric gone
+
+
+def test_gate_ignores_new_metrics_without_baseline():
+    base = collect(_decode(), None)
+    cur = collect(_decode(), _prefix())              # new metric appears
+    assert compare(base, cur) == []
+
+
+def test_committed_artifacts_yield_metrics():
+    """The real artifacts parse and produce every gated metric — an empty
+    metric set would make the CI gate pass without checking anything."""
+    decode = json.loads((ROOT / "BENCH_decode.json").read_text())
+    prefix = json.loads((ROOT / "BENCH_prefix.json").read_text())
+    m = collect(decode, prefix)
+    assert any(k.endswith(".tokens_s_vs_seed") for k in m)
+    assert any(k.endswith(".us_per_step_vs_seed") for k in m)
+    assert "prefix.shared90.ttft_speedup" in m
+    # self-comparison is the identity: committed vs committed passes
+    assert compare(m, m) == []
+
+
+def test_gate_cli_detects_regression(tmp_path):
+    """End-to-end through main(): a fresh artifact with a >15% regression
+    against a file baseline exits non-zero; the clean case exits zero."""
+    bdir, cdir = tmp_path / "base", tmp_path / "cur"
+    bdir.mkdir(), cdir.mkdir()
+    for d, dec, pre in ((bdir, _decode(), _prefix()),
+                        (cdir, _decode(tokens_s=700.0), _prefix())):
+        (d / "BENCH_decode.json").write_text(json.dumps(dec))
+        (d / "BENCH_prefix.json").write_text(json.dumps(pre))
+    assert main(["--baseline-dir", str(bdir), "--current-dir",
+                 str(cdir)]) == 1
+    (cdir / "BENCH_decode.json").write_text(json.dumps(_decode()))
+    assert main(["--baseline-dir", str(bdir), "--current-dir",
+                 str(cdir)]) == 0
+
+
+def test_metric_directions():
+    d = decode_metrics(_decode())
+    assert d["decode.full_len.tokens_s_vs_seed"][1] is True   # higher better
+    assert d["decode.full_len.us_per_step_vs_seed"][1] is False
+    p = prefix_metrics(_prefix())
+    assert p["prefix.shared90.ttft_speedup"][1] is True
+    assert p["prefix.shared90.page_hit_rate"][1] is True

@@ -206,25 +206,30 @@ def test_prefix_cache_eviction_under_pool_pressure():
 
 
 def test_prefix_cache_conversation_continuation_hits_decode_pages():
-    """Promotion at release: a request whose prompt extends (padded prompt +
-    generated tokens) of a finished request hits the finished request's
-    *decode* pages, not just its prompt pages."""
+    """Promotion at release: a request whose prompt naturally continues a
+    finished conversation (unpadded old prompt + generated tokens + a new
+    turn) hits the finished request's *decode* pages, not just its prompt
+    pages — with NO padded-view resend and a total length not congruent to
+    the original's mod page_size (the case the pre-varlen alignment caveat
+    forbade)."""
     cfg, params = _smoke()
     rng = np.random.RandomState(7)
-    pa = rng.randint(0, cfg.vocab, (12,)).astype(np.int32)   # padded to 16
+    pa = rng.randint(0, cfg.vocab, (12,)).astype(np.int32)   # 12 = 1.5 pages
     b = ContinuousBatcher(params, cfg, batch=1, max_len=64, paged=True,
                           prefix_cache=True, prefill_chunk=8)
     b.submit(Request(uid=0, prompt=pa, max_new_tokens=16))
     gen = b.run_to_completion(max_ticks=400)[0].generated
-    stream_a = np.zeros((16,), np.int32)
-    stream_a[16 - len(pa):] = pa                             # A's padded view
-    follow = np.concatenate([stream_a, np.asarray(gen, np.int32)])
+    # the client resends exactly what it saw: prompt + completion + new turn
+    turn = rng.randint(0, cfg.vocab, (3,)).astype(np.int32)
+    follow = np.concatenate([pa, np.asarray(gen, np.int32), turn])
+    assert len(follow) % 8 != len(pa) % 8    # lengths not congruent mod ps
     hits_before = b.allocator.hits
     b.submit(Request(uid=1, prompt=follow.astype(np.int32), max_new_tokens=4))
     done = b.run_to_completion(max_ticks=400)
     assert len(done) == 1
-    # prompt is 32 tokens = 4 pages; 2 are A's prompt pages, 2 its decode
-    # pages; the cap keeps the last page computed -> 3 hits
+    # follow is 31 tokens = 3 full pages + a partial: page 0 is A's prompt
+    # page, pages 1-2 span A's prompt tail + decode tokens (promoted at A's
+    # release); all 3 hit — the partial page always computes
     assert b.allocator.hits - hits_before >= 3
 
 
@@ -357,15 +362,26 @@ def _sharpened_params(cfg):
 
 
 def test_chunked_prefill_parity_with_whole_prompt():
-    """Chunked prefill (page-sized chunks, dequantized-history attention)
-    generates the same tokens as the default whole-prompt group prefill,
-    including a request that stops on EOS immediately after prefill while
-    another row is still mid-prompt."""
+    """Varlen chunked prefill generates the same tokens as an INDEPENDENT
+    whole-prompt reference — `greedy_generate` (contiguous cache, one
+    whole-prompt prefill + teacher-forced remainder + decode scan shares
+    no scheduler or chunk-attention code with the paged path), so a
+    systematic bug in the chunk path (wrong last-valid gather, position
+    offset) cannot cancel out of both arms. Also pins EOS semantics: a
+    request that stops on EOS immediately after prefill while another row
+    is still mid-prompt behaves identically across chunk sizes."""
+    import jax.numpy as jnp
+    from repro.serving import greedy_generate
     cfg = get_config("internlm2_1_8b", smoke=True)
     params, data = _sharpened_params(cfg)
     prompts = [np.asarray(data.batch_at(100 + i)["tokens"][0, :12], np.int32)
                for i in range(3)]
     mnew = [6, 3, 5]
+    # independent whole-prompt reference, one prompt at a time
+    whole = {i: list(np.asarray(greedy_generate(
+                 params, cfg, jnp.asarray(p[None]), steps=m,
+                 max_len=64))[0])
+             for i, (p, m) in enumerate(zip(prompts, mnew))}
 
     def run(eos_id=None, **kw):
         b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True,
@@ -376,9 +392,10 @@ def test_chunked_prefill_parity_with_whole_prompt():
         assert len(done) == 3
         return {r.uid: r.generated for r in done}
 
-    whole, chunked = run(), run(prefill_chunk=8)
-    for i in range(3):
-        assert chunked[i] == whole[i], f"request {i} diverged under chunks"
+    for chunked in (run(), run(prefill_chunk=8)):
+        for i in range(3):
+            assert chunked[i] == whole[i], \
+                f"request {i} diverged from the whole-prompt reference"
     # EOS == the first sampled token of request 0: it must complete with
     # exactly one token right after its final chunk, others unaffected
     eos = whole[0][0]

@@ -109,9 +109,9 @@ def test_paged_batcher_more_requests_than_rows():
 
 
 def test_paged_batcher_mixed_prompt_lengths_match_solo():
-    """Requests with different prompt lengths must not be padded into one
-    admission group (a short row padded to a long row's length would attend
-    over pad tokens); every request still matches its solo run exactly."""
+    """Varlen admission: requests with different (unpadded, non-page-
+    aligned) prompt lengths admit together with no padding anywhere; every
+    request still matches its solo run exactly."""
     cfg = get_config("internlm2_1_8b", smoke=True)
     params = T.init_params(cfg, jax.random.PRNGKey(2))
     rng = np.random.RandomState(4)
@@ -197,8 +197,9 @@ def test_paged_batcher_admits_by_page_budget():
                for _ in range(3)]
     solo = [_solo_generate(params, cfg, p, 4, paged=True, chunk=1)
             for p in prompts]
-    # one request needs ceil((8+4)/8)=2 pages; 3 allocatable pages => the
-    # second row can never be admitted concurrently... until a free.
+    # one request needs ceil((6+4)/8)=2 pages (unpadded varlen reservation);
+    # 3 allocatable pages => the second row can never be admitted
+    # concurrently... until a free.
     # chunk=1: the budget-starved window is observed between individual
     # tokens (default chunking would run the lone row to completion).
     b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True,
