@@ -7,7 +7,9 @@ working tree copies in place) and exits non-zero when any tracked metric
 regresses by more than the threshold:
 
   * ``tokens_s`` (higher is better) and ``us_per_step`` (lower is better)
-    for every mix in BENCH_decode.json's e2e section
+    for every mix in BENCH_decode.json's e2e section, plus the
+    sampled-decode arm's ``sampled_us_per_step`` (on-device temperature /
+    top-p sampling inside the same scan)
   * the 90%-shared-mix ``ttft_speedup`` (higher is better) from
     BENCH_prefix.json
 
@@ -67,6 +69,15 @@ def decode_metrics(data: dict) -> dict[str, tuple[float, bool]]:
         if "speedup_vs_seed" in e2e:
             out[f"decode.{mix}.speedup_vs_seed"] = (
                 float(e2e["speedup_vs_seed"]), True)
+        # sampled-decode arm (T=0.8 / top_p=0.9 on-device): normalized by
+        # the same run's seed loop, so the ratio cancels runner hardware —
+        # a regression means on-device sampling itself got slower relative
+        # to the greedy baseline, not that CI drew a slower machine
+        if ("sampled_us_per_step" in e2e
+                and float(e2e.get("seed_us_per_step", 0)) > 0):
+            out[f"decode.{mix}.sampled_us_per_step_vs_seed"] = (
+                float(e2e["sampled_us_per_step"]) /
+                float(e2e["seed_us_per_step"]), False)
     return out
 
 

@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving import ContinuousBatcher, Request
+from repro.serving import ContinuousBatcher, EngineConfig, Request
 
 # (name, prompt lengths cycled over the queue, max_new per request)
 MIXES = [
@@ -77,15 +77,17 @@ def run():
         prompts = [rng.randint(0, cfg.vocab, (lens[i % len(lens)],))
                    .astype(np.int32) for i in range(N_REQUESTS)]
         tps_c, _ = _drive(
-            ContinuousBatcher(params, cfg, batch=BATCH, max_len=MAX_LEN),
+            ContinuousBatcher(params, cfg,
+                              EngineConfig(batch=BATCH, max_len=MAX_LEN)),
             prompts, max_new)
         # pool sized to the mix's worst concurrent demand, not max_len
         from repro.serving.scheduler import pages_for_request
         need = max(pages_for_request(l, max_new, ps) for l in lens)
         n_pages = BATCH * need + 1
         tps_p, hi = _drive(
-            ContinuousBatcher(params, cfg, batch=BATCH, max_len=MAX_LEN,
-                              paged=True, n_pages=n_pages),
+            ContinuousBatcher(params, cfg,
+                              EngineConfig(batch=BATCH, max_len=MAX_LEN,
+                                           paged=True, n_pages=n_pages)),
             prompts, max_new)
         rows.append({
             "bench": "paged_vs_contiguous", "config": name,

@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving import ContinuousBatcher, Request
+from repro.serving import ContinuousBatcher, EngineConfig, Request
 
 # (name, fraction of the prompt shared by every request in the mix)
 MIXES = [
@@ -101,11 +101,9 @@ def _bench_one(params, cfg, frac, *, prefix_cache, seed):
     mix's shared prefix resident, time the 8-request queue. Both arms use
     identical varlen chunked prefill — `prefix_cache` toggles only the
     hash-index lookup, so the speedup is caching, not chunking."""
-    kw = dict(batch=BATCH, max_len=MAX_LEN, paged=True, n_pages=N_PAGES,
-              prefill_chunk=PREFILL_CHUNK)
-    if prefix_cache:
-        kw.update(prefix_cache=True)
-    b = ContinuousBatcher(params, cfg, **kw)
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=BATCH, max_len=MAX_LEN, paged=True, n_pages=N_PAGES,
+        prefill_chunk=PREFILL_CHUNK, prefix_cache=prefix_cache))
     # jit caches live on the batcher's closures — warm them with unrelated
     # prompts (offset token stream never collides with measured hashes)
     warm_rng = np.random.RandomState(10_000 + seed)

@@ -1,7 +1,8 @@
 """END-TO-END DRIVER (the paper's kind = inference): serve a small model
-with batched requests through the continuous-batching scheduler over the
-INT8-quantized KV cache, and report the accuracy impact (greedy outputs
-with INT8 cache vs an fp32-equivalent run).
+with batched requests through the LLMEngine request-lifecycle API over the
+INT8-quantized KV cache — offline generate, per-request sampling, online
+streaming with abort — and report the accuracy impact (greedy outputs with
+INT8 cache vs an fp32-equivalent run).
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -18,7 +19,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.quantization import QuantConfig
 from repro.models import transformer as T
-from repro.serving import ContinuousBatcher, Request, greedy_generate
+from repro.serving import (EngineConfig, LLMEngine, SamplingParams,
+                           greedy_generate)
 
 ARCH = "internlm2_1_8b"
 
@@ -26,39 +28,57 @@ ARCH = "internlm2_1_8b"
 def main():
     cfg = get_config(ARCH, smoke=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-
-    # --- batched serving through the scheduler ------------------------------
-    batcher = ContinuousBatcher(params, cfg, batch=4, max_len=64)
     rng = np.random.RandomState(0)
     n_req = 10
-    for i in range(n_req):
-        batcher.submit(Request(uid=i,
-                               prompt=rng.randint(0, cfg.vocab, (8,)).astype(np.int32),
-                               max_new_tokens=6))
-    done = batcher.run_to_completion()
-    print(f"[serve_batched] {len(done)}/{n_req} requests served "
-          f"(continuous batching, 4 rows)")
+    prompts = [rng.randint(0, cfg.vocab, (8,)).astype(np.int32)
+               for _ in range(n_req)]
 
-    # --- same queue through the paged backend (page-budget admission) -------
-    paged = ContinuousBatcher(params, cfg, batch=4, max_len=64, paged=True,
-                              n_pages=4 * 2 + 1)   # ~2 pages per row
-    for i in range(n_req):
-        paged.submit(Request(uid=i,
-                             prompt=rng.randint(0, cfg.vocab, (8,)).astype(np.int32),
-                             max_new_tokens=6))
-    done_p = paged.run_to_completion()
-    print(f"[serve_batched] {len(done_p)}/{n_req} requests served paged "
-          f"(pool {paged.n_pages - 1} pages, "
-          f"{len(paged.free_pages)} free after drain)")
+    # --- offline generate through the paged engine (production path) --------
+    eng = LLMEngine(params, cfg, EngineConfig(batch=4, max_len=64,
+                                              paged=True))
+    outs = eng.generate(prompts, SamplingParams.greedy(max_new_tokens=6))
+    print(f"[serve_batched] {len(outs)}/{n_req} requests served greedy "
+          f"(paged continuous batching, 4 rows)")
+
+    # --- mixed per-request sampling: one dispatch per chunk serves rows ----
+    # with different temperatures/top-p AND exact-greedy neighbors
+    sps = [SamplingParams(temperature=0.8, top_p=0.9, seed=i,
+                          max_new_tokens=6) if i % 2 else
+           SamplingParams.greedy(max_new_tokens=6)
+           for i in range(n_req)]
+    eng2 = LLMEngine(params, cfg, EngineConfig(batch=4, max_len=64,
+                                               paged=True))
+    outs2 = eng2.generate(prompts, sps)
+    rep = eng2.pool_report()
+    print(f"[serve_batched] {len(outs2)}/{n_req} served mixed "
+          f"sampled/greedy, TTFT p50 {rep['ttft_s_p50']*1e3:.0f}ms")
+
+    # --- online streaming + abort ------------------------------------------
+    eng3 = LLMEngine(params, cfg, EngineConfig(batch=2, max_len=64,
+                                               paged=True, chunk=1))
+    keep = eng3.add_request(prompts[0],
+                            SamplingParams.greedy(max_new_tokens=6))
+    drop = eng3.add_request(prompts[1],
+                            SamplingParams.greedy(max_new_tokens=12))
+    streamed = 0
+    for _ in range(3):
+        streamed += sum(len(o.new_token_ids) for o in eng3.step())
+    aborted = eng3.abort(drop)
+    while eng3.has_unfinished():
+        streamed += sum(len(o.new_token_ids) for o in eng3.step())
+    print(f"[serve_batched] streamed {streamed} token deltas; aborted "
+          f"req {aborted.uid} after {len(aborted.token_ids)} tokens "
+          f"(finish={aborted.finish_reason}), pool balanced: "
+          f"{eng3.pool_report()['pages_allocated'] == 0}")
 
     # --- INT8-cache vs near-lossless cache: greedy-output agreement ---------
-    prompts = jnp.asarray(rng.randint(0, cfg.vocab, (4, 12)), jnp.int32)
-    out_int8 = greedy_generate(params, cfg, prompts, steps=8)
+    batch = jnp.asarray(rng.randint(0, cfg.vocab, (4, 12)), jnp.int32)
+    out_int8 = greedy_generate(params, cfg, batch, steps=8)
 
     cfg_fine = dataclasses.replace(
         cfg, quant=QuantConfig(granularity="per_block", block_size=8,
                                ref_dtype=jnp.float32))
-    out_fine = greedy_generate(params, cfg_fine, prompts, steps=8)
+    out_fine = greedy_generate(params, cfg_fine, batch, steps=8)
     agree = float(jnp.mean((out_int8 == out_fine).astype(jnp.float32)))
     print(f"[serve_batched] greedy-token agreement int8-vs-int8(fp32-resid): "
           f"{agree:.2%}")

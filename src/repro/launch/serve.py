@@ -1,7 +1,8 @@
-"""Serving launcher: continuous-batching decode over the INT8 KV cache.
+"""Serving launcher: the LLMEngine request-lifecycle API over the INT8 KV
+cache (continuous batching, per-request sampling, streaming outputs).
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \
-        --smoke --requests 8 --max-new 16
+        --smoke --requests 8 --max-new 16 --temperature 0.8 --top-p 0.9
 """
 from __future__ import annotations
 
@@ -44,6 +45,23 @@ def main(argv=None):
                          "long prompts interleave with decode ticks and "
                          "the final partial chunk carries a per-row valid "
                          "length (implies --paged)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = exact greedy argmax, "
+                         "the default). Sampling runs on-device inside "
+                         "the decode scan — DESIGN.md §6")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k most likely tokens (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="per-request PRNG seed base: request i uses "
+                         "seed+i, so a rerun reproduces bitwise (default: "
+                         "derived from each request's uid)")
+    ap.add_argument("--stop", action="append", default=None,
+                    help="stop string (repeatable), matched against the "
+                         "detokenized stream at chunk boundaries; with no "
+                         "tokenizer configured, token id T renders as "
+                         "'<T>'")
     args = ap.parse_args(argv)
     if args.prefix_cache or args.prefill_chunk:
         args.paged = True
@@ -53,8 +71,8 @@ def main(argv=None):
 
     from repro.configs import get_config
     from repro.models import transformer
-    from repro.serving import ContinuousBatcher, Request, \
-        kv_cache_memory_report
+    from repro.serving import (EngineConfig, LLMEngine, SamplingParams,
+                               kv_cache_memory_report)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     rep = kv_cache_memory_report(get_config(args.arch), 128, 32_768)
@@ -63,28 +81,36 @@ def main(argv=None):
           f"int8={rep['int8_bytes']/2**30:.0f}GiB (4x reduction)")
 
     params = transformer.init_params(cfg, jax.random.PRNGKey(0))
-    b = ContinuousBatcher(params, cfg, batch=args.batch,
-                          max_len=args.max_len, paged=args.paged,
-                          n_pages=args.pages, chunk=args.chunk,
-                          prefix_cache=args.prefix_cache,
-                          prefill_chunk=args.prefill_chunk)
+    eng = LLMEngine(params, cfg, EngineConfig(
+        batch=args.batch, max_len=args.max_len, paged=args.paged,
+        n_pages=args.pages, chunk=args.chunk,
+        prefix_cache=args.prefix_cache, prefill_chunk=args.prefill_chunk))
     rng = np.random.RandomState(0)
-    for i in range(args.requests):
-        b.submit(Request(uid=i,
-                         prompt=rng.randint(0, cfg.vocab,
-                                            (args.prompt_len,)).astype(np.int32),
-                         max_new_tokens=args.max_new))
+    prompts = [rng.randint(0, cfg.vocab,
+                           (args.prompt_len,)).astype(np.int32)
+               for _ in range(args.requests)]
+    stop = tuple(args.stop or ())
+    sps = [SamplingParams(
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        seed=None if args.seed is None else args.seed + i,
+        stop=stop, max_new_tokens=args.max_new)
+        for i in range(args.requests)]
     t0 = time.perf_counter()
-    done = b.run_to_completion()
+    outs = eng.generate(prompts, sps)
     dt = time.perf_counter() - t0
-    total_toks = sum(len(r.generated) for r in done)
-    print(f"[serve] completed {len(done)}/{args.requests} requests, "
-          f"{total_toks} tokens in {dt:.1f}s "
+    total_toks = sum(len(o.token_ids) for o in outs)
+    mode = ("greedy" if args.temperature == 0 else
+            f"T={args.temperature} top_k={args.top_k} top_p={args.top_p}")
+    print(f"[serve] completed {len(outs)}/{args.requests} requests "
+          f"({mode}), {total_toks} tokens in {dt:.1f}s "
           f"({total_toks/dt:.1f} tok/s host-CPU, "
-          f"{total_toks/max(b.ticks,1):.1f} tokens/dispatch "
-          f"over {b.ticks} ticks)")
+          f"{total_toks/max(eng.ticks,1):.1f} tokens/dispatch "
+          f"over {eng.ticks} ticks)")
+    rep = eng.pool_report()
+    print(f"[serve] lifecycle: {rep['aborted_requests']} aborted, "
+          f"TTFT p50/p90/p99 = {rep['ttft_s_p50']*1e3:.0f}/"
+          f"{rep['ttft_s_p90']*1e3:.0f}/{rep['ttft_s_p99']*1e3:.0f} ms")
     if args.paged:
-        rep = b.pool_report()
         print(f"[serve] page pool: {rep['pages_total']} pages, "
               f"{rep['pages_free']} free after drain, "
               f"{rep['pages_cached']} cached")
@@ -93,9 +119,11 @@ def main(argv=None):
                   f"{rep['page_hit_rate']:.2f} "
                   f"({rep['page_hits']} hits / {rep['page_misses']} misses), "
                   f"{rep['reclaims']} reclaims")
-    for r in done[:3]:
-        print(f"  req {r.uid}: {r.generated}")
-    return 0 if len(done) == args.requests else 1
+    for o in outs[:3]:
+        print(f"  req {o.uid}: {o.token_ids} "
+              f"(finish={o.finish_reason}, "
+              f"ttft={o.metrics['ttft_s']*1e3:.0f}ms)")
+    return 0 if len(outs) == args.requests else 1
 
 
 if __name__ == "__main__":

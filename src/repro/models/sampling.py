@@ -1,0 +1,92 @@
+"""On-device batched sampling: per-row temperature / top-k / top-p with
+per-request PRNG streams (DESIGN.md §6).
+
+Everything here is vectorized logit math over a `(B, V)` batch — no
+per-row Python, no host callback, no extra kernel launch — so mixed
+per-row sampling settings ride the SAME jitted decode dispatch greedy
+decode uses (`transformer.decode_scan` folds `sample_at_step` into its
+scan body). Rows with ``temperature == 0`` take the exact argmax branch,
+bitwise identical to the pure-greedy path, which is what makes a mixed
+sampled/greedy batch safe: a greedy neighbor cannot perturb a sampled
+row and vice versa.
+
+Reproducibility contract: token ``i`` of a request is drawn with
+``jax.random.fold_in(base_key, i)`` where ``base_key`` is the request's
+private key (`serving/params.request_key`). The key depends only on
+(seed, token index) — never on batch composition, chunk boundaries, or
+scheduler timing — so a seeded request replays bitwise whether it runs
+solo, mid-batch, or resumes after preemption.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30                    # mask value: exp() underflows to exact 0
+
+
+def fold_keys(base_keys: jax.Array, steps: jax.Array) -> jax.Array:
+    """Per-row step keys: fold token index ``steps[i]`` into row i's base
+    key. base_keys (B, 2) uint32, steps (B,) int32 -> (B, 2) uint32."""
+    return jax.vmap(jax.random.fold_in)(base_keys, steps)
+
+
+def _filter_logits(scaled: jax.Array, top_k: jax.Array,
+                   top_p: jax.Array) -> jax.Array:
+    """Apply the top-k then nucleus (top-p) filters with ONE shared
+    full-vocab sort (the dominant cost of a sampled step).
+
+    Top-k masks logits below each row's k-th largest (top_k == 0 keeps
+    all; ties at the threshold are kept — deterministic and row-local).
+    The masked logits' descending order is then derived from the same
+    sort — masking replaces exactly the sorted tail below the k-th value
+    — so the nucleus filter (keep the smallest descending-probability
+    prefix whose mass reaches top_p; always >= 1 token; top_p == 1 keeps
+    every positive-probability token) needs no second sort."""
+    V = scaled.shape[-1]
+    sorted_desc = -jnp.sort(-scaled, axis=-1)
+    k = jnp.where(top_k > 0, top_k, V)
+    kth = jnp.take_along_axis(sorted_desc,
+                              jnp.clip(k - 1, 0, V - 1)[:, None], axis=-1)
+    masked = jnp.where(scaled < kth, _NEG, scaled)
+    sorted_masked = jnp.where(sorted_desc < kth, _NEG, sorted_desc)
+    ps = jax.nn.softmax(sorted_masked, axis=-1)           # descending probs
+    cum = jnp.cumsum(ps, axis=-1)
+    p = jnp.clip(top_p, 1e-9, 1.0)[:, None]
+    keep = (cum - ps) < p          # token kept if mass BEFORE it is < p
+    n_keep = jnp.maximum(keep.sum(-1), 1)
+    # threshold in LOGIT space (softmax is strictly monotone, so the
+    # prob cutoff and the logit cutoff select identical tokens) — the
+    # threshold is an exact member of `masked`, so no ulp hazard
+    thresh = jnp.take_along_axis(sorted_masked, (n_keep - 1)[:, None],
+                                 axis=-1)
+    return jnp.where(masked < thresh, _NEG, masked)
+
+
+def sample(logits: jax.Array, vocab: int, temperature: jax.Array,
+           top_k: jax.Array, top_p: jax.Array, keys: jax.Array) -> jax.Array:
+    """Draw one token per row. logits (B, Vp) any float dtype; vocab
+    (static) trims head padding; temperature/top_k/top_p (B,); keys
+    (B, 2) uint32 per-row step keys. Returns (B,) int32.
+
+    Rows with temperature <= 0 return the exact argmax of the raw logits
+    (the cast to f32 is monotonic), so greedy requests are bitwise
+    unaffected by sharing a dispatch with sampled neighbors."""
+    lg = logits[..., :vocab].astype(jnp.float32)
+    greedy_tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    scaled = lg / jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = _filter_logits(scaled, top_k, top_p)
+    drawn = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temperature > 0, drawn, greedy_tok)
+
+
+def sample_at_step(logits: jax.Array, temperature: jax.Array,
+                   top_k: jax.Array, top_p: jax.Array, base_key: jax.Array,
+                   step: jax.Array, *, vocab: int) -> jax.Array:
+    """`sample` with the key derivation folded in: token index ``step[i]``
+    of row i is drawn with ``fold_in(base_key[i], step[i])``. This is the
+    single sampling entry point every decode path uses — the scan body,
+    the per-token tick, and the first-token-after-prefill draw — so one
+    request's stream is the same no matter which path produced it."""
+    return sample(logits, vocab, temperature, top_k, top_p,
+                  fold_keys(base_key, step))

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import kvcache as KV
 from repro.core import paging as PG
-from repro.models import attention, mlp, moe, rglru, xlstm
+from repro.models import attention, mlp, moe, rglru, sampling as SMP, xlstm
 from repro.models.common import (act_shard, embed_init, rmsnorm, rmsnorm_init,
                                  layernorm, layernorm_init, dense_init,
                                  text_mrope_positions)
@@ -385,26 +385,51 @@ def decode_step(params, token, cfg: ModelConfig, state, pos, *,
 
 
 def decode_scan(params, token, cfg: ModelConfig, state, pos, *, steps: int,
-                row_mask=None):
-    """Greedy-decode `steps` tokens in ONE traced loop (`jax.lax.scan`) with
-    the cache state threaded functionally — a single device dispatch replaces
+                row_mask=None, sampling=None):
+    """Decode `steps` tokens in ONE traced loop (`jax.lax.scan`) with the
+    cache state threaded functionally — a single device dispatch replaces
     `steps` per-token dispatches (and their per-call argument pushes), which
-    is what the serving layer's chunked ticks and `greedy_generate` ride on.
+    is what the serving layer's chunked ticks and `generate` ride on.
 
     `token` (B, 1) int32 is the *pending* token: already sampled, not yet fed
     to the model. `pos` (B,) int32 is its position. `row_mask` (B,) bool is
     held constant across the scan (paged caches: frozen rows never advance).
+
+    `sampling=None` is exact greedy argmax (the historical behavior,
+    bitwise). Otherwise `sampling` is the per-row array pytree from
+    `serving/params.sampling_arrays` — temperature/top_k/top_p (B,),
+    key (B, 2) uint32 base keys, step (B,) int32 token indices of each
+    row's NEXT draw — and every step samples on-device through
+    `models/sampling.sample_at_step`: rows with mixed settings (greedy
+    included, temperature 0) share this one dispatch, and each row's
+    stream depends only on its own (logits, key, step) — DESIGN.md §6.
 
     Returns (pending (B, 1), state, emitted (steps, B)): emitted[j] is the
     token fed at step j — i.e. the generated sequence starting with `token` —
     and `pending` is the next not-yet-fed sample, exactly as if decode_step
     had been called `steps` times.
     """
+    if sampling is None:
+        def body(carry, _):
+            tok, st, p = carry
+            logits, st = decode_step(params, tok, cfg, st, p,
+                                     row_mask=row_mask)
+            nxt = jnp.argmax(logits[..., :cfg.vocab],
+                             -1).astype(jnp.int32)[:, None]
+            return (nxt, st, p + 1), tok[:, 0]
+        (token, state, pos), toks = jax.lax.scan(body, (token, state, pos),
+                                                 length=steps)
+        return token, state, toks
+
     def body(carry, _):
-        tok, st, p = carry
+        tok, st, p, step = carry
         logits, st = decode_step(params, tok, cfg, st, p, row_mask=row_mask)
-        nxt = jnp.argmax(logits[..., :cfg.vocab], -1).astype(jnp.int32)[:, None]
-        return (nxt, st, p + 1), tok[:, 0]
-    (token, state, pos), toks = jax.lax.scan(body, (token, state, pos),
-                                             length=steps)
+        nxt = SMP.sample_at_step(
+            logits, sampling["temperature"], sampling["top_k"],
+            sampling["top_p"], sampling["key"], step,
+            vocab=cfg.vocab)[:, None]
+        return (nxt, st, p + 1, step + 1), tok[:, 0]
+    (token, state, pos, _), toks = jax.lax.scan(
+        body, (token, state, pos, jnp.asarray(sampling["step"])),
+        length=steps)
     return token, state, toks

@@ -1,6 +1,11 @@
-from repro.serving.engine import (greedy_generate, kv_cache_memory_report,
-                                  make_serve_fns)
+from repro.serving.engine import (generate, greedy_generate,
+                                  kv_cache_memory_report, make_serve_fns)
+from repro.serving.llm_engine import LLMEngine, RequestOutput
+from repro.serving.params import (FINISH_REASONS, EngineConfig,
+                                  SamplingParams, default_detokenize)
 from repro.serving.scheduler import ContinuousBatcher, Request
 
-__all__ = ["ContinuousBatcher", "Request", "greedy_generate",
+__all__ = ["ContinuousBatcher", "EngineConfig", "FINISH_REASONS",
+           "LLMEngine", "Request", "RequestOutput", "SamplingParams",
+           "default_detokenize", "generate", "greedy_generate",
            "kv_cache_memory_report", "make_serve_fns"]

@@ -103,10 +103,20 @@ def make_chunk_prefill_fn(cfg: ModelConfig, *, hist_blocks: int | None = None):
     return chunk_prefill
 
 
-def greedy_generate(params, cfg: ModelConfig, prompts: jax.Array, *,
-                    steps: int, max_len: int | None = None):
-    """Reference end-to-end generation (examples/serve.py): greedy decode
-    `steps` tokens after a batched prefill. Returns (B, steps) int32.
+def generate(params, cfg: ModelConfig, prompts: jax.Array, *,
+             steps: int, sampling=None, max_len: int | None = None):
+    """Reference end-to-end generation: decode `steps` tokens after a
+    batched prefill. Returns (B, steps) int32.
+
+    `sampling` is None (exact greedy argmax — the historical
+    `greedy_generate` semantics, bitwise), ONE `SamplingParams` applied to
+    every row, or a per-row sequence of them. Sampling runs on-device
+    inside the jitted trajectory (`models/sampling.sample_at_step`):
+    per-row parameter arrays and per-request PRNG keys ride the decode
+    scan, so mixed settings still make ONE dispatch and row i's stream
+    depends only on (prompt i, params i) — DESIGN.md §6. This is the
+    fixed-budget reference path: stop tokens / stop strings are a
+    scheduler feature (`LLMEngine`), not handled here.
 
     The whole trajectory — prefill, prompt-remainder feed, and the decode
     loop — is ONE jitted function: both token loops are `jax.lax.scan`s with
@@ -114,6 +124,9 @@ def greedy_generate(params, cfg: ModelConfig, prompts: jax.Array, *,
     dispatch per call instead of one per token (the seed's per-token Python
     loop re-pushed arguments and crossed the dispatch boundary every step).
     """
+    from repro.models import sampling as SMP
+    from repro.models import transformer
+    from repro.serving.params import SamplingParams, sampling_arrays
     B, S = prompts.shape
     bs = (cfg.quant.block_size
           if cfg.quant.granularity == "per_block" else 8)
@@ -121,9 +134,17 @@ def greedy_generate(params, cfg: ModelConfig, prompts: jax.Array, *,
     init_state, prefill_fn, decode_fn = make_serve_fns(cfg, max_len=max_len)
     # prefill wants a block-multiple prompt; feed the remainder via decode
     S0 = max(bs, (S // bs) * bs) if S >= bs else 0
+    samp = None
+    if sampling is not None:
+        sps = ([sampling] * B if isinstance(sampling, SamplingParams)
+               else list(sampling))
+        if len(sps) != B:
+            raise ValueError(f"got {len(sps)} SamplingParams for {B} rows")
+        samp = {k: jnp.asarray(v)
+                for k, v in sampling_arrays(sps).items()}
 
     @jax.jit
-    def generate(params, prompts):
+    def run(params, prompts, samp):
         state = init_state(B)
         if S0:
             logits, state = prefill_fn(params, {"tokens": prompts[:, :S0]},
@@ -138,17 +159,30 @@ def greedy_generate(params, cfg: ModelConfig, prompts: jax.Array, *,
                 prompts[:, S0:].T)
             logits = logit_seq[-1]
 
-        def step(carry, _):                 # greedy decode
-            tok, st, p = carry
-            lg, st = decode_fn(params, tok, st, p)
-            nxt = jnp.argmax(lg[..., :cfg.vocab], -1).astype(jnp.int32)[:, None]
-            return (nxt, st, p + 1), tok[:, 0]
-        tok0 = jnp.argmax(logits[..., :cfg.vocab], -1).astype(jnp.int32)[:, None]
-        _, toks = jax.lax.scan(
-            step, (tok0, state, jnp.full((B,), S, jnp.int32)), length=steps)
+        pos = jnp.full((B,), S, jnp.int32)
+        if samp is None:
+            tok0 = jnp.argmax(logits[..., :cfg.vocab],
+                              -1).astype(jnp.int32)[:, None]
+            scan_samp = None
+        else:
+            # token index 0 from the prefill logits, then 1.. in the scan
+            tok0 = SMP.sample_at_step(
+                logits, samp["temperature"], samp["top_k"], samp["top_p"],
+                samp["key"], samp["step"], vocab=cfg.vocab)[:, None]
+            scan_samp = dict(samp, step=samp["step"] + 1)
+        _, _, toks = transformer.decode_scan(params, tok0, cfg, state, pos,
+                                             steps=steps, sampling=scan_samp)
         return toks.T
 
-    return generate(params, prompts.astype(jnp.int32))
+    return run(params, prompts.astype(jnp.int32), samp)
+
+
+def greedy_generate(params, cfg: ModelConfig, prompts: jax.Array, *,
+                    steps: int, max_len: int | None = None):
+    """`generate` with `sampling=None` — exact greedy argmax, kept as the
+    named special case the accuracy benchmarks and tests pin against."""
+    return generate(params, cfg, prompts, steps=steps, sampling=None,
+                    max_len=max_len)
 
 
 def _round8(n):
@@ -156,14 +190,20 @@ def _round8(n):
 
 
 def kv_cache_memory_report(cfg: ModelConfig, batch: int, seq: int,
-                           paged_cache=None) -> dict:
+                           paged_cache=None, scheduler=None) -> dict:
     """Paper Table 1 for this arch: cache bytes at fp32 / bf16 / int8.
 
     Pass a `PagedQuantizedKVCache` (possibly layer-stacked) to also report
     pool occupancy: `pool_pages_allocated` counts pages reserved off the
     free list, `pool_pages_live` counts pages actually holding tokens
     (ceil(length / page_size) per row) — their ratio is how much of the
-    reservation the running requests are using."""
+    reservation the running requests are using.
+
+    Pass the `ContinuousBatcher` (or `LLMEngine.batcher`) as `scheduler`
+    to also report request-lifecycle observability (DESIGN.md §6):
+    `aborted_requests` and the per-request TTFT percentiles
+    (`ttft_s_p50/p90/p99`) — the abort/streaming behavior counters
+    `pool_report()` tracks."""
     rep = {
         "fp32_bytes": cfg.kv_cache_bytes(batch, seq, 4),
         "bf16_bytes": cfg.kv_cache_bytes(batch, seq, 2),
@@ -202,4 +242,6 @@ def kv_cache_memory_report(cfg: ModelConfig, batch: int, seq: int,
             "pool_utilization": live / max(allocated, 1),
             "pool_bytes_allocated": allocated * page_bytes,
         })
+    if scheduler is not None:
+        rep.update(scheduler.lifecycle_report())
     return rep

@@ -1,0 +1,156 @@
+"""Request-level sampling parameters and the engine configuration.
+
+`SamplingParams` is the host-side description of how ONE request wants its
+tokens drawn (DESIGN.md §6): temperature / top-k / top-p, a per-request
+PRNG seed, stop conditions, and the decode budget. The device never sees
+this object — the scheduler compiles a batch of them into per-row `(B,)`
+arrays (`sampling_arrays`) that ride into the jitted decode scan
+(`models/sampling.sample_at_step`), so rows with different settings share
+ONE dispatch and a request's stream depends only on `(prompt, params)`,
+never on its neighbors.
+
+`EngineConfig` replaces the loose kwarg sprawl that used to configure
+`ContinuousBatcher` (batch/max_len/paged/n_pages/chunk/prefix_cache/
+prefill_chunk as seven independent keyword arguments); the old kwargs
+survive one release as a deprecated shim on the batcher itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling settings (DESIGN.md §6).
+
+    ``temperature == 0`` is exact greedy argmax (the `greedy()`
+    constructor preserves the pre-lifecycle semantics bitwise). ``top_k``
+    0 and ``top_p`` 1.0 disable their filters. ``seed`` fixes the
+    request's private PRNG stream — token i is always drawn with
+    ``fold_in(PRNGKey(seed), i)``, so a seeded request reproduces bitwise
+    regardless of batch composition; ``seed=None`` derives the seed from
+    the request uid (still deterministic, documented).
+
+    Stop conditions: ``stop_token_ids`` finish a request when the *next*
+    sampled token is in the set (the stop token itself is not emitted —
+    the same convention the engine-level ``eos_id`` always had);
+    ``stop`` strings are matched host-side against the detokenized
+    generated stream at chunk boundaries — tokens past a mid-chunk stop
+    are causally discarded, mirroring the EOS-mid-chunk rule.
+    """
+    temperature: float = 1.0
+    top_k: int = 0                       # 0 = disabled
+    top_p: float = 1.0                   # 1.0 = disabled
+    seed: int | None = None              # None -> derived from request uid
+    stop_token_ids: tuple[int, ...] = ()
+    stop: tuple[str, ...] = ()           # stop strings (host-side)
+    max_new_tokens: int = 16
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0 "
+                             f"(got {self.temperature})")
+        if not 0.0 <= self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in [0, 1] (got {self.top_p})")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (got {self.top_k})")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        # normalize list inputs so the dataclass stays hashable
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(int(t) for t in self.stop_token_ids))
+        object.__setattr__(self, "stop", tuple(self.stop))
+
+    @classmethod
+    def greedy(cls, **kw) -> "SamplingParams":
+        """Exact argmax decode — today's default semantics, bitwise."""
+        return cls(temperature=0.0, **kw)
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+# finish reasons a request can end with (DESIGN.md §6)
+FINISH_REASONS = ("stop_token", "stop_string", "length", "aborted")
+
+
+def default_detokenize(ids: Sequence[int]) -> str:
+    """Fallback detokenizer for stop-string matching when the caller has no
+    tokenizer (this repo serves raw token ids): each id renders as an
+    unambiguous ``<id>`` cell, so ``stop=("<7>",)`` stops exactly on token
+    7 and multi-token stop strings concatenate cells."""
+    return "".join(f"<{int(t)}>" for t in ids)
+
+
+def request_key(uid: int, params: SamplingParams) -> np.ndarray:
+    """The request's private base PRNG key, (2,) uint32 — a pure function
+    of (seed|uid), never of batch composition (DESIGN.md §6)."""
+    import jax
+    seed = params.seed if params.seed is not None else uid
+    return np.asarray(jax.random.PRNGKey(seed), np.uint32)
+
+
+def sampling_arrays(params: Sequence[SamplingParams], *,
+                    uids: Sequence[int] | None = None,
+                    steps: Sequence[int] | None = None,
+                    keys: Sequence[np.ndarray | None] | None = None) -> dict:
+    """Compile a batch of `SamplingParams` into the per-row array pytree
+    the jitted decode paths consume (`models/sampling.sample_at_step`):
+    temperature/top_k/top_p (B,), key (B, 2) uint32 base keys, and step
+    (B,) int32 — the index of the *next* token each row will draw
+    (DESIGN.md §6). `keys` supplies precomputed per-row base keys (None
+    entries fall back to `request_key`) — the scheduler passes its
+    per-request cache so keys are derived once per request, not per
+    tick; greedy rows never consume a key and get none."""
+    B = len(params)
+    uids = list(uids) if uids is not None else list(range(B))
+    steps = list(steps) if steps is not None else [0] * B
+    out = {
+        "temperature": np.zeros((B,), np.float32),
+        "top_k": np.zeros((B,), np.int32),
+        "top_p": np.ones((B,), np.float32),
+        "key": np.zeros((B, 2), np.uint32),
+        "step": np.asarray(steps, np.int32),
+    }
+    for i, sp in enumerate(params):
+        out["temperature"][i] = sp.temperature
+        out["top_k"][i] = sp.top_k
+        out["top_p"][i] = sp.top_p
+        if not sp.is_greedy:        # greedy rows never consume their key
+            pre = keys[i] if keys is not None else None
+            out["key"][i] = pre if pre is not None \
+                else request_key(uids[i], sp)
+    return out
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """One object configuring the whole serving stack (DESIGN.md §6) —
+    replaces the historical seven-kwarg sprawl on `ContinuousBatcher`.
+
+    `paged` selects the production backend (page-pool cache, varlen
+    chunked prefill); `n_pages` sizes its pool (None = dense capacity);
+    `chunk` bounds decode tokens per device dispatch (None = scan to the
+    next completion boundary, 1 = per-token ticks); `prefix_cache` /
+    `prefill_chunk` configure automatic prefix caching and the prompt
+    chunk width (DESIGN.md §7) and require `paged=True`. `eos_id` is the
+    engine-wide stop token (per-request `SamplingParams.stop_token_ids`
+    add to it). `detokenize` maps a token-id list to text for stop-string
+    matching (None = `default_detokenize`); the scheduler scans only a
+    `max(len(stop))`-token suffix per appended token (O(n) generation),
+    which requires every token to render to AT LEAST ONE character — a
+    detokenizer with zero-width tokens (e.g. control tokens mapped to "")
+    could push a match outside the window and must not be used here."""
+    batch: int = 4
+    max_len: int = 128
+    eos_id: int | None = None
+    paged: bool = False
+    n_pages: int | None = None
+    chunk: int | None = None
+    prefix_cache: bool = False
+    prefill_chunk: int | None = None
+    detokenize: Callable[[Sequence[int]], str] | None = None

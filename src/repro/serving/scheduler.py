@@ -22,6 +22,19 @@ refilled from a request queue between device steps. Two backends:
     are mid-decode are untouched. This is the production path
     (DESIGN.md §6).
 
+Request lifecycle (DESIGN.md §6): queued -> prefilling -> decoding ->
+finished/aborted. Each `Request` carries `SamplingParams`; the scheduler
+compiles the active rows' params into per-row (B,) arrays + per-request
+PRNG keys that ride INSIDE the jitted decode scan
+(models/sampling.sample_at_step), so mixed greedy/sampled rows share one
+dispatch per chunk and a request's tokens depend only on (prompt, params,
+seed) — never on its neighbors. Stop token ids finish a row when the next
+sampled token matches (the token is suppressed, as eos_id always was);
+stop strings are matched host-side at chunk boundaries with post-stop
+chunk tokens causally discarded. `abort(uid)` cancels queued or running
+requests through the normal release path, so partially generated pages
+still feed the prefix cache.
+
 The device-side step functions are row-independent (engine.make_serve_fns),
 so all of this is host bookkeeping plus cheap device_put pushes of page
 tables / lengths between steps.
@@ -65,6 +78,8 @@ caching. The paged path is the production one.
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from collections import deque
 from typing import Any, Callable
 
@@ -74,6 +89,9 @@ import numpy as np
 
 from repro.core import paging as PG
 from repro.core.paging import PagedQuantizedKVCache
+from repro.serving.params import (EngineConfig, SamplingParams,
+                                  default_detokenize, request_key,
+                                  sampling_arrays)
 
 
 def pages_for_request(prompt_len: int, max_new: int, page_size: int) -> int:
@@ -89,40 +107,103 @@ def pages_for_request(prompt_len: int, max_new: int, page_size: int) -> int:
 
 @dataclasses.dataclass
 class Request:
-    """One generation request (DESIGN.md §6): prompt (S,) int32, a decode
-    budget, and the greedy-decoded output accumulated in `generated`."""
+    """One generation request and its lifecycle record (DESIGN.md §6):
+    prompt (S,) int32, a decode budget, per-request `SamplingParams`
+    (default: exact greedy — the historical semantics), and the decoded
+    output accumulated in `generated`.
+
+    Lifecycle: queued -> prefilling -> decoding -> finished/aborted. On
+    completion `finish_reason` is one of `serving.params.FINISH_REASONS`
+    ("stop_token" | "stop_string" | "length" | "aborted") and the
+    timestamps record submit / first-token (TTFT) / finish times
+    (`time.perf_counter` seconds, host clock).
+
+    `max_new_tokens=None` takes the budget from
+    `sampling.max_new_tokens` (resolved at submit) — there is ONE
+    authoritative decode budget per request, and an explicit Request
+    value overrides the SamplingParams one."""
     uid: int
     prompt: np.ndarray              # (S,) int32
-    max_new_tokens: int
+    max_new_tokens: int | None = None
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams.greedy)
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    finish_reason: str | None = None
+    submit_time: float | None = None
+    first_token_time: float | None = None
+    finish_time: float | None = None
 
 
 class ContinuousBatcher:
-    """Greedy continuous batching over a fixed pool of `batch` rows
-    (DESIGN.md §6). Backends: contiguous (pad-retaining legacy — rebuild on
-    admit) and paged (`paged=True`: page-budget admission over *unpadded*
-    prompts, per-row timelines, varlen chunked prefill — `prefill_chunk=`
-    sizes the chunk, `prefix_cache=True` adds automatic prefix caching,
+    """Continuous batching over a fixed pool of `batch` rows, with
+    per-request SamplingParams compiled into the decode scan
+    (DESIGN.md §6). Configured by ONE `EngineConfig` (`config=`); the
+    historical kwarg sprawl survives one release as a deprecated shim.
+    Backends: contiguous (pad-retaining legacy — rebuild on admit) and
+    paged (`EngineConfig.paged`: page-budget admission over *unpadded*
+    prompts, per-row timelines, varlen chunked prefill — `prefill_chunk`
+    sizes the chunk, `prefix_cache` adds automatic prefix caching,
     DESIGN.md §7). `submit` queues requests; `step` runs one scheduler
-    tick; `run_to_completion` drains the queue and returns finished
-    `Request`s."""
+    tick; `abort` cancels a queued/running uid; `run_to_completion` drains
+    the queue and returns finished `Request`s (see `LLMEngine` for the
+    streaming-output facade)."""
 
-    def __init__(self, params, cfg, *, batch: int, max_len: int,
-                 eos_id: int | None = None, paged: bool = False,
-                 n_pages: int | None = None, chunk: int | None = None,
-                 prefix_cache: bool = False,
-                 prefill_chunk: int | None = None):
+    _LEGACY_KWARGS = ("batch", "max_len", "eos_id", "paged", "n_pages",
+                      "chunk", "prefix_cache", "prefill_chunk")
+
+    def __init__(self, params, cfg, config: EngineConfig | None = None,
+                 **legacy):
         from repro.serving.engine import make_serve_fns
+        if config is None:
+            # deprecated shim (one release): the historical kwarg sprawl
+            # maps 1:1 onto EngineConfig fields. No config AND no kwargs
+            # stays an error — it always was one — rather than silently
+            # building a default-sized batcher with a misleading warning.
+            if not legacy:
+                raise TypeError("ContinuousBatcher requires "
+                                "config=EngineConfig(...) (or the "
+                                "deprecated legacy kwargs)")
+            bad = set(legacy) - set(self._LEGACY_KWARGS)
+            if bad:
+                raise TypeError(f"unknown ContinuousBatcher kwargs: {bad}")
+            warnings.warn(
+                "ContinuousBatcher(batch=..., max_len=..., ...) kwargs are "
+                "deprecated; pass config=EngineConfig(...) (or use the "
+                "LLMEngine facade)", DeprecationWarning, stacklevel=2)
+            config = EngineConfig(**legacy)
+        elif legacy:
+            raise TypeError("pass either config=EngineConfig(...) or the "
+                            f"legacy kwargs, not both (got {set(legacy)})")
+        self.config = config
+        batch, max_len = config.batch, config.max_len
+        paged, n_pages, chunk = config.paged, config.n_pages, config.chunk
+        prefix_cache, prefill_chunk = config.prefix_cache, \
+            config.prefill_chunk
         self.params, self.cfg = params, cfg
         self.batch, self.max_len = batch, max_len
-        self.eos_id = eos_id
+        self.eos_id = config.eos_id
         self.paged = paged
+        self.detokenize = config.detokenize or default_detokenize
+        # request-lifecycle bookkeeping (DESIGN.md §6): uids queued or on a
+        # row (duplicates rejected at submit), abort counter, and recorded
+        # per-request TTFTs for the pool_report percentiles
+        self._inflight_uids: set[int] = set()
+        self.aborted_requests = 0
+        self._ttfts: list[float] = []
         # decode tokens per device dispatch: None = scan to the next
         # completion boundary; 1 = per-token ticks (also forced for encdec,
         # which has no transformer decode_scan path)
         self.chunk = 1 if cfg.family == "encdec" else chunk
+        # steps -> jitted decode-scan chunk fn (one signature; jit's
+        # None-vs-pytree structure keying separates greedy/sampled traces)
         self._chunk_fns: dict[int, Any] = {}
+        # host-side sampling entry (first token after prefill, per-token
+        # ticks): the SAME sample_at_step the scan body runs, jitted once
+        from repro.models import sampling as _SMP
+        import functools as _ft
+        self._sample_fn = jax.jit(
+            _ft.partial(_SMP.sample_at_step, vocab=cfg.vocab))
         self.ticks = 0
         self.block = (cfg.quant.block_size
                       if cfg.quant.granularity == "per_block" else 8)
@@ -154,8 +235,12 @@ class ContinuousBatcher:
                 self.page_size
             # one jitted chunk fn per static history bound (pow2 set)
             self._chunk_prefill_fns: dict[int, Any] = {}
-            # id(request) -> (toks, chain): computed once per request,
-            # not once per tick while admission is blocked on pool pressure
+            # req.uid -> (toks, chain): computed once per request, not once
+            # per tick while admission is blocked on pool pressure. Keyed by
+            # uid, NOT id(request): CPython reuses a collected object's id,
+            # so an id-keyed memo could hand a new request a dead request's
+            # (toks, chain). Entries drop on admission and on abort; submit()
+            # rejects duplicate in-flight uids so the key is unambiguous.
             self._admit_memo: dict[int, tuple] = {}
             # rows mid-prompt: row -> {"toks", "cursor", "S"}
             self.prefilling: dict[int, dict] = {}
@@ -184,9 +269,18 @@ class ContinuousBatcher:
     def submit(self, req: Request):
         """Queue a request (DESIGN.md §6). Rejects impossible requests here
         — once queued, admission must never fail, or earlier candidates
-        popped in the same tick would be stranded. Paged capacity is
-        unpadded (varlen prefill); the legacy contiguous backend still pads
-        to a block multiple and validates accordingly."""
+        popped in the same tick would be stranded. Duplicate in-flight uids
+        are rejected too: the uid is the lifecycle handle (`abort`,
+        admission memo, streaming outputs), so two live requests must never
+        share one. Paged capacity is unpadded (varlen prefill); the legacy
+        contiguous backend still pads to a block multiple and validates
+        accordingly."""
+        if req.uid in self._inflight_uids:
+            raise ValueError(f"request uid {req.uid} is already in flight "
+                             f"(queued or running); uids are the lifecycle "
+                             f"handle and must be unique until completion")
+        if req.max_new_tokens is None:      # single source: SamplingParams
+            req.max_new_tokens = req.sampling.max_new_tokens
         if self.paged:
             if len(req.prompt) < 1:
                 raise ValueError(f"request {req.uid}: empty prompt")
@@ -201,6 +295,8 @@ class ContinuousBatcher:
         elif self._pad(len(req.prompt)) + req.max_new_tokens > self.max_len:
             raise ValueError(f"request {req.uid}: prompt+max_new exceeds "
                              f"max_len={self.max_len}")
+        req.submit_time = time.perf_counter()
+        self._inflight_uids.add(req.uid)
         self.queue.append(req)
 
     # -- shared helpers ----------------------------------------------------
@@ -208,7 +304,133 @@ class ContinuousBatcher:
         return -(-max(n, 1) // self.block) * self.block
 
     def _sample(self, logits) -> np.ndarray:
+        """Pure-greedy batch argmax — the fast path when no active row
+        samples (zero behavior/perf change vs the pre-lifecycle code)."""
         return np.asarray(jnp.argmax(logits[..., :self.cfg.vocab], -1))
+
+    # -- per-request sampling (DESIGN.md §6) -------------------------------
+    def _req_key(self, r: Request) -> np.ndarray:
+        k = getattr(r, "_base_key", None)
+        if k is None:
+            k = request_key(r.uid, r.sampling)
+            r._base_key = k
+        return k
+
+    def _needs_sampling(self, idxs) -> bool:
+        """True when any of the rows whose draw will actually be READ
+        samples — a sampled request merely mid-prefill (masked out of the
+        decode) must not knock greedy decoders off the argmax fast
+        path."""
+        return any(self.rows[i] is not None
+                   and not self.rows[i].sampling.is_greedy for i in idxs)
+
+    def _sampling_arrays(self, offset: int) -> dict:
+        """Per-row sampling arrays for the whole batch (empty rows greedy):
+        `offset` is added to each row's generated count to form the token
+        index of its NEXT draw — 0 when sampling the first token from
+        prefill logits, 1 during decode (the pending token, already drawn,
+        holds index len(generated))."""
+        sps, keys, steps = [], [], []
+        for r in self.rows:
+            sps.append(r.sampling if r is not None
+                       else SamplingParams.greedy())
+            keys.append(self._req_key(r)
+                        if r is not None and not r.sampling.is_greedy
+                        else None)              # cached once per request
+            steps.append((len(r.generated) if r is not None else 0) + offset)
+        arrs = sampling_arrays(sps, steps=steps, keys=keys)
+        return {k: jnp.asarray(v) for k, v in arrs.items()}
+
+    def _sample_rows(self, logits, idxs, *, offset: int) -> np.ndarray:
+        """Draw the next token for every row honoring per-request
+        SamplingParams — the host-boundary twin of the scan body's
+        on-device draw (same `sample_at_step`, same key indexing). `idxs`
+        are the rows whose draw the caller will read (fast-path gate)."""
+        if not self._needs_sampling(idxs):
+            return self._sample(logits)
+        s = self._sampling_arrays(offset)
+        return np.asarray(self._sample_fn(logits, s["temperature"],
+                                          s["top_k"], s["top_p"], s["key"],
+                                          s["step"]))
+
+    # -- lifecycle helpers (DESIGN.md §6) ----------------------------------
+    def _record_first_token(self, r: Request):
+        if r.first_token_time is None:
+            r.first_token_time = time.perf_counter()
+            if r.submit_time is not None:
+                self._ttfts.append(r.first_token_time - r.submit_time)
+
+    def _finish(self, r: Request, reason: str):
+        r.done = True
+        r.finish_reason = reason
+        r.finish_time = time.perf_counter()
+        self._inflight_uids.discard(r.uid)
+
+    def _stop_ids(self, r: Request) -> frozenset:
+        ids = getattr(r, "_stop_ids", None)     # built once per request,
+        if ids is None:                         # checked once per token
+            ids = frozenset(r.sampling.stop_token_ids)
+            if self.eos_id is not None:
+                ids = ids | {self.eos_id}
+            r._stop_ids = ids
+        return ids
+
+    def _stop_string_hit(self, r: Request) -> bool:
+        """True when the detokenized generated stream contains one of the
+        request's stop strings. Checked host-side after each appended
+        token inside the chunk's bookkeeping loop — tokens past a
+        mid-chunk stop are never appended, i.e. causally discarded
+        exactly like post-EOS chunk tails (DESIGN.md §6). Only a suffix
+        window is detokenized and scanned: a match ending at the newest
+        token spans at most `max(len(stop))` tokens *provided every token
+        renders to >= 1 character* — the documented `EngineConfig.
+        detokenize` contract (zero-width tokens would let a match escape
+        the window) — so generation stays O(n), not O(n^2)."""
+        stops = r.sampling.stop
+        if not stops:
+            return False
+        window = getattr(r, "_stop_window", None)
+        if window is None:
+            window = r._stop_window = max(len(s) for s in stops)
+        text = self.detokenize(r.generated[-window:])
+        return any(s in text for s in stops)
+
+    def abort(self, uid: int) -> Request | None:
+        """Cancel a queued or running request (DESIGN.md §6). Running rows
+        release through the normal `_release_row` path — pages free (or
+        park on the prefix-cache LRU) and fully-flushed decode pages are
+        still promoted, so a later prompt sharing the aborted prefix keeps
+        hitting. Returns the request marked `finish_reason="aborted"` with
+        its partial `generated`, or None if the uid is not in flight."""
+        for idx, r in enumerate(self.queue):
+            if r.uid == uid:
+                del self.queue[idx]
+                if self.paged:
+                    self._admit_memo.pop(uid, None)
+                self._finish(r, "aborted")
+                self.aborted_requests += 1
+                return r
+        for i, r in enumerate(self.rows):
+            if r is not None and r.uid == uid:
+                self._finish(r, "aborted")
+                self._release_row(i)
+                if self.paged:
+                    self._sync_device()   # freed tables/lengths live now
+                self.aborted_requests += 1
+                return r
+        return None
+
+    def lifecycle_report(self) -> dict:
+        """Abort/streaming observability (DESIGN.md §6): abort count and
+        per-request TTFT percentiles over every request that produced a
+        first token (0.0 until one has)."""
+        ts = np.asarray(self._ttfts, np.float64)
+        pct = (lambda q: float(np.percentile(ts, q))) if ts.size else \
+            (lambda q: 0.0)
+        return {"aborted_requests": self.aborted_requests,
+                "ttft_s_p50": pct(50),
+                "ttft_s_p90": pct(90),
+                "ttft_s_p99": pct(99)}
 
     def step(self) -> list[Request]:
         """One scheduler tick: admit, prefill admitted rows, decode one
@@ -221,12 +443,36 @@ class ContinuousBatcher:
         return self._step_contiguous()
 
     def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
+        """Drain the queue; returns naturally finished requests (aborted
+        ones are returned by `abort` itself). Raises RuntimeError when
+        `max_ticks` is exhausted with requests still queued or active —
+        the old behavior silently returned partial results, losing the
+        stranded requests without a trace."""
         out = []
         for _ in range(max_ticks):
             out.extend(self.step())
             if not self.queue and all(r is None for r in self.rows):
-                break
-        return out
+                return out
+        stranded = sorted([r.uid for r in self.queue] +
+                          [r.uid for r in self.rows if r is not None])
+        raise RuntimeError(
+            f"run_to_completion: max_ticks={max_ticks} exhausted with "
+            f"{len(stranded)} request(s) still in flight (uids {stranded}); "
+            f"raise max_ticks or check for an admission deadlock")
+
+    def _check_stop(self, r: Request, nxt: int) -> str | None:
+        """Finish reason for the request after appending a token, given the
+        next (already-sampled, not-yet-fed) token — or None to continue.
+        Precedence: a stop string completed by the appended token, then
+        the decode budget, then a stop token about to be emitted (the stop
+        token itself is suppressed, the convention eos_id always had)."""
+        if self._stop_string_hit(r):
+            return "stop_string"
+        if len(r.generated) >= r.max_new_tokens:
+            return "length"
+        if int(nxt) in self._stop_ids(r):
+            return "stop_token"
+        return None
 
     def _finish_tick(self, active: list[int], nxt: np.ndarray) -> list[Request]:
         done = []
@@ -235,9 +481,9 @@ class ContinuousBatcher:
             r.generated.append(int(self.tok[i, 0]))
             self.tok[i, 0] = nxt[i]
             self.pos[i] += 1
-            if (len(r.generated) >= r.max_new_tokens or
-                    (self.eos_id is not None and nxt[i] == self.eos_id)):
-                r.done = True
+            reason = self._check_stop(r, int(nxt[i]))
+            if reason is not None:
+                self._finish(r, reason)
                 done.append(r)
                 self._release_row(i)
         return done
@@ -249,31 +495,37 @@ class ContinuousBatcher:
         """Decode steps for this tick's scan: bounded by the smallest
         remaining budget among active rows (no row outruns its page
         reservation / max_new), then rounded down to a power of two so the
-        set of compiled scan lengths stays O(log max_new). With an eos_id
-        configured, rows can finish long before their budget — discarded
-        scan tail + slot held past EOS — so the auto chunk is additionally
-        capped to bound that waste."""
+        set of compiled scan lengths stays O(log max_new). With any stop
+        condition configured (engine eos_id, per-request stop token ids or
+        stop strings), rows can finish long before their budget — discarded
+        scan tail + slot held past the stop — so the auto chunk is
+        additionally capped to bound that waste."""
         rem = min(self.rows[i].max_new_tokens - len(self.rows[i].generated)
                   for i in active)
         n = rem if self.chunk is None else min(self.chunk, rem)
-        if self.eos_id is not None and self.chunk is None:
+        stops_possible = self.eos_id is not None or any(
+            self.rows[i].sampling.stop_token_ids or self.rows[i].sampling.stop
+            for i in active)
+        if stops_possible and self.chunk is None:
             n = min(n, self._EOS_CHUNK_CAP)
         n = max(n, 1)
         return 1 << (n.bit_length() - 1)
 
     def _chunk_fn(self, n: int):
+        """Jitted n-step decode-scan fn, one signature for every mode:
+        `row_mask`/`sampling` are None when unused (jit re-traces on the
+        None-vs-pytree structure change, so greedy and sampled chunks
+        still get their own compiled variants). Threading the sampling
+        arrays into the SAME scan is what keeps mixed per-row params at
+        one dispatch per chunk (DESIGN.md §6)."""
         fn = self._chunk_fns.get(n)
         if fn is None:
             from repro.models import transformer as T
             cfg = self.cfg
-            if self.paged:
-                def run(params, tok, state, pos, row_mask):
-                    return T.decode_scan(params, tok, cfg, state, pos,
-                                         steps=n, row_mask=row_mask)
-            else:
-                def run(params, tok, state, pos):
-                    return T.decode_scan(params, tok, cfg, state, pos,
-                                         steps=n)
+
+            def run(params, tok, state, pos, row_mask, sampling):
+                return T.decode_scan(params, tok, cfg, state, pos, steps=n,
+                                     row_mask=row_mask, sampling=sampling)
             fn = self._chunk_fns[n] = jax.jit(run)
         return fn
 
@@ -281,8 +533,10 @@ class ContinuousBatcher:
                       pending: np.ndarray) -> list[Request]:
         """Host bookkeeping after an n-step scan: `toks` (n, B) are the
         tokens fed at each step (the generated stream), `pending` (B, 1) the
-        next not-yet-fed sample. Rows completing mid-chunk (EOS / budget)
-        release immediately; their trailing chunk tokens are discarded."""
+        next not-yet-fed sample. Rows completing mid-chunk (stop token /
+        stop string / budget) release immediately; their trailing chunk
+        tokens are discarded — decode is causal, so tokens before the stop
+        are unaffected by what was appended after (DESIGN.md §6)."""
         n = toks.shape[0]
         done = []
         for i in active:
@@ -291,9 +545,10 @@ class ContinuousBatcher:
             for j in range(n):
                 r.generated.append(int(toks[j, i]))
                 nxt = toks[j + 1, i] if j + 1 < n else pending[i, 0]
-                if (len(r.generated) >= r.max_new_tokens or
-                        (self.eos_id is not None and nxt == self.eos_id)):
-                    r.done = finished = True
+                reason = self._check_stop(r, int(nxt))
+                if reason is not None:
+                    self._finish(r, reason)
+                    finished = True
                     done.append(r)
                     self._release_row(i)
                     break
@@ -304,7 +559,9 @@ class ContinuousBatcher:
 
     def _decode_tick(self, active: list[int],
                      row_mask: np.ndarray | None = None) -> list[Request]:
-        """Decode one chunk for the active rows and run host bookkeeping."""
+        """Decode one chunk for the active rows and run host bookkeeping.
+        When any active row samples, the chunk runs the sampled scan
+        variant — still ONE device dispatch for the whole mixed batch."""
         n = self._chunk_len(active)
         if self.paged and self.cow_armed and self._cow_retarget(active, n):
             self._sync_device()          # retargeted tables before the scan
@@ -314,8 +571,15 @@ class ContinuousBatcher:
             args += (jnp.asarray(row_mask),)
         if n == 1:          # per-token path (chunk=1 / encdec)
             logits, self.state = self._decode(*args)
-            return self._finish_tick(active, self._sample(logits))
-        pending, self.state, toks = self._chunk_fn(n)(*args)
+            return self._finish_tick(
+                active, self._sample_rows(logits, active, offset=1))
+        sampling = (self._sampling_arrays(1)
+                    if self._needs_sampling(active) else None)
+        pending, self.state, toks = self._chunk_fn(n)(
+            self.params, jnp.asarray(self.tok), self.state,
+            jnp.asarray(self.pos),
+            jnp.asarray(row_mask) if row_mask is not None else None,
+            sampling)
         return self._finish_chunk(active, np.asarray(toks),
                                   np.asarray(pending))
 
@@ -393,8 +657,9 @@ class ContinuousBatcher:
     def _step_contiguous(self) -> list[Request]:
         newly = self._admit_rows()
         active = [i for i, r in enumerate(self.rows) if r is not None]
+        done0: list[Request] = []        # first-draw-is-stop completions
         if not active:
-            return []
+            return done0
         if newly:
             # Rebuild: the contiguous cache has ONE scalar length, so every
             # row must share a position. Re-prefill all active histories
@@ -411,11 +676,23 @@ class ContinuousBatcher:
                 toks[i, S - len(h):] = h          # left-pad
             logits, self.state = self._prefill(
                 self.params, {"tokens": jnp.asarray(toks)}, self.state)
-            nxt = self._sample(logits)
+            nxt = self._sample_rows(logits, active, offset=0)
             for i in active:
+                r = self.rows[i]
+                if not r.generated and int(nxt[i]) in self._stop_ids(r):
+                    # first draw is a stop token: suppressed, empty output
+                    self._finish(r, "stop_token")
+                    done0.append(r)
+                    self._release_row(i)
+                    continue
                 self.tok[i, 0] = nxt[i]
                 self.pos[i] = S
-        return self._decode_tick(active)
+                if not r.generated:              # first token just drawn
+                    self._record_first_token(r)
+            active = [i for i in active if self.rows[i] is not None]
+        if not active:
+            return done0
+        return done0 + self._decode_tick(active)
 
     # -- paged backend -----------------------------------------------------
     def _pages_needed(self, prompt_len: int, max_new: int) -> int:
@@ -491,13 +768,13 @@ class ContinuousBatcher:
             S = len(cand.prompt)                 # true length — no padding
             nb = S // ps                         # hashable full pages
             total = self._pages_needed(S, cand.max_new_tokens)
-            if id(cand) in self._admit_memo:     # blocked-head retry
-                toks, chain = self._admit_memo[id(cand)]
+            if cand.uid in self._admit_memo:     # blocked-head retry
+                toks, chain = self._admit_memo[cand.uid]
             else:
                 toks = np.asarray(cand.prompt, np.int32)
                 chain = (PG.chain_hashes(toks[:nb * ps], ps)
                          if self.prefix_cache else [])
-                self._admit_memo[id(cand)] = (toks, chain)
+                self._admit_memo[cand.uid] = (toks, chain)
             hit_toks = self._cap_hits(self.allocator.match(chain), S) \
                 if self.prefix_cache else 0
             hit = hit_toks // ps                 # adopted pages
@@ -506,7 +783,7 @@ class ContinuousBatcher:
             if total - hit > self.allocator.available_after_adopt(chain[:hit]):
                 break                            # FCFS: wait for releases
             self.queue.popleft()
-            self._admit_memo.pop(id(cand), None)
+            self._admit_memo.pop(cand.uid, None)
             ids = (self.allocator.adopt(chain[:hit]) if hit else []) \
                 + self.allocator.alloc(total - hit)
             if self.prefix_cache:
@@ -554,8 +831,10 @@ class ContinuousBatcher:
         pages = -(-rem // self.page_size)
         return min(self.page_size * (1 << (pages - 1).bit_length()), cp)
 
-    def _advance_prefill(self):
-        """Advance one prompt chunk for the mid-prefill rows.
+    def _advance_prefill(self) -> list[Request]:
+        """Advance one prompt chunk for the mid-prefill rows; returns
+        requests that finished AT the prefill boundary (their very first
+        draw was a stop token, so they complete with empty output).
 
         Every prefilling row whose next chunk needs the same dispatch
         *width* as the round-robin head's rides the same dispatch — per-row
@@ -570,7 +849,7 @@ class ContinuousBatcher:
         final chunk yields its last-valid-position logits; the row then
         joins the decode set in the same tick. DESIGN.md §7."""
         if not self.prefilling:
-            return
+            return []
         ps = self.page_size
         order = sorted(self.prefilling)
         head = order[self._pf_rr % len(order)]
@@ -594,6 +873,9 @@ class ContinuousBatcher:
             self.params, jnp.asarray(toks), self.state, jnp.asarray(start),
             jnp.asarray(valid), jnp.asarray(mask))
         sampled = None
+        finishing = [i for i in group
+                     if rem_of[i] <= self.prefill_chunk_tokens]
+        done: list[Request] = []
         for i in group:
             st = self.prefilling[i]
             c = int(valid[i])
@@ -606,10 +888,20 @@ class ContinuousBatcher:
             st["cursor"] += c
             self.pos[i] = st["cursor"]
             if st["cursor"] == st["S"]:
-                if sampled is None:
-                    sampled = self._sample(logits)
-                self.tok[i, 0] = sampled[i]
+                if sampled is None:      # token index 0 for finishing rows
+                    sampled = self._sample_rows(logits, finishing, offset=0)
                 del self.prefilling[i]
+                r = self.rows[i]
+                if int(sampled[i]) in self._stop_ids(r):
+                    # the very first draw is a stop token: suppressed like
+                    # any other (DESIGN.md §6) — finish with empty output
+                    self._finish(r, "stop_token")
+                    done.append(r)
+                    self._release_row(i)
+                    continue
+                self.tok[i, 0] = sampled[i]
+                self._record_first_token(r)
+        return done
 
     def _cow_retarget(self, active: list[int], n: int) -> bool:
         """Copy-on-write gate before an n-step decode scan: any block the
@@ -645,21 +937,23 @@ class ContinuousBatcher:
             self.state = self._init_state(self.batch)
         if self._admit_chunked():
             self._sync_device()      # hit pages + cursors live before use
-        self._advance_prefill()
+        done = self._advance_prefill()   # first-draw-is-stop completions
         active = [i for i, r in enumerate(self.rows)
                   if r is not None and i not in self.prefilling]
-        done: list[Request] = []
         if active:
             row_mask = np.zeros((self.batch,), bool)
             row_mask[active] = True
-            done = self._decode_tick(active, row_mask)
+            done = done + self._decode_tick(active, row_mask)
         if done:
             self._sync_device()
         return done
 
     # -- introspection -----------------------------------------------------
     def pool_report(self) -> dict:
-        """Pool occupancy + prefix-cache counters (paged mode only).
+        """Pool occupancy + prefix-cache counters, plus request-lifecycle
+        observability (DESIGN.md §6): both backends report
+        ``aborted_requests`` and per-request TTFT percentiles
+        (`lifecycle_report`); the paged backend adds the page populations.
 
         ``pages_allocated`` counts referenced pages, ``pages_cached`` the
         evictable LRU population (refcount 0, still hittable), and the two
@@ -670,7 +964,7 @@ class ContinuousBatcher:
         `HostPageAllocator` counters (hits / misses / reclaims /
         cow_retargets) and the page hit rate."""
         if not self.paged:
-            return {}
+            return self.lifecycle_report()
         lengths = [int(self.pos[i]) if r is not None else 0
                    for i, r in enumerate(self.rows)]
         live = PG.live_page_count(self.tables, lengths, self.page_size)
@@ -681,7 +975,8 @@ class ContinuousBatcher:
                "pages_cached": a.n_cached,
                "pages_allocated": allocated,
                "pages_live": live,
-               "utilization": live / max(allocated, 1)}
+               "utilization": live / max(allocated, 1),
+               **self.lifecycle_report()}
         if self.prefix_cache:
             rep.update({
                 "page_hits": a.hits,

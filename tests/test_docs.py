@@ -76,3 +76,34 @@ def test_public_api_docstrings_name_their_design_section():
                 undocumented.append(f"{mod.__name__}.{name}")
     assert not undocumented, \
         f"public APIs without a DESIGN.md § owner: {undocumented}"
+
+
+def test_lifecycle_observability_keys():
+    """Satellite contract (ISSUE 5): `pool_report()` (both backends) and
+    `kv_cache_memory_report(..., scheduler=)` expose the abort/streaming
+    observability keys — abort count and per-request TTFT percentiles."""
+    from repro.configs import get_config
+    from repro.serving import (ContinuousBatcher, EngineConfig,
+                               kv_cache_memory_report)
+    cfg = get_config("internlm2_1_8b", smoke=True)
+    keys = {"aborted_requests", "ttft_s_p50", "ttft_s_p90", "ttft_s_p99"}
+    paged = ContinuousBatcher(None, cfg, EngineConfig(batch=2, max_len=64,
+                                                      paged=True))
+    assert keys <= paged.pool_report().keys()
+    contig = ContinuousBatcher(None, cfg, EngineConfig(batch=2, max_len=64))
+    assert keys <= contig.pool_report().keys()
+    assert keys <= kv_cache_memory_report(cfg, 2, 64,
+                                          scheduler=paged).keys()
+
+
+def test_bench_decode_tracks_sampled_arm():
+    """BENCH_decode.json carries the sampled-decode arm (temperature=0.8,
+    top_p=0.9 on-device) whose seed-normalized ratio the CI regression
+    gate tracks (benchmarks/check_regression.py)."""
+    import json
+    data = json.loads((ROOT / "BENCH_decode.json").read_text())
+    for mix, d in data["mixes"].items():
+        e2e = d["e2e"]
+        for k in ("sampled_us_per_step", "sampled_tokens_s",
+                  "sampled_overhead_vs_greedy"):
+            assert k in e2e, f"BENCH_decode.json mixes.{mix}.e2e lacks {k}"

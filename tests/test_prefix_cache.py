@@ -13,7 +13,7 @@ from repro.configs import get_config
 from repro.core.paging import (HostPageAllocator, PagedQuantizedKVCache,
                                chain_hashes)
 from repro.models import transformer as T
-from repro.serving import ContinuousBatcher, Request
+from repro.serving import ContinuousBatcher, EngineConfig, Request
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -133,8 +133,8 @@ def test_prefix_cache_hit_vs_miss_bitwise_equal():
     cfg, params = _smoke()
     rng = np.random.RandomState(1)
     prompt = rng.randint(0, cfg.vocab, (40,)).astype(np.int32)
-    b = ContinuousBatcher(params, cfg, batch=1, max_len=64, paged=True,
-                          prefix_cache=True, prefill_chunk=16)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=64, paged=True,
+                          prefix_cache=True, prefill_chunk=16))
     b.submit(Request(uid=0, prompt=prompt, max_new_tokens=6))
     cold = b.run_to_completion(max_ticks=400)[0].generated
     assert b.allocator.hits == 0
@@ -160,14 +160,14 @@ def test_prefix_cache_shared_prefix_across_requests():
     prompts = [np.concatenate([shared, t]).astype(np.int32) for t in tails]
 
     def solo(p):
-        sb = ContinuousBatcher(params, cfg, batch=1, max_len=64, paged=True,
-                               prefix_cache=True, prefill_chunk=16)
+        sb = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=64, paged=True,
+                               prefix_cache=True, prefill_chunk=16))
         sb.submit(Request(uid=0, prompt=p, max_new_tokens=4))
         return sb.run_to_completion(max_ticks=400)[0].generated
 
     ref = [solo(p) for p in prompts]
-    b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True,
-                          prefix_cache=True, prefill_chunk=16)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=2, max_len=64, paged=True,
+                          prefix_cache=True, prefill_chunk=16))
     for i, p in enumerate(prompts):
         b.submit(Request(uid=i, prompt=p, max_new_tokens=4))
     done = b.run_to_completion(max_ticks=400)
@@ -190,8 +190,8 @@ def test_prefix_cache_eviction_under_pool_pressure():
     rng = np.random.RandomState(5)
     pa = rng.randint(0, cfg.vocab, (24,)).astype(np.int32)
     pb = rng.randint(0, cfg.vocab, (24,)).astype(np.int32)
-    b = ContinuousBatcher(params, cfg, batch=1, max_len=32, paged=True,
-                          n_pages=5, prefix_cache=True, prefill_chunk=8)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=32, paged=True,
+                          n_pages=5, prefix_cache=True, prefill_chunk=8))
     b.submit(Request(uid=0, prompt=pa, max_new_tokens=4))
     gen_a = b.run_to_completion(max_ticks=400)[0].generated
     assert b.pool_report()["pages_cached"] > 0
@@ -215,8 +215,8 @@ def test_prefix_cache_conversation_continuation_hits_decode_pages():
     cfg, params = _smoke()
     rng = np.random.RandomState(7)
     pa = rng.randint(0, cfg.vocab, (12,)).astype(np.int32)   # 12 = 1.5 pages
-    b = ContinuousBatcher(params, cfg, batch=1, max_len=64, paged=True,
-                          prefix_cache=True, prefill_chunk=8)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=64, paged=True,
+                          prefix_cache=True, prefill_chunk=8))
     b.submit(Request(uid=0, prompt=pa, max_new_tokens=16))
     gen = b.run_to_completion(max_ticks=400)[0].generated
     # the client resends exactly what it saw: prompt + completion + new turn
@@ -294,8 +294,8 @@ def test_chunked_prefill_interleaves_with_decode():
     rng = np.random.RandomState(9)
     short = rng.randint(0, cfg.vocab, (8,)).astype(np.int32)
     long_ = rng.randint(0, cfg.vocab, (48,)).astype(np.int32)
-    b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True,
-                          prefill_chunk=8, chunk=1)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=2, max_len=64, paged=True,
+                          prefill_chunk=8, chunk=1))
     b.submit(Request(uid=0, prompt=short, max_new_tokens=12))
     b.step()                                       # row 0 prefilled + 1 tok
     b.submit(Request(uid=1, prompt=long_, max_new_tokens=4))
@@ -323,14 +323,14 @@ def test_chunked_prefill_mixed_lengths_no_grouping():
                for l in lens]
 
     def solo(p):
-        sb = ContinuousBatcher(params, cfg, batch=1, max_len=64, paged=True,
-                               prefill_chunk=16)
+        sb = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=64, paged=True,
+                               prefill_chunk=16))
         sb.submit(Request(uid=0, prompt=p, max_new_tokens=4))
         return sb.run_to_completion(max_ticks=400)[0].generated
 
     ref = [solo(p) for p in prompts]
-    b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True,
-                          prefill_chunk=16)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=2, max_len=64, paged=True,
+                          prefill_chunk=16))
     for i, p in enumerate(prompts):
         b.submit(Request(uid=i, prompt=p, max_new_tokens=4))
     done = b.run_to_completion(max_ticks=400)
@@ -384,8 +384,8 @@ def test_chunked_prefill_parity_with_whole_prompt():
              for i, (p, m) in enumerate(zip(prompts, mnew))}
 
     def run(eos_id=None, **kw):
-        b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True,
-                              eos_id=eos_id, **kw)
+        b = ContinuousBatcher(params, cfg, EngineConfig(batch=2, max_len=64, paged=True,
+                              eos_id=eos_id, **kw))
         for i, (p, m) in enumerate(zip(prompts, mnew)):
             b.submit(Request(uid=i, prompt=p, max_new_tokens=m))
         done = b.run_to_completion(max_ticks=400)
@@ -425,8 +425,8 @@ def test_admission_gate_accounts_for_adopted_lru_pages():
     cfg, params = _smoke()
     rng = np.random.RandomState(11)
     pa = rng.randint(0, cfg.vocab, (56,)).astype(np.int32)
-    b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True,
-                          n_pages=10, prefix_cache=True, prefill_chunk=8)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=2, max_len=64, paged=True,
+                          n_pages=10, prefix_cache=True, prefill_chunk=8))
     b.submit(Request(uid=0, prompt=pa, max_new_tokens=8))
     b.run_to_completion(max_ticks=400)              # 7 prompt + 1 decode
     # resubmit the same prompt (hits the full cached chain) plus a second
@@ -444,8 +444,8 @@ def test_pool_report_utilization_with_shared_pages():
     cfg, params = _smoke()
     rng = np.random.RandomState(12)
     shared = rng.randint(0, cfg.vocab, (32,)).astype(np.int32)
-    b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True,
-                          prefix_cache=True, prefill_chunk=8)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=2, max_len=64, paged=True,
+                          prefix_cache=True, prefill_chunk=8))
     b.submit(Request(uid=0, prompt=shared, max_new_tokens=4))
     b.run_to_completion(max_ticks=400)              # prefix now resident
     # chunk=1 pins tick == token so both rows are observably active at once
@@ -472,7 +472,7 @@ def test_pool_report_utilization_with_shared_pages():
 def test_prefix_cache_requires_paged():
     cfg, params = _smoke()
     with pytest.raises(ValueError, match="paged"):
-        ContinuousBatcher(params, cfg, batch=1, max_len=32,
-                          prefix_cache=True)
+        ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=32,
+                          prefix_cache=True))
     with pytest.raises(ValueError, match="paged"):
-        ContinuousBatcher(params, cfg, batch=1, max_len=32, prefill_chunk=8)
+        ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=32, prefill_chunk=8))

@@ -6,8 +6,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving import (ContinuousBatcher, Request, greedy_generate,
-                           kv_cache_memory_report)
+from repro.serving import (ContinuousBatcher, EngineConfig, Request,
+                           greedy_generate, kv_cache_memory_report)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -26,7 +26,7 @@ def test_greedy_generate_deterministic():
 def test_continuous_batcher_completes_queue():
     cfg = get_config("internlm2_1_8b", smoke=True)
     params = T.init_params(cfg, jax.random.PRNGKey(2))
-    b = ContinuousBatcher(params, cfg, batch=2, max_len=64)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=2, max_len=64))
     rng = np.random.RandomState(0)
     reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab, (6,)).astype(np.int32),
                     max_new_tokens=4) for i in range(5)]
@@ -52,8 +52,8 @@ def test_memory_report_paper_table1():
 
 
 def _solo_generate(params, cfg, prompt, max_new, *, paged, chunk=None):
-    b = ContinuousBatcher(params, cfg, batch=1, max_len=64, paged=paged,
-                          chunk=chunk)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=64, paged=paged,
+                          chunk=chunk))
     b.submit(Request(uid=0, prompt=prompt, max_new_tokens=max_new))
     done = b.run_to_completion(max_ticks=400)
     assert len(done) == 1
@@ -71,7 +71,7 @@ def test_contiguous_batcher_midstream_prefill_and_recycling():
     prompts = [rng.randint(0, cfg.vocab, (6,)).astype(np.int32)
                for _ in range(3)]
     solo = [_solo_generate(params, cfg, p, 4, paged=False) for p in prompts]
-    b = ContinuousBatcher(params, cfg, batch=1, max_len=64)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=64))
     for i, p in enumerate(prompts):
         b.submit(Request(uid=i, prompt=p, max_new_tokens=4))
     done = b.run_to_completion(max_ticks=400)
@@ -94,7 +94,7 @@ def test_paged_batcher_more_requests_than_rows():
     mnew = [6, 3, 5, 2, 4]
     solo = [_solo_generate(params, cfg, p, m, paged=True)
             for p, m in zip(prompts, mnew)]
-    b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=2, max_len=64, paged=True))
     for i, (p, m) in enumerate(zip(prompts, mnew)):
         b.submit(Request(uid=i, prompt=p, max_new_tokens=m))
     done = b.run_to_completion(max_ticks=400)
@@ -119,7 +119,7 @@ def test_paged_batcher_mixed_prompt_lengths_match_solo():
     prompts = [rng.randint(0, cfg.vocab, (l,)).astype(np.int32)
                for l in lens]
     solo = [_solo_generate(params, cfg, p, 4, paged=True) for p in prompts]
-    b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=2, max_len=64, paged=True))
     for i, p in enumerate(prompts):
         b.submit(Request(uid=i, prompt=p, max_new_tokens=4))
     done = b.run_to_completion(max_ticks=400)
@@ -143,7 +143,7 @@ def test_contiguous_rebuild_defers_overflowing_admission():
     pa = rng.randint(0, cfg.vocab, (6,)).astype(np.int32)
     pb = rng.randint(0, cfg.vocab, (6,)).astype(np.int32)
     solo_b = _solo_generate_ml(params, cfg, pb, 24, 32)
-    b = ContinuousBatcher(params, cfg, batch=2, max_len=32, chunk=1)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=2, max_len=32, chunk=1))
     b.submit(Request(uid=0, prompt=pa, max_new_tokens=16))
     for _ in range(10):               # A mid-decode (history 8+10=18)
         b.step()
@@ -157,7 +157,7 @@ def test_contiguous_rebuild_defers_overflowing_admission():
 
 
 def _solo_generate_ml(params, cfg, prompt, max_new, max_len):
-    b = ContinuousBatcher(params, cfg, batch=1, max_len=max_len, chunk=1)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=max_len, chunk=1))
     b.submit(Request(uid=0, prompt=prompt, max_new_tokens=max_new))
     return b.run_to_completion(max_ticks=400)[0].generated
 
@@ -169,7 +169,7 @@ def test_batcher_rejects_oversized_request():
     cfg = get_config("internlm2_1_8b", smoke=True)
     params = T.init_params(cfg, jax.random.PRNGKey(2))
     for paged in (False, True):
-        b = ContinuousBatcher(params, cfg, batch=1, max_len=16, paged=paged)
+        b = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=16, paged=paged))
         good = Request(uid=0, prompt=np.arange(4, dtype=np.int32),
                        max_new_tokens=4)
         b.submit(good)
@@ -180,8 +180,8 @@ def test_batcher_rejects_oversized_request():
         done = b.run_to_completion(max_ticks=100)
         assert [r.uid for r in done] == [0]
     # paged: a request that fits max_len but not the pool is also rejected
-    b = ContinuousBatcher(params, cfg, batch=1, max_len=64, paged=True,
-                          n_pages=2)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=64, paged=True,
+                          n_pages=2))
     with pytest.raises(ValueError, match="pool"):
         b.submit(Request(uid=2, prompt=np.arange(8, dtype=np.int32),
                          max_new_tokens=24))
@@ -202,8 +202,8 @@ def test_paged_batcher_admits_by_page_budget():
     # concurrently... until a free.
     # chunk=1: the budget-starved window is observed between individual
     # tokens (default chunking would run the lone row to completion).
-    b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True,
-                          n_pages=4, chunk=1)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=2, max_len=64, paged=True,
+                          n_pages=4, chunk=1))
     for i, p in enumerate(prompts):
         b.submit(Request(uid=i, prompt=p, max_new_tokens=4))
     saw_single_row = False
@@ -228,7 +228,7 @@ def test_memory_report_pool_utilization():
     from repro.core import PagedQuantizedKVCache
     cfg = get_config("internlm2_1_8b", smoke=True)
     params = T.init_params(cfg, jax.random.PRNGKey(2))
-    b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=True)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=2, max_len=64, paged=True))
     rng = np.random.RandomState(0)
     b.submit(Request(uid=0, prompt=rng.randint(0, cfg.vocab, (6,))
                      .astype(np.int32), max_new_tokens=12))
@@ -257,8 +257,8 @@ def test_batcher_chunked_scan_matches_per_token(paged):
     mnew = [7, 3, 5, 6]
 
     def run(chunk, eos_id=None):
-        b = ContinuousBatcher(params, cfg, batch=2, max_len=64, paged=paged,
-                              chunk=chunk, eos_id=eos_id)
+        b = ContinuousBatcher(params, cfg, EngineConfig(batch=2, max_len=64, paged=paged,
+                              chunk=chunk, eos_id=eos_id))
         for i, (p, m) in enumerate(zip(prompts, mnew)):
             b.submit(Request(uid=i, prompt=p, max_new_tokens=m))
         done = b.run_to_completion(max_ticks=400)
@@ -291,3 +291,279 @@ def test_decode_cache_stays_int8():
                                  jnp.full((1,), 8 + i, jnp.int32))
     assert state["p0"].k_q.dtype == jnp.int8
     assert state["p0"].k_s.dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# request lifecycle: LLMEngine facade, streaming, abort, stops (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+def _setup():
+    cfg = get_config("internlm2_1_8b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    return cfg, params
+
+
+def test_legacy_kwargs_shim_warns_and_matches_config():
+    """The historical kwarg sprawl survives one release as a deprecated
+    shim; passing both config and kwargs is an error."""
+    from repro.serving import SamplingParams
+    cfg, params = _setup()
+    prompt = np.arange(1, 7, dtype=np.int32)
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        legacy = ContinuousBatcher(params, cfg, batch=1, max_len=64,
+                                   paged=True)
+    legacy.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+    via_config = ContinuousBatcher(params, cfg,
+                                   EngineConfig(batch=1, max_len=64,
+                                                paged=True))
+    via_config.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+    a = legacy.run_to_completion(max_ticks=100)[0].generated
+    b = via_config.run_to_completion(max_ticks=100)[0].generated
+    assert a == b
+    with pytest.raises(TypeError, match="not both"):
+        ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=64),
+                          batch=1)
+    with pytest.raises(TypeError, match="unknown"):
+        ContinuousBatcher(params, cfg, nonsense=3)
+
+
+def test_submit_rejects_duplicate_inflight_uid():
+    """The uid is the lifecycle handle (abort, admission memo, streaming):
+    duplicates are rejected while in flight, and a completed uid is
+    reusable."""
+    cfg, params = _setup()
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=64,
+                                                    paged=True))
+    p = np.arange(1, 7, dtype=np.int32)
+    b.submit(Request(uid=5, prompt=p, max_new_tokens=3))
+    with pytest.raises(ValueError, match="already in flight"):
+        b.submit(Request(uid=5, prompt=p, max_new_tokens=3))
+    done = b.run_to_completion(max_ticks=100)
+    assert [r.uid for r in done] == [5]
+    b.submit(Request(uid=5, prompt=p, max_new_tokens=3))   # uid freed
+    assert len(b.run_to_completion(max_ticks=100)) == 1
+
+
+def test_run_to_completion_raises_on_stranded_requests():
+    """Exhausting max_ticks with requests still in flight raises instead
+    of silently dropping them (the old behavior lost the stranded uids)."""
+    cfg, params = _setup()
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=64,
+                                                    paged=True, chunk=1))
+    b.submit(Request(uid=7, prompt=np.arange(1, 7, dtype=np.int32),
+                     max_new_tokens=8))
+    with pytest.raises(RuntimeError, match=r"\[7\]"):
+        b.run_to_completion(max_ticks=2)
+    # the request is still live and finishes once given enough ticks
+    done = b.run_to_completion(max_ticks=100)
+    assert [r.uid for r in done] == [7]
+    assert len(done[0].generated) == 8
+
+
+def test_abort_frees_pages_and_prefix_cache_still_hits():
+    """Acceptance: abort() mid-decode frees the row's pages (pool_report
+    balances) and a later prompt sharing the aborted prefix still gets
+    prefix-cache hits — the release path promotes/parks pages instead of
+    discarding the partial generation's work."""
+    cfg, params = _setup()
+    ps = cfg.quant.block_size
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=1, max_len=64, paged=True, prefix_cache=True,
+        prefill_chunk=ps, chunk=1))
+    rng = np.random.RandomState(9)
+    prompt = rng.randint(0, cfg.vocab, (3 * ps,)).astype(np.int32)
+    b.submit(Request(uid=0, prompt=prompt, max_new_tokens=12))
+    for _ in range(6):            # 3 prefill chunk ticks + decode ticks
+        b.step()
+    r = b.rows[0]
+    assert r is not None and len(r.generated) > 0, "not mid-decode yet"
+    aborted = b.abort(0)
+    assert aborted is not None and aborted.finish_reason == "aborted"
+    assert aborted.done and len(aborted.generated) > 0
+    rep = b.pool_report()
+    assert rep["pages_allocated"] == 0            # every page released
+    assert rep["pages_free"] + rep["pages_cached"] == rep["pages_total"]
+    assert rep["aborted_requests"] == 1
+    # a fresh request sharing the aborted prompt hits its cached pages
+    b.submit(Request(uid=1, prompt=prompt, max_new_tokens=2))
+    done = b.run_to_completion(max_ticks=100)
+    assert [x.uid for x in done] == [1]
+    assert b.pool_report()["page_hits"] > 0
+    # aborting an unknown uid is a no-op
+    assert b.abort(99) is None
+
+
+def test_abort_queued_request_never_runs():
+    cfg, params = _setup()
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=64,
+                                                    paged=True, chunk=1))
+    p = np.arange(1, 7, dtype=np.int32)
+    b.submit(Request(uid=0, prompt=p, max_new_tokens=4))
+    b.submit(Request(uid=1, prompt=p + 1, max_new_tokens=4))  # stays queued
+    b.step()
+    aborted = b.abort(1)
+    assert aborted.finish_reason == "aborted" and aborted.generated == []
+    done = b.run_to_completion(max_ticks=100)
+    assert [r.uid for r in done] == [0]
+    assert b.pool_report()["aborted_requests"] == 1
+
+
+def test_llm_engine_streaming_outputs_and_metrics():
+    """step() emits RequestOutput snapshots whose new-token deltas
+    concatenate to the final stream; the final snapshot carries
+    finish_reason and TTFT/decode-latency metrics."""
+    from repro.serving import LLMEngine
+    cfg, params = _setup()
+    eng = LLMEngine(params, cfg, EngineConfig(batch=2, max_len=64,
+                                              paged=True, chunk=1))
+    rng = np.random.RandomState(3)
+    uid = eng.add_request(rng.randint(0, cfg.vocab, (6,)).astype(np.int32))
+    deltas, final = [], None
+    for _ in range(100):
+        for out in eng.step():
+            assert out.uid == uid
+            deltas.extend(out.new_token_ids)
+            assert out.token_ids == deltas       # cumulative == sum(deltas)
+            if out.finished:
+                final = out
+        if not eng.has_unfinished():
+            break
+    assert final is not None and final.finish_reason == "length"
+    assert len(final.token_ids) == 16            # SamplingParams default
+    assert final.metrics["ttft_s"] > 0
+    assert final.metrics["decode_s"] is not None
+    rep = eng.pool_report()
+    assert rep["ttft_s_p50"] > 0 and rep["aborted_requests"] == 0
+
+
+def test_stop_token_ids_and_stop_strings():
+    """Per-request stop conditions (DESIGN.md §6): a stop token finishes
+    the request WITHOUT emitting the token (the eos_id convention); a stop
+    string finishes it at the completing token, with mid-chunk trailing
+    tokens causally discarded under the default scanned chunking."""
+    from repro.serving import LLMEngine, SamplingParams
+    cfg, params = _setup()
+    rng = np.random.RandomState(4)
+    prompt = rng.randint(0, cfg.vocab, (6,)).astype(np.int32)
+
+    def run(sp):
+        eng = LLMEngine(params, cfg, EngineConfig(batch=1, max_len=64,
+                                                  paged=True))
+        return eng.generate([prompt], sp)[0]
+
+    base = run(SamplingParams.greedy(max_new_tokens=8))
+    assert base.finish_reason == "length" and len(base.token_ids) == 8
+    tokens = base.token_ids
+    # the stop fires at the token's FIRST occurrence (random-init greedy
+    # streams repeat), so derive the expected cut from the base stream
+    stop_tok = tokens[3]
+    st = run(SamplingParams.greedy(max_new_tokens=8,
+                                   stop_token_ids=(stop_tok,)))
+    assert st.finish_reason == "stop_token"
+    assert st.token_ids == tokens[:tokens.index(stop_tok)]   # suppressed
+    needle = f"<{tokens[2]}><{tokens[3]}>"
+    text = "".join(f"<{t}>" for t in tokens)
+    first_end = text.index(needle) + len(needle)
+    n_kept = text[:first_end].count("<")         # completing token kept
+    ss = run(SamplingParams.greedy(max_new_tokens=8, stop=(needle,)))
+    assert ss.finish_reason == "stop_string"
+    assert ss.token_ids == tokens[:n_kept]
+    # under default chunking the whole budget was scanned in one dispatch;
+    # tokens past the stop were discarded causally
+    assert len(ss.token_ids) < 8
+
+
+def test_stop_token_as_first_draw_finishes_empty():
+    """A stop token sampled as the very FIRST token is suppressed like any
+    other (DESIGN.md §6): the request finishes with empty output and
+    finish_reason="stop_token", on both backends."""
+    from repro.serving import LLMEngine, SamplingParams
+    cfg, params = _setup()
+    rng = np.random.RandomState(8)
+    prompt = rng.randint(0, cfg.vocab, (6,)).astype(np.int32)
+    for paged in (True, False):
+        eng = LLMEngine(params, cfg, EngineConfig(batch=1, max_len=64,
+                                                  paged=paged))
+        first = eng.generate([prompt],
+                             SamplingParams.greedy(max_new_tokens=4)
+                             )[0].token_ids[0]
+        out = eng.generate([prompt], SamplingParams.greedy(
+            max_new_tokens=4, stop_token_ids=(first,)))[0]
+        assert out.finish_reason == "stop_token", f"paged={paged}"
+        assert out.token_ids == [], f"paged={paged}"
+
+
+def test_request_budget_resolves_from_sampling_params():
+    """Request.max_new_tokens=None takes the budget from SamplingParams —
+    one authoritative source; an explicit Request value overrides."""
+    from repro.serving import SamplingParams
+    cfg, params = _setup()
+    p = np.arange(1, 7, dtype=np.int32)
+    b = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=64,
+                                                    paged=True))
+    b.submit(Request(uid=0, prompt=p,
+                     sampling=SamplingParams.greedy(max_new_tokens=5)))
+    b.submit(Request(uid=1, prompt=p, max_new_tokens=3,
+                     sampling=SamplingParams.greedy(max_new_tokens=7)))
+    done = {r.uid: r for r in b.run_to_completion(max_ticks=200)}
+    assert len(done[0].generated) == 5      # from SamplingParams
+    assert len(done[1].generated) == 3      # explicit override wins
+
+
+def test_generate_does_not_swallow_concurrent_online_outputs():
+    """An offline generate() drain must not consume a concurrently-live
+    online request's streaming outputs: they are buffered and delivered
+    by the next step() call."""
+    from repro.serving import LLMEngine, SamplingParams
+    cfg, params = _setup()
+    rng = np.random.RandomState(6)
+    eng = LLMEngine(params, cfg, EngineConfig(batch=2, max_len=64,
+                                              paged=True))
+    online = eng.add_request(rng.randint(0, cfg.vocab, (6,))
+                             .astype(np.int32),
+                             SamplingParams.greedy(max_new_tokens=5))
+    offline = eng.generate([rng.randint(0, cfg.vocab, (6,))
+                            .astype(np.int32)],
+                           SamplingParams.greedy(max_new_tokens=4))
+    assert len(offline) == 1 and offline[0].finished
+    # the online request finished during the drain; its snapshots were
+    # buffered, not dropped
+    got = []
+    for _ in range(50):
+        got.extend(o for o in eng.step() if o.uid == online)
+        if any(o.finished for o in got):
+            break
+    assert any(o.finished for o in got), "online outputs were swallowed"
+    final = [o for o in got if o.finished][0]
+    toks = [t for o in got for t in o.new_token_ids]
+    assert toks == final.token_ids and len(toks) == 5
+
+
+def test_generate_aborts_submitted_peers_when_a_prompt_is_rejected():
+    """If a later prompt in a generate() batch fails validation, the
+    already-queued peers are aborted before the error propagates — no
+    orphaned request keeps running (or buffering outputs) behind the
+    caller's back."""
+    from repro.serving import LLMEngine, SamplingParams
+    cfg, params = _setup()
+    eng = LLMEngine(params, cfg, EngineConfig(batch=1, max_len=16,
+                                              paged=True))
+    ok = np.arange(1, 5, dtype=np.int32)
+    oversized = np.arange(1, 15, dtype=np.int32)   # 14 + 4 > max_len
+    with pytest.raises(ValueError, match="max_len"):
+        eng.generate([ok, oversized],
+                     SamplingParams.greedy(max_new_tokens=4))
+    assert not eng.has_unfinished()
+    assert eng.pool_report()["aborted_requests"] == 1
+    assert eng.step() == []                        # nothing left behind
+    # the engine is still usable afterwards
+    out = eng.generate([ok], SamplingParams.greedy(max_new_tokens=3))[0]
+    assert out.finished and len(out.token_ids) == 3
+
+
+def test_batcher_requires_config_or_legacy_kwargs():
+    """ContinuousBatcher with neither config nor kwargs stays an error
+    (it always was one) instead of silently defaulting."""
+    cfg, params = _setup()
+    with pytest.raises(TypeError, match="EngineConfig"):
+        ContinuousBatcher(params, cfg)

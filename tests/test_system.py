@@ -141,12 +141,17 @@ def test_train_launcher_cli(tmp_path):
 
 
 def test_serve_launcher_cli():
+    """The serve CLI end-to-end, including the request-lifecycle flags
+    (on-device sampling + stop string through the LLMEngine facade)."""
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.serve", "--arch",
          "internlm2_1_8b", "--smoke", "--requests", "4", "--max-new", "4",
-         "--prompt-len", "8", "--max-len", "64"],
+         "--prompt-len", "8", "--max-len", "64", "--paged",
+         "--temperature", "0.8", "--top-k", "20", "--top-p", "0.9",
+         "--seed", "0", "--stop", "<511>"],
         capture_output=True, text=True, timeout=600,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
              "HOME": "/root", "JAX_PLATFORMS": "cpu"}, cwd="/root/repo")
     assert r.returncode == 0, r.stderr[-2000:]
     assert "completed 4/4" in r.stdout
+    assert "lifecycle" in r.stdout

@@ -21,7 +21,7 @@ from hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving import ContinuousBatcher, Request
+from repro.serving import ContinuousBatcher, EngineConfig, Request
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -47,8 +47,8 @@ def _model():
 
 
 def _batcher(cfg, params):
-    return ContinuousBatcher(params, cfg, batch=1, max_len=64, paged=True,
-                             prefix_cache=True, prefill_chunk=PS)
+    return ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=64, paged=True,
+                             prefix_cache=True, prefill_chunk=PS))
 
 
 def _run(b, prompt, uid=0):
@@ -89,8 +89,8 @@ def test_varlen_partial_page_survives_decode(model):
     prompt = rng.randint(0, cfg.vocab, (PS + 3,)).astype(np.int32)
     runs = []
     for _ in range(2):
-        b = ContinuousBatcher(params, cfg, batch=1, max_len=64, paged=True,
-                              chunk=1)
+        b = ContinuousBatcher(params, cfg, EngineConfig(batch=1, max_len=64, paged=True,
+                              chunk=1))
         b.submit(Request(uid=0, prompt=prompt, max_new_tokens=2 * PS))
         runs.append(b.run_to_completion(max_ticks=200)[0].generated)
         assert len(runs[-1]) == 2 * PS
