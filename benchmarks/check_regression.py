@@ -11,7 +11,8 @@ regresses by more than the threshold:
     sampled-decode arm's ``sampled_us_per_step`` (on-device temperature /
     top-p sampling inside the same scan)
   * the 90%-shared-mix ``ttft_speedup`` (higher is better) from
-    BENCH_prefix.json
+    BENCH_prefix.json, plus the fused-vs-oracle ``prefill_fused_speedup``
+    on the rows that carry the fused-prefill arm (0%- and 90%-shared)
 
 This turns the CI bench steps from smoke tests into a regression gate: a
 PR that silently halves decode throughput or loses the prefix-cache TTFT
@@ -103,6 +104,14 @@ def prefix_metrics(data: dict) -> dict[str, tuple[float, bool]]:
         if row.get("config") == "shared90" and "page_hit_rate" in row:
             out["prefix.shared90.page_hit_rate"] = (
                 float(row["page_hit_rate"]), True)
+        # fused-vs-oracle prefill TTFT ratio (rows that carry the fused
+        # arm: shared00 = cache-off, shared90 = the fleet workload). A
+        # same-run cross-arm ratio like ttft_speedup, so hardware cancels;
+        # a PR that quietly reroutes prefill through the dequantize-gather
+        # path (or slows the fused kernel) trips it.
+        if "prefill_fused_speedup" in row:
+            out[f"prefix.{row.get('config')}.prefill_fused_speedup"] = (
+                float(row["prefill_fused_speedup"]), True)
     return out
 
 

@@ -12,15 +12,26 @@ exercised real traffic). Both arms run the same varlen chunked prefill;
 the only difference is the hash-index lookup, so the ratios isolate
 caching itself:
 
-  * TTFT (time to first token, mean over requests from queue start) — the
-    metric prefix caching targets: hit chunks skip compute entirely
+  * TTFT (time to first token, mean over requests; each request's clock
+    runs from its submit to the scheduler's first-token stamp
+    `Request.first_token_time`, i.e. the prefill boundary — NOT to the
+    first observed decode output, which would fold a whole decode-scan
+    dispatch into every TTFT) — the metric prefix caching targets: hit
+    chunks skip compute entirely
   * tokens/s over the whole queue (host wall-clock)
   * page hit rate, reclaim and CoW counters from the host allocator
 
+A second axis benchmarks the fused varlen prefill kernel itself
+(DESIGN.md §5/§7): the 0%- and 90%-shared mixes are re-run with
+``use_fused_prefill=False`` — the retired dequantize-gather concat-softmax
+oracle — and ``prefill_fused_speedup = ttft_oracle / ttft_fused`` lands in
+those rows. Both arms share every other code path, so the ratio isolates
+the fused attention dispatch.
+
 On this CPU container the absolute times are host-bound; the *ratios* are
 the architecture-level result. ``--json`` writes BENCH_prefix.json (CI
-uploads it and gates regressions on the shared90 TTFT speedup —
-benchmarks/check_regression.py).
+uploads it and gates regressions on the shared90 TTFT speedup and both
+fused-prefill speedups — benchmarks/check_regression.py).
 """
 from __future__ import annotations
 
@@ -72,38 +83,41 @@ def _prompts(rng, frac, n=N_REQUESTS):
 
 
 def _drive(batcher, prompts):
-    """Submit everything at t0; record each request's time-to-first-token
-    and the full-queue wall clock."""
+    """Submit everything at t0; TTFT per request is the scheduler's own
+    first-token stamp minus the submit stamp (`Request.first_token_time`,
+    recorded at the prefill boundary) — so TTFT measures prefill. The
+    earlier generated-poll measurement charged every request a full
+    decode-scan dispatch on top, a constant that diluted every ratio."""
     reqs = [Request(uid=i, prompt=p, max_new_tokens=MAX_NEW)
             for i, p in enumerate(prompts)]
     for r in reqs:
         batcher.submit(r)
-    ttft = {}
     t0 = time.perf_counter()
     for _ in range(20_000):
         batcher.step()
-        now = time.perf_counter()
-        for r in reqs:
-            if r.uid not in ttft and r.generated:
-                ttft[r.uid] = now - t0
         if not batcher.queue and all(r is None for r in batcher.rows):
             break
     dt = time.perf_counter() - t0
-    assert len(ttft) == len(reqs), "benchmark queue did not drain"
+    assert all(r.first_token_time is not None for r in reqs), \
+        "benchmark queue did not drain"
     toks = sum(len(r.generated) for r in reqs)
-    return float(np.mean(list(ttft.values()))), toks / dt
+    ttfts = [r.first_token_time - r.submit_time for r in reqs]
+    return float(np.mean(ttfts)), toks / dt
 
 
-def _bench_one(params, cfg, frac, *, prefix_cache, seed):
+def _bench_one(params, cfg, frac, *, prefix_cache, seed, fused=True):
     """Steady-state serving measurement (the motivating workload is a
     resident shared system prompt, not a cold cache): after a jit-warmup
     drive on unrelated prompts and ONE unmeasured request that makes the
     mix's shared prefix resident, time the 8-request queue. Both arms use
     identical varlen chunked prefill — `prefix_cache` toggles only the
-    hash-index lookup, so the speedup is caching, not chunking."""
+    hash-index lookup, so the speedup is caching, not chunking. `fused`
+    picks the chunk-attention path: the fused paged prefill (default,
+    production) vs the dequantize-gather concat-softmax oracle."""
     b = ContinuousBatcher(params, cfg, EngineConfig(
         batch=BATCH, max_len=MAX_LEN, paged=True, n_pages=N_PAGES,
-        prefill_chunk=PREFILL_CHUNK, prefix_cache=prefix_cache))
+        prefill_chunk=PREFILL_CHUNK, prefix_cache=prefix_cache,
+        use_fused_prefill=fused))
     # jit caches live on the batcher's closures — warm them with unrelated
     # prompts (offset token stream never collides with measured hashes)
     warm_rng = np.random.RandomState(10_000 + seed)
@@ -149,6 +163,11 @@ def _bench_config():
         name="prefix_bench", family="dense",
         n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
         d_ff=768, vocab=512, head_dim=32,
+        # f32 activations: this is a CPU benchmark and XLA:CPU has no native
+        # bf16 matmul (bf16 runs ~2x slower through an upcast path) — bf16
+        # is the TPU serving dtype, not a meaningful thing to measure here,
+        # and the inflated base cost would dilute every attention-path ratio
+        dtype="float32",
         quant=QuantConfig(granularity="per_block", block_size=8),
         source="benchmark")
 
@@ -165,6 +184,22 @@ def run():
                                           prefix_cache=False, seed=seed)
         ttft_on, tps_on, rep = _bench_one(params, cfg, frac,
                                           prefix_cache=True, seed=seed)
+        # fused-prefill arm: re-run the mix's headline configuration with
+        # the retired dequantize-gather oracle path. shared00 compares the
+        # cache-off arm (every chunk computes); shared90 compares the
+        # cache-on arm (the fleet workload). Same prompts, same seeds —
+        # only the chunk-attention dispatch differs.
+        fused_speedup = None
+        if name == "shared00":
+            ttft_orc, _, _ = _bench_one(params, cfg, frac,
+                                        prefix_cache=False, seed=seed,
+                                        fused=False)
+            fused_speedup = ttft_orc / max(ttft_off, 1e-9)
+        elif name == "shared90":
+            ttft_orc, _, _ = _bench_one(params, cfg, frac,
+                                        prefix_cache=True, seed=seed,
+                                        fused=False)
+            fused_speedup = ttft_orc / max(ttft_on, 1e-9)
         rows.append({
             "bench": "prefix_cache", "config": name,
             "shared_frac": frac,
@@ -185,6 +220,9 @@ def run():
             "cow_retargets": rep["cow_retargets"],
             "pages_cached_after": rep["pages_cached"],
         })
+        if fused_speedup is not None:
+            rows[-1]["ttft_ms_oracle_prefill"] = ttft_orc * 1e3
+            rows[-1]["prefill_fused_speedup"] = fused_speedup
     return rows
 
 
@@ -206,7 +244,9 @@ def main(argv=None):
               f"hit_rate={r['page_hit_rate']:.2f} "
               f"reclaims={r['reclaims']} "
               f"tok_s_on={r['tokens_s_enabled']:.1f} "
-              f"tok_s_off={r['tokens_s_disabled']:.1f}")
+              f"tok_s_off={r['tokens_s_disabled']:.1f}"
+              + (f" fused_speedup={r['prefill_fused_speedup']:.2f}"
+                 if "prefill_fused_speedup" in r else ""))
     if args.json:
         with open(args.json_path, "w") as f:
             json.dump({"suite": "prefix_cache", "rows": rows}, f, indent=2)

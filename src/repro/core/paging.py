@@ -665,12 +665,23 @@ class PagedQuantizedKVCache:
     def dequantized_prefix(self, n_blocks: int, dtype=jnp.float32
                            ) -> tuple[jax.Array, jax.Array]:
         """Dequantized (k, v) of each row's first ``n_blocks`` logical
-        blocks: (B, H_kv, n_blocks*ps, D), no residual overlay. This is
-        chunked prefill's history read (DESIGN.md §7) — cursors are
-        page-aligned so there is no fp tail, and gathering only the blocks
-        below the dispatch's cursor bound avoids materializing max_len per
-        chunk. ``n_blocks`` is static (the scheduler rounds it to a power
-        of two to bound the compile set)."""
+        blocks: (B, H_kv, n_blocks*ps, D), no residual overlay.
+
+        PARITY-ORACLE DUTY ONLY. This was chunked prefill's history read
+        (DESIGN.md §7) until the fused paged prefill kernel
+        (`ops.paged_attention_prefill`) retired the gather-and-dequantize
+        hot path — production chunks now stream INT8 pages straight into
+        the attention kernel and this HBM materialization never happens.
+        It survives as the reference read feeding the
+        `attention._chunk_attention` oracle (`prefill_chunk(
+        use_fused=False)`), for tests and debugging; keep it naive.
+
+        Cursors are page-aligned so there is no fp tail, and gathering
+        only the blocks below the dispatch's cursor bound avoids
+        materializing max_len per chunk. ``n_blocks`` is static (the
+        scheduler rounds it to a power of two to bound the compile set).
+        ``dtype`` is the dequantization target — bf16 halves the gathered
+        buffer while the oracle still accumulates logits in f32."""
         k_q, k_s, v_q, v_s = gather_pages(
             self.pool.k_q, self.pool.k_s, self.pool.v_q, self.pool.v_s,
             self.page_table[:, :n_blocks])

@@ -14,9 +14,13 @@ Layout (single (batch, kv-head) pair; batch × kv-heads via vmap):
 
 Grid (nq, nk): kv is the inner (sequential) axis; scratch (m, l, acc) is
 revisited across the kv loop for each q block. Causal + sliding-window
-masking by absolute positions; fully-masked kv blocks are compute-skipped
-with pl.when (the DMA still streams — index-map skipping is a further
-§Perf item).
+masking by absolute positions; fully-masked kv blocks are skipped twice
+over: pl.when drops the compute, and the k/v index maps clamp dead block
+indices to the q block's causal frontier (`min(j, last_live_block)`, the
+same clamp-to-last-live trick as quant_attention.py's page walk), so the
+pipeline re-reads the resident block instead of streaming HBM for kv
+blocks entirely in the causal future. `dma_skip_ratio` reports the
+fraction of grid steps whose kv stream is elided.
 """
 from __future__ import annotations
 
@@ -88,9 +92,16 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 def flash_prefill(q, k, v, *, causal: bool = True, window: int | None = None,
                   kv_offset: int = 0, block_q: int = 256, block_k: int = 256,
-                  interpret: bool = True):
+                  skip_dead: bool = True, interpret: bool = True):
     """Batched flash forward: q (B, H, S, D); k/v (B, Hkv, T, D) ->
-    (B, H, S, D) f32. GQA via vmap over (B, Hkv), G folded into q rows."""
+    (B, H, S, D) f32. GQA via vmap over (B, Hkv), G folded into q rows.
+
+    ``skip_dead`` (causal only) clamps the k/v index maps to each q
+    block's causal frontier, so kv blocks wholly in the future — whose
+    compute pl.when already drops — stream no DMA either: the pipeline
+    sees a repeated block index and re-uses the resident tile. Invisible
+    to results (those blocks were fully masked); `dma_skip_ratio` gives
+    the fraction of grid steps elided."""
     B, H, S, D = q.shape
     Hkv, T = k.shape[1], k.shape[2]
     G = H // Hkv
@@ -106,13 +117,24 @@ def flash_prefill(q, k, v, *, causal: bool = True, window: int | None = None,
         _fwd_kernel, block_q=block_q, block_k=block_k, seq_q=S, seq_kv=T,
         causal=causal, window=window or 0, kv_offset=kv_offset)
 
+    if causal and skip_dead:
+        # last kv block any row of q block i can see; rem() keeps the
+        # frontier per-head (q rows are G stacked heads of S rows each)
+        def kv_map(i, j):
+            last_live = (kv_offset + jax.lax.rem(i * block_q, S)
+                         + block_q - 1) // block_k
+            return (jnp.minimum(j, last_live), 0)
+    else:
+        def kv_map(i, j):
+            return (j, 0)
+
     def one(qh, kh, vh):
         return pl.pallas_call(
             kernel,
             grid=(nq, nk),
             in_specs=[pl.BlockSpec((block_q, D), lambda i, j: (i, 0)),
-                      pl.BlockSpec((block_k, D), lambda i, j: (j, 0)),
-                      pl.BlockSpec((block_k, D), lambda i, j: (j, 0))],
+                      pl.BlockSpec((block_k, D), kv_map),
+                      pl.BlockSpec((block_k, D), kv_map)],
             out_specs=pl.BlockSpec((block_q, D), lambda i, j: (i, 0)),
             out_shape=jax.ShapeDtypeStruct((G * S, D), jnp.float32),
             scratch_shapes=[pltpu.VMEM((block_q, 1), jnp.float32),
@@ -123,3 +145,22 @@ def flash_prefill(q, k, v, *, causal: bool = True, window: int | None = None,
 
     out = jax.vmap(jax.vmap(one))(qg, k, v)           # (B, Hkv, G*S, D)
     return out.reshape(B, H, S, D)
+
+
+def dma_skip_ratio(S: int, T: int, G: int = 1, *, causal: bool = True,
+                   kv_offset: int = 0, block_q: int = 256,
+                   block_k: int = 256) -> float:
+    """Fraction of (q block, kv block) grid steps whose kv HBM stream the
+    index-map clamp elides for these shapes (structural metric, mirroring
+    quant_attention.dma_skip_ratio). 0 for non-causal attention — every
+    kv block is live for every q block."""
+    if not causal:
+        return 0.0
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    nq, nk = (G * S) // block_q, T // block_k
+    skipped = 0
+    for i in range(nq):
+        last_live = (kv_offset + (i * block_q) % S + block_q - 1) // block_k
+        skipped += max(nk - 1 - min(last_live, nk - 1), 0)
+    return skipped / (nq * nk)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import quant_attention as _qa
+from repro.kernels import quant_prefill as _qp
 from repro.kernels import quantize as _quant
 from repro.kernels import ref as _ref
 
@@ -127,6 +128,131 @@ def paged_attention_decode(q, pool_kq, pool_ks, pool_vq, pool_vs, page_table,
     o, m, l = paged_attention_decode_partials(
         q, pool_kq, pool_ks, pool_vq, pool_vs, page_table, lengths, impl=impl)
     return o / jnp.maximum(l, 1e-30)
+
+
+def paged_attention_prefill(q, k, v, pool_kq, pool_ks, pool_vq, pool_vs,
+                            page_table, hist_len, valid=None, *,
+                            hist_blocks: int, impl: Impl = "auto"):
+    """Fused varlen chunk-prefill attention over the INT8 page pool.
+
+    q (B, H, C, D) chunk queries; k/v (B, Hkv, C, D) the chunk's own fp
+    K/V; pool_kq/vq (P, ps, Hkv, D) int8; pool_ks/vs (P, Hkv, D) f32;
+    page_table (B, NT) int32; hist_len (B,) int32 per-row resident history
+    (page-aligned); valid (B,) int32 per-row true chunk tokens (None = C).
+    `hist_blocks` (static) bounds the history walk to the dispatch group's
+    pow2 cursor bound. The Pallas path is ONE pallas_call over a
+    (B, Hkv, hist_blocks + 1) grid — INT8 pages stream through the
+    page-table index_map with dead-block DMA skipping, dequant fused into
+    the online softmax, no fp32 history tensor in HBM (DESIGN.md §7). The
+    XLA path is its structural twin: split history/chunk partials with a
+    flash merge over a bounded `page_table[:, :hist_blocks]` gather
+    (leaner than the retired concat-softmax oracle, which survives as
+    `models/attention._chunk_attention` for parity tests).
+    Returns normalized (B, H, C, D) f32; outputs past `valid` are garbage
+    the caller discards."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _prefill_fused_xla(q, k, v, pool_kq, pool_ks, pool_vq,
+                                  pool_vs, page_table, hist_len, valid,
+                                  hist_blocks)
+    return _qp.paged_attention_prefill(
+        q, k, v, pool_kq, pool_ks, pool_vq, pool_vs, page_table, hist_len,
+        valid, hist_blocks=hist_blocks,
+        interpret=impl == "pallas_interpret")
+
+
+def _hist_partials(qg, pool_kq, pool_ks, pool_vq, pool_vs, tbl, hist_len):
+    """Flash partials (o, s, m) of chunk queries over `tbl`'s history pages.
+
+    Pages keep their native (nb, ps, Hkv, D) layout — dequant multiplies
+    the per-page scale row in place and the einsums contract it directly
+    (no (B, H, T, D) transpose/reshape). Masking is an additive bias folded
+    into the logits BEFORE exp, and there is no post-exp mask multiply: a
+    masked position's exp(l - m) underflows to exactly 0 whenever the row
+    has any live position (m finite), and a fully-masked row (cursor 0
+    inside a deep-history dispatch) keeps m == -1e30 so the caller's merge
+    weight exp(m - mx) zeroes its entire contribution."""
+    kh = pool_kq[tbl].astype(jnp.float32) * \
+        pool_ks[tbl][:, :, None].astype(jnp.float32)   # (B, nb, ps, Hkv, D)
+    vh = pool_vq[tbl].astype(jnp.float32) * \
+        pool_vs[tbl][:, :, None].astype(jnp.float32)
+    nb, ps = kh.shape[1], kh.shape[2]
+    lh = jnp.einsum("bhgcd,bnphd->bhgcnp", qg, kh)
+    pos = (jnp.arange(nb, dtype=jnp.int32)[:, None] * ps +
+           jnp.arange(ps, dtype=jnp.int32)[None])             # (nb, ps)
+    mh = pos[None] < jnp.asarray(hist_len, jnp.int32)[:, None, None]
+    bias = jnp.where(mh, 0.0, _NEG_INF)                       # (B, nb, ps)
+    lh = lh + bias[:, None, None, None]
+    mxh = jnp.max(lh, axis=(-2, -1), keepdims=True)
+    ph = jnp.exp(lh - mxh)
+    sh = jnp.sum(ph, axis=(-2, -1))[..., None]
+    oh = jnp.einsum("bhgcnp,bnphd->bhgcd", ph, vh)
+    return oh, sh, mxh[..., 0]                                # (..., c, 1)
+
+
+def _prefill_fused_xla(q, k, v, pool_kq, pool_ks, pool_vq, pool_vs,
+                       page_table, hist_len, valid, hist_blocks):
+    """XLA twin of the fused prefill kernel: f32 split history/chunk flash
+    partials merged once — no (HT+C)-wide concat softmax, no transposes of
+    the gathered pages, and the Pallas kernel's dead-block DMA skip
+    mirrored structurally: a `lax.switch` ladder sizes the history
+    computation to the batch's deepest live page (4-block rungs), so the
+    pow2 dispatch bound's over-approximation costs a branch select instead
+    of dense masked FLOPs over pages nobody occupies."""
+    B, H, C, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    scale = jax.lax.rsqrt(jnp.asarray(D, jnp.float32))
+    qg = q.reshape(B, Hkv, G, C, D).astype(jnp.float32) * scale
+    # chunk partials: causal + per-row valid masking
+    lc = jnp.einsum("bhgcd,bhtd->bhgct", qg, k.astype(jnp.float32))
+    kpos = jnp.arange(C, dtype=jnp.int32)
+    mc = kpos[None, :] <= kpos[:, None]                       # (C, C) causal
+    if valid is not None:
+        mc = mc[None] & (kpos[None, None, :] <
+                         jnp.asarray(valid, jnp.int32)[:, None, None])
+        mc = mc[:, None, None]                                # (B,1,1,C,C)
+    else:
+        mc = mc[None, None, None]
+    lc = jnp.where(mc, lc, _NEG_INF)
+    mxc = jnp.max(lc, axis=-1, keepdims=True)
+    # exp runs on the MASKED logits, so masked entries underflow to exactly
+    # 0 (every real query sees at least itself: mxc is finite); a valid==0
+    # padding row degenerates to finite garbage the caller discards
+    pc = jnp.exp(lc - mxc)
+    sc = jnp.sum(pc, axis=-1, keepdims=True)
+    oc = jnp.einsum("bhgct,bhtd->bhgcd", pc, v.astype(jnp.float32))
+    if hist_blocks == 0:
+        out = oc / jnp.maximum(sc, 1e-30)
+        return out.reshape(B, H, C, D)
+    ps = pool_kq.shape[1]
+    hist_len = jnp.asarray(hist_len, jnp.int32)
+    # dead-block skip, XLA edition: pick the smallest ladder rung covering
+    # ceil(max(hist_len) / ps) and run the history partials at that static
+    # width. Rungs every 4 blocks bound the trace count while matching the
+    # chunk cursor stride exactly (chunks advance whole pages, C = 4 pages
+    # in the serving default), so uniform-cursor dispatches — the steady
+    # state — run zero dead blocks.
+    rungs = sorted(set(range(4, hist_blocks, 4)) | {hist_blocks})
+    hist = partial(_hist_partials, qg, pool_kq, pool_ks, pool_vq, pool_vs)
+    if len(rungs) == 1:
+        oh, sh, mxh = hist(page_table[:, :hist_blocks], hist_len)
+    else:
+        live = jnp.max(-(-jnp.minimum(hist_len, hist_blocks * ps) // ps))
+        idx = jnp.searchsorted(jnp.asarray(rungs, jnp.int32), live)
+        oh, sh, mxh = jax.lax.switch(
+            idx, [partial(hist, page_table[:, :r]) for r in rungs],
+            hist_len)
+    # flash merge of the two partial sets (history may be fully masked for
+    # rows at cursor 0: its mx stays _NEG_INF and its weight underflows to 0)
+    mx = jnp.maximum(mxc, mxh)
+    ch, cc = jnp.exp(mxh - mx), jnp.exp(mxc - mx)
+    l = sh * ch + sc * cc
+    out = (oh * ch + oc * cc) / jnp.maximum(l, 1e-30)
+    return out.reshape(B, H, C, D)
+
+
+_NEG_INF = -1e30
 
 
 def _decode_partials_xla(q, k_q, k_s, v_q, v_s, length, window=None):

@@ -1,0 +1,218 @@
+"""Fused varlen flash-prefill attention directly over the INT8 page pool.
+
+The prefill analogue of quant_attention.py's paged decode kernel
+(DESIGN.md §5/§7): one chunk of C prompt tokens per row attends over the
+row's resident history pages *and* causally within the chunk in a single
+`pallas_call` — INT8 page tiles and their scale rows stream straight into
+VMEM through the page-table index_map, dequantization is fused into the
+online-softmax inner loop, and no fp32 history tensor is ever
+materialized in HBM (the former `dequantized_prefix` + `_chunk_attention`
+path gathered and dequantized every resident page per layer per chunk).
+
+Grid (B, Hkv, NT + 1) with NT = hist_blocks (the dispatch group's static
+pow2 cursor bound): steps t < NT walk the row's history pages via
+`PrefetchScalarGridSpec` — the index_map gathers the physical page id
+from the scalar-prefetched page table, exactly like the decode kernel —
+and the final step t == NT processes the chunk's own fp K/V tile with
+causal + per-row `valid` masking. The GQA group's queries for the whole
+chunk ride as one (G*C, D) resident block (row r is query position
+r % C of head-group lane r // C), so the per-(row, kv-head) flash state
+(m, l, acc) in VMEM scratch covers every chunk query at once.
+
+Varlen ragged edge, all in SMEM scalars:
+  * per-row `hist_len` masks history positions and bounds the page walk —
+    steps past ceil(hist_len / ps) clamp to the row's last live page
+    (`_dead_clamp`, PR 2's trick), so the pipeline re-issues no DMA and
+    `pl.when` skips the compute; a row admitted at cursor 0 inside a
+    deep-history dispatch streams nothing extra.
+  * per-row `valid` masks the chunk's dispatch-padding keys; queries past
+    `valid` produce garbage the caller discards (same contract as the
+    XLA path — causality already hides padding from valid queries).
+
+History is page-aligned by construction (chunk cursors advance in page
+multiples), so there is no residual tail to merge: the kernel emits
+normalized outputs directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quant_attention import _dead_clamp
+
+_NEG_INF = -1e30
+
+
+def _update(logits, mask, v, m_scr, l_scr, acc_scr):
+    """Online-softmax accumulate of one masked (GC, bt) logit tile."""
+    logits = jnp.where(mask, logits, _NEG_INF)
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new) * mask.astype(jnp.float32)
+    alpha = jnp.exp(m_prev - m_new)
+    m_scr[...] = m_new
+    l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def _prefill_kernel(pt_ref, hl_ref, vd_ref, q_ref, kc_ref, vc_ref,
+                    kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
+                    m_scr, l_scr, acc_scr, *, page_size: int, chunk: int):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+    nt = pl.num_programs(2)          # NT history steps + 1 chunk step
+
+    @pl.when(t == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    hist_len = hl_ref[b]             # this row's resident history tokens
+    valid = vd_ref[b]                # this row's true tokens in the chunk
+
+    # -- history step: one INT8 page, dequantized in VMEM ------------------
+    @pl.when(jnp.logical_and(t < nt - 1, t * page_size < hist_len))
+    def _hist():                     # dead page: DMA clamped + no compute
+        k = kq_ref[0, :, 0, :].astype(jnp.float32) * \
+            ks_ref[0].astype(jnp.float32)        # (ps, D) * (1, D)
+        v = vq_ref[0, :, 0, :].astype(jnp.float32) * \
+            vs_ref[0].astype(jnp.float32)
+        logits = jax.lax.dot_general(            # (GC, ps)
+            q_ref[0, 0], k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        pos = t * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 1)
+        _update(logits, pos < hist_len, v, m_scr, l_scr, acc_scr)
+
+    # -- chunk step: the chunk's own fp K/V, causal + valid masked ---------
+    @pl.when(t == nt - 1)
+    def _chunk():
+        k = kc_ref[0, 0]                         # (C, D) f32
+        v = vc_ref[0, 0]
+        logits = jax.lax.dot_general(            # (GC, C)
+            q_ref[0, 0], k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        # query row r is chunk position r % C of its head-group lane
+        qpos = jax.lax.rem(
+            jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0), chunk)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        _update(logits, (kpos <= qpos) & (kpos < valid), v,
+                m_scr, l_scr, acc_scr)
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("hist_blocks", "skip_dead",
+                                             "interpret"))
+def _paged_prefill(qg, kc, vc, pool_kq, pool_ks, pool_vq, pool_vs,
+                   page_table, hist_len, valid, *, hist_blocks: int,
+                   skip_dead: bool = True, interpret: bool = True):
+    """qg (B, Hkv, G*C, D) f32 pre-scaled queries; kc/vc (B, Hkv, C, D) f32
+    chunk K/V; pool_* (P, ps, Hkv, D) int8 / (P, Hkv, D) f32; page_table
+    (B, >=max(hist_blocks, 1)) int32; hist_len/valid (B,) int32.
+    Returns normalized (B, Hkv, G*C, D) f32."""
+    B, Hkv, GC, D = qg.shape
+    C = kc.shape[2]
+    _, ps, _, _ = pool_kq.shape
+    NT = hist_blocks
+    pt = page_table[:, :max(NT, 1)]
+    if skip_dead:
+        t_idx = lambda t, ln: _dead_clamp(t, ln, ps, max(NT, 1) * ps)
+    else:
+        t_idx = lambda t, ln: jnp.minimum(t, max(NT - 1, 0))
+    # the chunk step (t == NT) revisits the previous step's page so the
+    # pipeline issues no DMA for the unused pool tiles on the final step
+    p_idx = lambda t, ln: t_idx(jnp.minimum(t, max(NT - 1, 0)), ln)
+
+    kernel = functools.partial(_prefill_kernel, page_size=ps, chunk=C)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,       # page table + hist lens + valids (SMEM)
+        grid=(B, Hkv, NT + 1),
+        in_specs=[
+            pl.BlockSpec((1, 1, GC, D),
+                         lambda b, h, t, pt, hl, vd: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, C, D),
+                         lambda b, h, t, pt, hl, vd: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, C, D),
+                         lambda b, h, t, pt, hl, vd: (b, h, 0, 0)),
+            # physical page gather: logical history block t -> pt[b, t]
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, t, pt, hl, vd:
+                         (pt[b, p_idx(t, hl[b])], 0, h, 0)),
+            pl.BlockSpec((1, 1, D),
+                         lambda b, h, t, pt, hl, vd:
+                         (pt[b, p_idx(t, hl[b])], h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, t, pt, hl, vd:
+                         (pt[b, p_idx(t, hl[b])], 0, h, 0)),
+            pl.BlockSpec((1, 1, D),
+                         lambda b, h, t, pt, hl, vd:
+                         (pt[b, p_idx(t, hl[b])], h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, GC, D),
+                               lambda b, h, t, pt, hl, vd: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((GC, 1), jnp.float32),
+            pltpu.VMEM((GC, 1), jnp.float32),
+            pltpu.VMEM((GC, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, GC, D), jnp.float32),
+        interpret=interpret,
+    )(pt.astype(jnp.int32), hist_len.astype(jnp.int32),
+      valid.astype(jnp.int32), qg, kc, vc,
+      pool_kq, pool_ks, pool_vq, pool_vs)
+
+
+def paged_attention_prefill(q, k, v, pool_kq, pool_ks, pool_vq, pool_vs,
+                            page_table, hist_len, valid=None, *,
+                            hist_blocks: int, skip_dead: bool = True,
+                            interpret: bool = True):
+    """Fused varlen chunk-prefill attention over an INT8 page pool.
+
+    q (B, H, C, D) chunk queries; k/v (B, Hkv, C, D) the chunk's own fp
+    K/V; pool_* (P, ps, Hkv, D) int8 / (P, Hkv, D) f32; page_table (B, NT)
+    int32; hist_len (B,) int32 resident history tokens per row
+    (page-aligned); valid (B,) int32 true chunk tokens per row (None = C).
+    `hist_blocks` (static) bounds the history walk — ONE pallas_call over
+    a (B, Hkv, hist_blocks + 1) grid serves the whole dispatch.
+    Returns normalized (B, H, C, D) f32; outputs at query positions past
+    `valid` are garbage the caller discards."""
+    B, H, C, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    scale = jax.lax.rsqrt(jnp.asarray(D, jnp.float32))
+    qg = (q.reshape(B, Hkv, G * C, D).astype(jnp.float32) * scale)
+    if valid is None:
+        valid = jnp.full((B,), C, jnp.int32)
+    hist_len = jnp.broadcast_to(jnp.asarray(hist_len, jnp.int32), (B,))
+    valid = jnp.broadcast_to(jnp.asarray(valid, jnp.int32), (B,))
+    out = _paged_prefill(qg, k.astype(jnp.float32), v.astype(jnp.float32),
+                         pool_kq, pool_ks, pool_vq, pool_vs, page_table,
+                         hist_len, valid, hist_blocks=hist_blocks,
+                         skip_dead=skip_dead, interpret=interpret)
+    return out.reshape(B, H, C, D)
+
+
+def prefill_dma_skip_ratio(hist_lens, page_size: int,
+                           hist_blocks: int) -> float:
+    """Fraction of history grid steps whose HBM page stream is skipped by
+    the index_map clamp across a dispatch (structural metric, mirroring
+    quant_attention.dma_skip_ratio). 0 when the dispatch has no history
+    axis (hist_blocks == 0)."""
+    import numpy as np
+    if hist_blocks == 0:
+        return 0.0
+    lens = np.minimum(np.asarray(hist_lens, np.int64),
+                      hist_blocks * page_size)
+    live = np.maximum(-(-lens // page_size), 1)
+    return float(1.0 - live.sum() / (live.size * hist_blocks))

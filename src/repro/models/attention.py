@@ -183,15 +183,17 @@ def prefill(p, x, cfg: ModelConfig, positions, cache, *, local: bool = False,
 
 
 def prefill_chunk(p, x, cfg: ModelConfig, positions, cache, *, row_mask=None,
-                  hist_blocks: int | None = None, valid=None):
+                  hist_blocks: int | None = None, valid=None,
+                  use_fused: bool = True, impl: str = "auto",
+                  oracle_hist_dtype=jnp.float32):
     """One prompt chunk under varlen chunked prefill (DESIGN.md §7).
 
     The chunk's queries attend causally within the chunk *plus* over the
-    row's already-resident prefix read back from its INT8 pages
-    (dequantized) — so a chunk computes identically whether the pages
-    before it were cache hits or were filled by this prompt's earlier
-    chunks, which is what makes hit and miss prefills bitwise-equal. The
-    chunk's K/V are then quantized into pages at the row's block cursor
+    row's already-resident prefix read straight from its INT8 pages — so a
+    chunk computes identically whether the pages before it were cache hits
+    or were filled by this prompt's earlier chunks, which is what makes
+    hit and miss prefills bitwise-equal. The chunk's K/V are then
+    quantized into pages at the row's block cursor
     (`PagedQuantizedKVCache.prefill_at`).
 
     `x` (B, C, d) with C a multiple of page_size — the *dispatch width*;
@@ -205,19 +207,33 @@ def prefill_chunk(p, x, cfg: ModelConfig, positions, cache, *, row_mask=None,
     positions[:, 0] is each row's resident-history length (page-aligned by
     construction). `row_mask` (B,) bool as in `prefill`. `hist_blocks`
     (static) bounds the history read: only that many leading blocks are
-    gathered/dequantized — the scheduler passes the dispatch group's cursor
-    bound so a chunk never materializes max_len; None reads the full
-    table, 0 skips history entirely (first chunk)."""
+    walked — the scheduler passes the dispatch group's cursor bound so a
+    chunk never materializes max_len; None reads the full table, 0 skips
+    history entirely (first chunk).
+
+    `use_fused=True` (the default) routes attention through
+    `ops.paged_attention_prefill` — the fused varlen flash-prefill that
+    consumes INT8 pages directly (Pallas kernel on TPU, split flash-merge
+    twin under XLA). `use_fused=False` keeps the original
+    `dequantized_prefix` + `_chunk_attention` concat-softmax path, pinned
+    as the parity oracle; `oracle_hist_dtype` picks the dtype the oracle
+    dequantizes history into (bf16 halves the gathered buffer)."""
     if not isinstance(cache, PG.PagedQuantizedKVCache):
         raise ValueError("chunked prefill requires the paged cache")
     q, k, v = _project_qkv(p, x, cfg, positions)
     hist_len = positions[:, 0].astype(jnp.int32)            # (B,)
     nb = cache.max_blocks if hist_blocks is None else \
         min(hist_blocks, cache.max_blocks)
-    hk = hv = None
-    if nb:
-        hk, hv = cache.dequantized_prefix(nb)       # (B, Hkv, nb*ps, D)
-    out = _chunk_attention(q, k, v, hk, hv, hist_len)
+    if use_fused:
+        out = ops.paged_attention_prefill(
+            q, k, v, cache.pool.k_q, cache.pool.k_s, cache.pool.v_q,
+            cache.pool.v_s, cache.page_table, hist_len, valid,
+            hist_blocks=nb, impl=impl)
+    else:
+        hk = hv = None
+        if nb:
+            hk, hv = cache.dequantized_prefix(nb, oracle_hist_dtype)
+        out = _chunk_attention(q, k, v, hk, hv, hist_len)
     cache = cache.prefill_at(k.astype(jnp.float32), v.astype(jnp.float32),
                              hist_len // cache.page_size, row_mask=row_mask,
                              valid=valid)
@@ -227,11 +243,18 @@ def prefill_chunk(p, x, cfg: ModelConfig, positions, cache, *, row_mask=None,
 def _chunk_attention(q, k, v, hk, hv, hist_len):
     """Exact fp attention of chunk queries over (resident history ‖ chunk).
 
+    PARITY ORACLE for the fused prefill path: this is the retired serving
+    hot path (one softmax over a gathered, dequantized history concat),
+    kept deliberately naive so `ops.paged_attention_prefill` has an
+    independent reference to match — tests compare the two, production
+    traffic takes the fused path (`prefill_chunk(use_fused=True)`).
+
     q (B, H, C, hd); k/v (B, Hkv, C, hd) the chunk's own keys; hk/hv
     (B, Hkv, HT, hd) the dequantized history view (None when the dispatch
-    has no resident history); hist_len (B,) tokens of real history per
-    row, <= HT. One softmax over the concatenated key axis — history
-    masked by hist_len, chunk masked causally."""
+    has no resident history; any fp dtype — logits accumulate in f32);
+    hist_len (B,) tokens of real history per row, <= HT. One softmax over
+    the concatenated key axis — history masked by hist_len, chunk masked
+    causally."""
     B, H, C, hd = q.shape
     Hkv = k.shape[1]
     G = H // Hkv

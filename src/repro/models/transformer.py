@@ -257,7 +257,8 @@ def _round_block(n, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def _block_serve(p, x, kind, cfg, positions, cache, mode: str,
-                 row_mask=None, hist_blocks=None, valid=None):
+                 row_mask=None, hist_blocks=None, valid=None,
+                 use_fused=True):
     h = _norm(cfg, p["norm1"], x)
     if kind in ("attn", "local_attn", "moe"):
         if mode == "prefill":
@@ -268,7 +269,8 @@ def _block_serve(p, x, kind, cfg, positions, cache, mode: str,
             h, cache = attention.prefill_chunk(p["attn"], h, cfg, positions,
                                                cache, row_mask=row_mask,
                                                hist_blocks=hist_blocks,
-                                               valid=valid)
+                                               valid=valid,
+                                               use_fused=use_fused)
         else:
             h, cache = attention.decode(p["attn"], h, cfg, positions, cache,
                                         local=kind == "local_attn",
@@ -298,7 +300,7 @@ def _block_serve(p, x, kind, cfg, positions, cache, mode: str,
 
 
 def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str,
-           row_mask=None, hist_blocks=None, valid=None):
+           row_mask=None, hist_blocks=None, valid=None, use_fused=True):
     x, positions = _embed(params, tok, cfg, positions)
     period, n_groups, tail = _pattern_layout(cfg)
 
@@ -308,7 +310,7 @@ def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str,
         for i, kind in enumerate(cfg.block_pattern):
             x, c = _block_serve(gparams[f"p{i}"], x, kind, cfg, positions,
                                 caches[f"p{i}"], mode, row_mask, hist_blocks,
-                                valid)
+                                valid, use_fused)
             new_caches[f"p{i}"] = c
         return x, new_caches
 
@@ -322,7 +324,7 @@ def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str,
     for j, bp in enumerate(params["tail"]):
         kind = cfg.block_kind(n_groups * period + j)
         x, c = _block_serve(bp, x, kind, cfg, positions, state["tail"][j],
-                            mode, row_mask, hist_blocks, valid)
+                            mode, row_mask, hist_blocks, valid, use_fused)
         new_state["tail"].append(c)
     logits = _head(params, x, cfg)
     return logits, new_state
@@ -341,7 +343,8 @@ def prefill(params, tokens, cfg: ModelConfig, state, *, positions=None,
 
 
 def prefill_chunk(params, tokens, cfg: ModelConfig, state, *, start,
-                  row_mask=None, hist_blocks=None, valid=None):
+                  row_mask=None, hist_blocks=None, valid=None,
+                  use_fused=True):
     """One varlen chunked-prefill step (DESIGN.md §7): run a prompt chunk
     whose queries attend over the rows' already-resident INT8 pages plus
     causally within the chunk, and quantize its K/V into pages at each
@@ -357,15 +360,17 @@ def prefill_chunk(params, tokens, cfg: ModelConfig, state, *, start,
     conditions on — rather than column C-1. `row_mask` (B,) bool restricts
     cache writes as in `prefill`; unmasked rows' logits are garbage and
     must be ignored. `hist_blocks` (static int) bounds the per-layer
-    history gather to the dispatch group's cursor — see
-    `attention.prefill_chunk`. Returns (last-valid-position logits (B, Vp),
-    new state). Paged caches only — the scheduler's chunked admission is
-    the caller (serving/scheduler.py)."""
+    history walk to the dispatch group's cursor — see
+    `attention.prefill_chunk`. `use_fused` (static bool) picks the fused
+    paged-attention path (default) vs the dequantize-gather oracle.
+    Returns (last-valid-position logits (B, Vp), new state). Paged caches
+    only — the scheduler's chunked admission is the caller
+    (serving/scheduler.py)."""
     C = tokens.shape[1]
     positions = (start[:, None].astype(jnp.int32) +
                  jnp.arange(C, dtype=jnp.int32)[None])
     logits, state = _serve(params, tokens, cfg, state, positions, "chunk",
-                           row_mask, hist_blocks, valid)
+                           row_mask, hist_blocks, valid, use_fused)
     if valid is None:
         return logits[:, -1], state
     last = jnp.maximum(valid.astype(jnp.int32) - 1, 0)       # (B,)

@@ -71,7 +71,8 @@ def make_serve_fns(cfg: ModelConfig, *, max_len: int, paged: bool = False,
     return init_state, prefill_fn, decode_fn
 
 
-def make_chunk_prefill_fn(cfg: ModelConfig, *, hist_blocks: int | None = None):
+def make_chunk_prefill_fn(cfg: ModelConfig, *, hist_blocks: int | None = None,
+                          use_fused: bool = True):
     """Chunk-prefill step for varlen chunked admission (DESIGN.md §7),
     closed over cfg: ``chunk_prefill(params, tokens, state, start, valid,
     row_mask)`` with tokens (B, C) int32 (C a page multiple — the dispatch
@@ -79,8 +80,11 @@ def make_chunk_prefill_fn(cfg: ModelConfig, *, hist_blocks: int | None = None):
     token counts within the chunk (final partial chunks dispatch with
     valid < C; logits are read at each row's last valid position), row_mask
     (B,) bool — returns (last-valid-position logits (B, Vp), new state).
-    ``hist_blocks`` statically bounds each layer's history gather (the
+    ``hist_blocks`` statically bounds each layer's history walk (the
     scheduler keeps one jitted closure per bound, a power-of-two set).
+    ``use_fused`` picks fused paged prefill attention vs the
+    dequantize-gather oracle (`attention.prefill_chunk`); it is part of
+    the closure identity, so the scheduler's trace cache must key on it.
     Paged decoder-only stacks only."""
     if cfg.family == "encdec":
         raise ValueError("chunked prefill is decoder-only")
@@ -98,7 +102,8 @@ def make_chunk_prefill_fn(cfg: ModelConfig, *, hist_blocks: int | None = None):
         return transformer.prefill_chunk(params, tokens, cfg, state,
                                          start=start, valid=valid,
                                          row_mask=row_mask,
-                                         hist_blocks=hist_blocks)
+                                         hist_blocks=hist_blocks,
+                                         use_fused=use_fused)
 
     return chunk_prefill
 

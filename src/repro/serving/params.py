@@ -144,7 +144,12 @@ class EngineConfig:
     `max(len(stop))`-token suffix per appended token (O(n) generation),
     which requires every token to render to AT LEAST ONE character — a
     detokenizer with zero-width tokens (e.g. control tokens mapped to "")
-    could push a match outside the window and must not be used here."""
+    could push a match outside the window and must not be used here.
+    `use_fused_prefill` routes chunk-prefill attention through the fused
+    paged INT8 flash kernel (default); False falls back to the
+    dequantize-gather oracle path — parity-equal, slower, kept for
+    debugging and A/B benchmarks. Read per dispatch, so flipping it on a
+    live scheduler recompiles rather than serving a stale trace."""
     batch: int = 4
     max_len: int = 128
     eos_id: int | None = None
@@ -154,3 +159,4 @@ class EngineConfig:
     prefix_cache: bool = False
     prefill_chunk: int | None = None
     detokenize: Callable[[Sequence[int]], str] | None = None
+    use_fused_prefill: bool = True

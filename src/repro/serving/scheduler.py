@@ -233,8 +233,9 @@ class ContinuousBatcher:
             pc = prefill_chunk or 4 * self.page_size
             self.prefill_chunk_tokens = -(-pc // self.page_size) * \
                 self.page_size
-            # one jitted chunk fn per static history bound (pow2 set)
-            self._chunk_prefill_fns: dict[int, Any] = {}
+            # one jitted chunk fn per (static history bound, fused-toggle);
+            # the bound set is pow2, the toggle read live from self.config
+            self._chunk_prefill_fns: dict[tuple[int, bool], Any] = {}
             # req.uid -> (toks, chain): computed once per request, not once
             # per tick while admission is blocked on pool pressure. Keyed by
             # uid, NOT id(request): CPython reuses a collected object's id,
@@ -802,18 +803,31 @@ class ContinuousBatcher:
 
     def _chunk_prefill_fn(self, max_start: int):
         """Jitted chunk fn for a dispatch whose deepest cursor is
-        ``max_start`` tokens: the static history-gather bound is the cursor
+        ``max_start`` tokens: the static history-walk bound is the cursor
         in blocks rounded up to a power of two (compile set stays
         O(log max_blocks); masking trims the over-approximation), so a
-        chunk never materializes max_len of history (DESIGN.md §7)."""
+        chunk never materializes max_len of history (DESIGN.md §7).
+
+        Keyed on (bound, use_fused_prefill) — the toggle is read from the
+        live config at every dispatch, so flipping it mid-process compiles
+        the other attention path instead of serving a stale trace."""
         blocks = -(-max_start // self.page_size)
         hb = 0 if blocks == 0 else min(1 << (blocks - 1).bit_length(),
                                        self.max_blocks)
-        fn = self._chunk_prefill_fns.get(hb)
+        fused = bool(getattr(self.config, "use_fused_prefill", True))
+        key = (hb, fused)
+        fn = self._chunk_prefill_fns.get(key)
         if fn is None:
             from repro.serving.engine import make_chunk_prefill_fn
-            fn = self._chunk_prefill_fns[hb] = jax.jit(
-                make_chunk_prefill_fn(self.cfg, hist_blocks=hb))
+            # donate the incoming state: the caller immediately replaces
+            # self.state with the result, and donation lets XLA update the
+            # page pool in place instead of copying every pool buffer per
+            # chunk dispatch (the scatter in prefill_at would otherwise
+            # clone ~MBs of int8 pages each tick)
+            fn = self._chunk_prefill_fns[key] = jax.jit(
+                make_chunk_prefill_fn(self.cfg, hist_blocks=hb,
+                                      use_fused=fused),
+                donate_argnums=(2,))
         return fn
 
     def _chunk_width(self, rem: int) -> int:
