@@ -13,6 +13,10 @@ regresses by more than the threshold:
   * the 90%-shared-mix ``ttft_speedup`` (higher is better) from
     BENCH_prefix.json, plus the fused-vs-oracle ``prefill_fused_speedup``
     on the rows that carry the fused-prefill arm (0%- and 90%-shared)
+  * the 2x-oversubscription ``goodput_frac`` and ``resume_fast_frac``
+    (both higher is better) from BENCH_overload.json — pure same-run token
+    and resume counters over a deterministic tick-replayed trace, so they
+    are hardware-independent outright (DESIGN.md §8)
 
 This turns the CI bench steps from smoke tests into a regression gate: a
 PR that silently halves decode throughput or loses the prefix-cache TTFT
@@ -45,7 +49,8 @@ import subprocess
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-ARTIFACTS = ("BENCH_decode.json", "BENCH_prefix.json")
+ARTIFACTS = ("BENCH_decode.json", "BENCH_prefix.json",
+             "BENCH_overload.json")
 DEFAULT_THRESHOLD = 0.15
 
 
@@ -115,13 +120,38 @@ def prefix_metrics(data: dict) -> dict[str, tuple[float, bool]]:
     return out
 
 
-def collect(decode: dict | None, prefix: dict | None
-            ) -> dict[str, tuple[float, bool]]:
+def overload_metrics(data: dict) -> dict[str, tuple[float, bool]]:
+    """The 2x-oversubscription overload ratios (DESIGN.md §8):
+    ``goodput_frac`` (useful tokens / tokens computed — the thrash tax) and
+    ``resume_fast_frac`` (bitwise page-adopt resumes / all resumes — what
+    the prefix cache buys preemption). Both are counter ratios over a
+    deterministic tick-replayed trace: scheduling depends only on tick
+    counts and seeded lifetimes, never wall time, so these do not drift
+    with runner hardware at all. The 4x row is informational — at that
+    pressure admission throttling (queueing) dominates and the counters
+    measure the trace more than the code."""
+    out: dict[str, tuple[float, bool]] = {}
+    for row in data.get("rows", []):
+        if row.get("config") != "oversub2x":
+            continue
+        if "goodput_frac" in row:
+            out["overload.oversub2x.goodput_frac"] = (
+                float(row["goodput_frac"]), True)
+        if "resume_fast_frac" in row:
+            out["overload.oversub2x.resume_fast_frac"] = (
+                float(row["resume_fast_frac"]), True)
+    return out
+
+
+def collect(decode: dict | None, prefix: dict | None,
+            overload: dict | None = None) -> dict[str, tuple[float, bool]]:
     m: dict[str, tuple[float, bool]] = {}
     if decode:
         m.update(decode_metrics(decode))
     if prefix:
         m.update(prefix_metrics(prefix))
+    if overload:
+        m.update(overload_metrics(overload))
     return m
 
 
@@ -203,9 +233,11 @@ def main(argv=None) -> int:
         return 1
 
     baseline = collect(base_raw["BENCH_decode.json"],
-                       base_raw["BENCH_prefix.json"])
+                       base_raw["BENCH_prefix.json"],
+                       base_raw["BENCH_overload.json"])
     current = collect(cur_raw["BENCH_decode.json"],
-                      cur_raw["BENCH_prefix.json"])
+                      cur_raw["BENCH_prefix.json"],
+                      cur_raw["BENCH_overload.json"])
     bad = compare(baseline, current, args.threshold)
     for name in sorted(baseline):
         if name in current:

@@ -1,0 +1,206 @@
+"""Overload benchmark: the scheduler under page oversubscription.
+
+The paper's INT8 compression buys pool capacity; this arm measures what the
+scheduler does when demand exceeds that capacity anyway (DESIGN.md §8).
+One replayed arrival trace (seeded, mixed priorities and decode budgets)
+drives the paged scheduler against three pool sizes — the full worst-case
+working set (1x), half of it (2x oversubscribed) and a quarter (4x) — with
+optimistic admission (`watermark`) and preemption-by-recompute on. The
+1x arm is the control: same trace, zero pressure, so every degradation in
+the 2x/4x rows is the overload machinery, not the trace.
+
+Reported per oversubscription level:
+
+  * p50/p99 TTFT (ms, scheduler's own submit/first-token stamps) — the
+    bounded-tail-latency claim: preemption must defer work, not strand it
+  * preemption counters: preemptions, fast (bitwise page-adopt) vs
+    recompute resumes, and ``resume_fast_frac`` — the prefix cache is what
+    makes preemption cheap, so a high fast fraction is the structural win
+  * ``goodput_frac``: useful tokens (prompt + kept generated tokens of
+    completed requests) over total tokens computed (prefill + decode,
+    recompute and discarded chunk tails included) — the throughput tax of
+    thrashing; hardware-independent (pure token counters)
+  * deadlocks: StallError / PoolExhaustedError count — must be zero; the
+    benchmark raises if not (a deadlocked overload run must fail CI, not
+    upload a quietly broken artifact)
+
+``goodput_frac`` and ``resume_fast_frac`` at 2x are the gated ratios
+(benchmarks/check_regression.py): both are same-run counter ratios, so
+runner hardware cancels entirely. ``--json`` writes BENCH_overload.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.models import transformer as T
+from repro.serving import (ContinuousBatcher, EngineConfig,
+                           PoolExhaustedError, Request, SamplingParams,
+                           StallError)
+from repro.serving.scheduler import pages_for_request
+
+OVERSUB = [1, 2, 4]
+N_REQUESTS = 16
+BATCH = 4
+PAGE = 8                 # quant block size below
+PROMPT_LENS = [24, 40, 32, 48]       # cycled; mixed mod-PAGE residues
+MAX_NEWS = [8, 32, 16, 24]           # early-stoppers + long decodes mixed
+PRIORITIES = [1, 0, 0, 0]            # every 4th request is latency-tier
+WATERMARK = 1
+CHUNK = 4
+MAX_LEN = max(PROMPT_LENS) + max(MAX_NEWS)
+
+
+def _bench_config():
+    """Small dense config: the benchmark measures scheduler decisions
+    (thousands of ticks under churn), not matmul throughput — compute just
+    has to be non-trivial enough that TTFT ordering is real."""
+    from repro.configs.base import ModelConfig
+    from repro.core.quantization import QuantConfig
+    return ModelConfig(
+        name="overload_bench", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab=256, head_dim=32,
+        dtype="float32",
+        quant=QuantConfig(granularity="per_block", block_size=PAGE),
+        source="benchmark")
+
+
+def _trace(seed=0):
+    """The replayed arrival trace: a burst — every request arrives within
+    the first few ticks (0-2 tick seeded jitter), so the queue's worst-case
+    demand lands on the pool at once. Scheduling decisions depend only on
+    tick counts and the seeded trace, never wall time, so every counter in
+    the report is machine-independent (gate-safe)."""
+    rng = np.random.RandomState(seed)
+    arrivals, t = [], 0
+    for i in range(N_REQUESTS):
+        t += int(rng.randint(0, 2))
+        arrivals.append(t)
+    prompts = [rng.randint(0, 250, (PROMPT_LENS[i % 4],)).astype(np.int32)
+               for i in range(N_REQUESTS)]
+    return arrivals, prompts
+
+
+def _drive(params, cfg, n_pages, arrivals, prompts):
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=BATCH, max_len=MAX_LEN, paged=True, n_pages=n_pages,
+        chunk=CHUNK, prefix_cache=True, watermark=WATERMARK,
+        aging_ticks=50, stall_ticks=2000))
+    reqs = [Request(uid=i, prompt=p, sampling=SamplingParams.greedy(
+                max_new_tokens=MAX_NEWS[i % 4], priority=PRIORITIES[i % 4]))
+            for i, p in enumerate(prompts)]
+    pending = list(range(N_REQUESTS))
+    done, deadlocks, tick = [], 0, 0
+    t0 = time.perf_counter()
+    for tick in range(1, 50_000):
+        while pending and arrivals[pending[0]] <= tick:
+            b.submit(reqs[pending.pop(0)])
+        try:
+            done.extend(b.step())
+        except (StallError, PoolExhaustedError):
+            deadlocks += 1
+            break
+        if not pending and not b.queue and all(r is None for r in b.rows):
+            break
+    wall = time.perf_counter() - t0
+    if deadlocks:
+        raise RuntimeError(
+            f"overload bench deadlocked at {n_pages} pages — the 2x/4x "
+            f"oversubscription arms must drain (DESIGN.md §8)")
+    rep = b.pool_report()
+    ttfts = np.asarray([r.first_token_time - r.submit_time for r in reqs])
+    useful = sum(len(r.prompt) + len(r.generated) for r in done)
+    computed = rep["prefill_tokens_computed"] + rep["decode_tokens_computed"]
+    resumes = rep["preempt_fast_resumes"] + rep["preempt_recompute_resumes"]
+    return {
+        "completed": len(done),
+        "ticks": tick,
+        "wall_s": wall,
+        "ttft_ms_p50": float(np.percentile(ttfts, 50)) * 1e3,
+        "ttft_ms_p99": float(np.percentile(ttfts, 99)) * 1e3,
+        "preemptions": rep["preemptions"],
+        "preempt_rate": rep["preemptions"] / N_REQUESTS,
+        "preempt_fast_resumes": rep["preempt_fast_resumes"],
+        "preempt_recompute_resumes": rep["preempt_recompute_resumes"],
+        "resume_fast_frac": (rep["preempt_fast_resumes"] / resumes
+                             if resumes else 1.0),
+        "decode_stall_ticks": rep["decode_stall_ticks"],
+        "goodput_frac": useful / max(computed, 1),
+        "deadlocks": deadlocks,
+    }
+
+
+def _warmup(params, cfg):
+    """Populate the jit caches (prefill widths, decode-scan lengths) on a
+    throwaway batcher so the measured arms' TTFTs are scheduling, not
+    compilation."""
+    rng = np.random.RandomState(999)
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=BATCH, max_len=MAX_LEN, paged=True,
+        n_pages=BATCH * (MAX_LEN // PAGE) + 1, chunk=CHUNK,
+        prefix_cache=True, watermark=WATERMARK))
+    for i in range(BATCH):
+        b.submit(Request(
+            uid=i, prompt=rng.randint(250, 255,
+                                      (PROMPT_LENS[i % 4],)).astype(np.int32),
+            sampling=SamplingParams.greedy(max_new_tokens=MAX_NEWS[i % 4])))
+    b.run_to_completion(max_ticks=5000)
+
+
+def run():
+    cfg = _bench_config()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    _warmup(params, cfg)
+    arrivals, prompts = _trace()
+    # worst-case concurrent working set: BATCH rows of the largest request
+    demand = BATCH * pages_for_request(max(PROMPT_LENS), max(MAX_NEWS), PAGE)
+    rows = []
+    for ov in OVERSUB:
+        n_pages = max(demand // ov, pages_for_request(
+            max(PROMPT_LENS), max(MAX_NEWS), PAGE)) + 1
+        r = _drive(params, cfg, n_pages, arrivals, prompts)
+        r.update({"bench": "overload", "config": f"oversub{ov}x",
+                  "oversubscription": ov, "n_pages": n_pages - 1,
+                  "requests": N_REQUESTS, "batch": BATCH,
+                  "watermark": WATERMARK, "chunk": CHUNK})
+        assert r["completed"] == N_REQUESTS, \
+            f"{r['config']}: {r['completed']}/{N_REQUESTS} completed"
+        rows.append(r)
+    base = rows[0]
+    assert base["preemptions"] == 0 or base["oversubscription"] > 1
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_overload.json")
+    ap.add_argument("--json-path", default="BENCH_overload.json")
+    args = ap.parse_args(argv if argv is not None else [])
+    rows = run()
+    for r in rows:
+        # leading CSV field is microseconds (run.py `name,us` convention)
+        print(f"{r['bench']}_{r['config']},"
+              f"{r['ttft_ms_p99']*1e3:.0f},"
+              f"ttft_p50={r['ttft_ms_p50']:.1f}ms "
+              f"ttft_p99={r['ttft_ms_p99']:.1f}ms "
+              f"preempts={r['preemptions']} "
+              f"fast={r['preempt_fast_resumes']} "
+              f"recompute={r['preempt_recompute_resumes']} "
+              f"goodput={r['goodput_frac']:.2f} "
+              f"stalls={r['decode_stall_ticks']} "
+              f"ticks={r['ticks']} deadlocks={r['deadlocks']}")
+    if args.json:
+        with open(args.json_path, "w") as f:
+            json.dump({"suite": "overload", "rows": rows}, f, indent=2)
+        print(f"# wrote {args.json_path}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -8,8 +8,8 @@ import sys
 
 from benchmarks import (attention_error, bitwidth_ablation, e2e_decode,
                         error_bench, kernel_bench, kernel_variants,
-                        memory_table, paged_vs_contiguous, perplexity_delta,
-                        prefix_cache)
+                        memory_table, overload, paged_vs_contiguous,
+                        perplexity_delta, prefix_cache)
 
 SUITES = [
     ("table1_memory", memory_table),
@@ -22,6 +22,7 @@ SUITES = [
     ("beyond_paper_perplexity_delta", perplexity_delta),
     ("beyond_paper_paged_vs_contiguous", paged_vs_contiguous),
     ("beyond_paper_prefix_cache", prefix_cache),
+    ("beyond_paper_overload", overload),
 ]
 
 

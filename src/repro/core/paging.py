@@ -94,6 +94,56 @@ def chain_hashes(tokens, page_size: int, parent: bytes | None = None):
     return out
 
 
+class PoolFaultInjector:
+    """Deterministic seeded fault injector for `HostPageAllocator`
+    (DESIGN.md §8).
+
+    Drives the scheduler's overload-recovery paths from tests and
+    benchmarks instead of waiting for production pressure. Three knobs,
+    all deterministic given the seed and the tick sequence:
+
+      * ``p_alloc_fail`` — per-tick probability that every admission /
+        growth gate reports zero available pages for that tick (a
+        transient allocation failure; the draw happens once per
+        `HostPageAllocator.tick`, never per query, so repeated gate
+        consults within a tick agree).
+      * ``hold_pages`` — forced pressure: this many pages are virtually
+        withheld from the gates (`available` / `available_after_adopt`).
+        Mutable at any time, so tests can squeeze the pool mid-run and
+        release it later.
+      * ``reclaim_delay`` — delayed reclaim: a page whose refcount hits 0
+        is parked for this many ticks before it reaches the LRU / free
+        list, modelling deferred host-side cleanup.
+
+    Faults apply to the *gates* only; `alloc` and copy-on-write check
+    physical capacity, preserving the invariant that admission never
+    fails after a gate has passed (DESIGN.md §7)."""
+
+    def __init__(self, seed: int = 0, *, p_alloc_fail: float = 0.0,
+                 hold_pages: int = 0, reclaim_delay: int = 0):
+        if not 0.0 <= p_alloc_fail <= 1.0:
+            raise ValueError(f"p_alloc_fail={p_alloc_fail} not in [0, 1]")
+        if hold_pages < 0 or reclaim_delay < 0:
+            raise ValueError("hold_pages / reclaim_delay must be >= 0")
+        self._rng = np.random.RandomState(seed)
+        self.p_alloc_fail = p_alloc_fail
+        self.hold_pages = hold_pages
+        self.reclaim_delay = reclaim_delay
+        self.blocked = False        # is the current tick's gate blocked?
+        # counters surfaced via ContinuousBatcher.pool_report
+        self.alloc_fault_ticks = 0  # ticks whose gates reported 0 pages
+        self.delayed_releases = 0   # pages that took the deferred path
+
+    def tick(self) -> None:
+        """Advance the injector clock one scheduler tick: draw (seeded)
+        whether this tick's gates are blocked. Called by
+        `HostPageAllocator.tick` (DESIGN.md §8)."""
+        self.blocked = (self.p_alloc_fail > 0.0
+                        and bool(self._rng.random_sample() < self.p_alloc_fail))
+        if self.blocked:
+            self.alloc_fault_ticks += 1
+
+
 class HostPageAllocator:
     """Host-authoritative page allocator with optional prefix caching
     (DESIGN.md §7).
@@ -115,16 +165,20 @@ class HostPageAllocator:
     All state is plain Python (no jax); the scheduler mirrors it into the
     device `PagePool` pytree between steps (serving/scheduler.py)."""
 
-    def __init__(self, n_pages: int, *, prefix_cache: bool = False):
+    def __init__(self, n_pages: int, *, prefix_cache: bool = False,
+                 injector: PoolFaultInjector | None = None):
         if n_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the sentinel)")
         self.n_pages = n_pages
         self.prefix_cache = prefix_cache
+        self.injector = injector
         self.free: list[int] = list(range(1, n_pages))
         self.ref: dict[int, int] = {}
         self.index: dict[bytes, int] = {}
         self.hash_of: dict[int, bytes] = {}
         self.lru: OrderedDict[int, None] = OrderedDict()
+        self.deferred: dict[int, int] = {}   # page -> tick it becomes free
+        self._tick = 0
         # counters surfaced via ContinuousBatcher.pool_report / benchmarks
         self.hits = 0           # pages resolved from the index
         self.misses = 0         # prompt pages that had to be computed
@@ -144,26 +198,71 @@ class HostPageAllocator:
         return len(self.lru)
 
     @property
-    def available(self) -> int:
-        """Pages an admission may claim: free now + evictable via reclaim."""
+    def _physical(self) -> int:
+        """Physically allocatable pages, ignoring injected faults. `alloc`
+        and copy-on-write check this, so injection can starve the gates
+        without ever making an already-gated allocation raise."""
         return len(self.free) + len(self.lru)
+
+    @property
+    def available(self) -> int:
+        """Pages an admission may claim: free now + evictable via reclaim.
+        An attached `PoolFaultInjector` (DESIGN.md §8) can depress this —
+        a blocked tick reports 0, forced pressure withholds ``hold_pages``
+        — which is how tests drive the preemption/recovery paths."""
+        inj = self.injector
+        if inj is not None:
+            if inj.blocked:
+                return 0
+            return max(0, self._physical - inj.hold_pages)
+        return self._physical
 
     def available_after_adopt(self, chain) -> int:
         """Pages allocatable once the digests in ``chain`` are adopted.
         Adopted pages that currently sit on the LRU stop being evictable,
         so gating an admission on plain `available` overcounts by exactly
         those — adopt-then-alloc could raise mid-admission otherwise
-        (admission must never fail after a request is popped)."""
+        (admission must never fail after a request is popped). Injected
+        faults (DESIGN.md §8) depress this exactly like `available`."""
         on_lru = sum(1 for h in chain if self.index.get(h) in self.lru)
-        return len(self.free) + len(self.lru) - on_lru
+        inj = self.injector
+        if inj is not None:
+            if inj.blocked:
+                return 0
+            return max(0, self._physical - on_lru - inj.hold_pages)
+        return self._physical - on_lru
+
+    def tick(self) -> None:
+        """Advance the allocator one scheduler tick: roll the fault
+        injector's per-tick draw and return deferred-reclaim pages whose
+        delay has elapsed to the LRU / free list (DESIGN.md §8). A no-op
+        when no injector is attached."""
+        if self.injector is None:
+            return
+        self._tick += 1
+        self.injector.tick()
+        due = [p for p, t in self.deferred.items() if t <= self._tick]
+        for p in due:
+            del self.deferred[p]
+            self._dispose(p)
+
+    def _dispose(self, page: int) -> None:
+        """Final disposition of a refcount-0 page: LRU if still indexed
+        (hittable, evictable under pressure), else the free list."""
+        if page in self.hash_of:
+            self.lru[page] = None             # most-recently-used end
+        else:
+            self.free.append(page)
 
     # -- allocation --------------------------------------------------------
     def alloc(self, n: int) -> list[int]:
         """Claim ``n`` pages (refcount 1 each). Free pages first; then the
         LRU cache is reclaimed oldest-first, un-indexing each victim. Raises
-        if ``n > self.available`` — admission must gate on `available`."""
-        if n > self.available:
-            raise ValueError(f"alloc({n}) exceeds available={self.available}")
+        if ``n`` exceeds physical capacity — admission must gate on
+        `available` (which injected faults may depress below physical;
+        gated callers therefore never trip this, DESIGN.md §8)."""
+        if n > self._physical:
+            raise ValueError(f"alloc({n}) exceeds available={self._physical}")
         ids = [self.free.pop() for _ in range(min(n, len(self.free)))]
         while len(ids) < n:                    # reclaim cached pages, LRU
             page, _ = self.lru.popitem(last=False)
@@ -183,8 +282,12 @@ class HostPageAllocator:
     def release(self, pages) -> None:
         """Drop one reference per page. A count reaching 0 sends the page to
         the LRU if it is indexed (still hittable, evictable under pressure)
-        or back to the free list otherwise. A count below 0 is a refcounting
-        bug and raises."""
+        or back to the free list otherwise — unless a fault injector
+        imposes delayed reclaim, in which case the page parks in
+        ``deferred`` until `tick` releases it (DESIGN.md §8). A count below
+        0 is a refcounting bug and raises."""
+        inj = self.injector
+        delay = inj.reclaim_delay if inj is not None else 0
         for p in pages:
             c = self.ref.get(p, 0) - 1
             if c < 0:
@@ -193,10 +296,11 @@ class HostPageAllocator:
                 self.ref[p] = c
                 continue
             del self.ref[p]
-            if p in self.hash_of:
-                self.lru[p] = None            # most-recently-used end
+            if delay:
+                self.deferred[p] = self._tick + delay
+                inj.delayed_releases += 1
             else:
-                self.free.append(p)
+                self._dispose(p)
 
     # -- prefix cache ------------------------------------------------------
     def match(self, chain) -> int:
@@ -220,6 +324,9 @@ class HostPageAllocator:
             p = self.index[h]
             if p in self.lru:
                 del self.lru[p]
+                self.ref[p] = 1
+            elif p in self.deferred:          # revive a delayed-reclaim page
+                del self.deferred[p]
                 self.ref[p] = 1
             else:
                 self.ref[p] += 1
@@ -256,7 +363,7 @@ class HostPageAllocator:
         the entire page from the row's fp residual (DESIGN.md §7)."""
         if self.ref.get(page, 0) <= 1 and page not in self.hash_of:
             return None
-        if not self.available:
+        if not self._physical:
             # admission budgets pages_for_request() exactly; a CoW page is
             # extra. Only fork_row creates flush-shared pages, so forking
             # callers must leave headroom (one page per diverging fork).

@@ -45,6 +45,22 @@ def main(argv=None):
                          "long prompts interleave with decode ticks and "
                          "the final partial chunk carries a per-row valid "
                          "length (implies --paged)")
+    ap.add_argument("--watermark", type=int, default=None,
+                    help="optimistic admission: reserve only the prompt's "
+                         "pages plus this many pages of decode headroom "
+                         "instead of worst-case prompt+max_new; decode "
+                         "grows reservations page by page and preempts "
+                         "the lowest-priority victim under pool pressure "
+                         "(implies --paged, DESIGN.md §8)")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="static priority for every even-numbered request "
+                         "(odd requests stay at 0): higher = admitted "
+                         "first, preempted last — exercises the overload "
+                         "ordering end to end (DESIGN.md §8)")
+    ap.add_argument("--aging-ticks", type=int, default=0,
+                    help="anti-starvation aging: a queued request gains +1 "
+                         "effective priority per this many ticks waited "
+                         "(0 = off, DESIGN.md §8)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = exact greedy argmax, "
                          "the default). Sampling runs on-device inside "
@@ -63,7 +79,7 @@ def main(argv=None):
                          "tokenizer configured, token id T renders as "
                          "'<T>'")
     args = ap.parse_args(argv)
-    if args.prefix_cache or args.prefill_chunk:
+    if args.prefix_cache or args.prefill_chunk or args.watermark is not None:
         args.paged = True
 
     import jax
@@ -84,7 +100,8 @@ def main(argv=None):
     eng = LLMEngine(params, cfg, EngineConfig(
         batch=args.batch, max_len=args.max_len, paged=args.paged,
         n_pages=args.pages, chunk=args.chunk,
-        prefix_cache=args.prefix_cache, prefill_chunk=args.prefill_chunk))
+        prefix_cache=args.prefix_cache, prefill_chunk=args.prefill_chunk,
+        watermark=args.watermark, aging_ticks=args.aging_ticks))
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab,
                            (args.prompt_len,)).astype(np.int32)
@@ -93,7 +110,8 @@ def main(argv=None):
     sps = [SamplingParams(
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         seed=None if args.seed is None else args.seed + i,
-        stop=stop, max_new_tokens=args.max_new)
+        stop=stop, max_new_tokens=args.max_new,
+        priority=args.priority if i % 2 == 0 else 0)
         for i in range(args.requests)]
     t0 = time.perf_counter()
     outs = eng.generate(prompts, sps)
@@ -114,6 +132,14 @@ def main(argv=None):
         print(f"[serve] page pool: {rep['pages_total']} pages, "
               f"{rep['pages_free']} free after drain, "
               f"{rep['pages_cached']} cached")
+        if args.watermark is not None:
+            resumes = (rep['preempt_fast_resumes']
+                       + rep['preempt_recompute_resumes'])
+            print(f"[serve] overload: {rep['preemptions']} preemptions "
+                  f"({rep['preempt_fast_resumes']} fast / "
+                  f"{rep['preempt_recompute_resumes']} recompute of "
+                  f"{resumes} resumes), "
+                  f"{rep['decode_stall_ticks']} stalled row-ticks")
         if args.prefix_cache:
             print(f"[serve] prefix cache: hit rate "
                   f"{rep['page_hit_rate']:.2f} "

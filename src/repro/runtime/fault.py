@@ -11,6 +11,11 @@ CPU-testable control plane (the data plane — collectives — is XLA's):
 * run_with_restarts — supervisor: runs a step loop, checkpoint-restores on
   exceptions, enforces the restart budget. A SIGTERM/preemption appears as
   an exception and takes the same path.
+* StallWatchdog — tick-count no-progress detector, shared with the
+  serving scheduler (DESIGN.md §8): unlike HeartbeatMonitor it counts
+  *logical* ticks, not wall time, so a stalled-but-spinning scheduler
+  loop (every tick returns, none advances a request) is caught even
+  though heartbeats look healthy.
 
 Elastic scaling: on restart the supervisor re-reads the device topology and
 rebuilds the mesh; checkpoints are mesh-agnostic (checkpoint/manager.py), so
@@ -58,6 +63,32 @@ class HeartbeatMonitor:
 
     def hung(self) -> bool:
         return (time.monotonic() - self._last_beat) > self.hang_timeout_s
+
+
+class StallWatchdog:
+    """Declare a stall after ``limit`` consecutive no-progress ticks
+    (DESIGN.md §8).
+
+    `observe(progressed, busy)` is called once per scheduler tick:
+    ``progressed`` means some request advanced this tick (a token
+    appended, a prefill cursor moved, an admission happened, a request
+    finished); ``busy`` means work is in flight (idle ticks are not
+    stalls). Returns True when the stall budget is exhausted — the caller
+    raises its structured diagnostic (`serving.scheduler.StallError`).
+    ``limit=None`` disarms the watchdog."""
+
+    def __init__(self, limit: int | None):
+        if limit is not None and limit < 1:
+            raise ValueError(f"stall limit must be >= 1 (got {limit})")
+        self.limit = limit
+        self.stalled_ticks = 0
+
+    def observe(self, progressed: bool, busy: bool) -> bool:
+        if progressed or not busy:
+            self.stalled_ticks = 0
+            return False
+        self.stalled_ticks += 1
+        return self.limit is not None and self.stalled_ticks >= self.limit
 
 
 class RestartPolicy:

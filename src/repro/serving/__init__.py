@@ -3,9 +3,10 @@ from repro.serving.engine import (generate, greedy_generate,
 from repro.serving.llm_engine import LLMEngine, RequestOutput
 from repro.serving.params import (FINISH_REASONS, EngineConfig,
                                   SamplingParams, default_detokenize)
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.scheduler import (ContinuousBatcher, PoolExhaustedError,
+                                     Request, StallError)
 
 __all__ = ["ContinuousBatcher", "EngineConfig", "FINISH_REASONS",
-           "LLMEngine", "Request", "RequestOutput", "SamplingParams",
-           "default_detokenize", "generate", "greedy_generate",
-           "kv_cache_memory_report", "make_serve_fns"]
+           "LLMEngine", "PoolExhaustedError", "Request", "RequestOutput",
+           "SamplingParams", "StallError", "default_detokenize", "generate",
+           "greedy_generate", "kv_cache_memory_report", "make_serve_fns"]

@@ -62,11 +62,14 @@ class LLMEngine:
         self._next_uid = 0
 
     def add_request(self, prompt, sampling_params: SamplingParams | None
-                    = None, *, uid: int | None = None) -> int:
+                    = None, *, uid: int | None = None,
+                    priority: int | None = None) -> int:
         """Queue one request; returns its uid (auto-assigned when None).
         `prompt` is a 1-D int32 token array; `sampling_params` defaults to
         exact greedy with its default decode budget
-        (`SamplingParams.max_new_tokens`)."""
+        (`SamplingParams.max_new_tokens`). `priority` overrides
+        `sampling_params.priority` for this call (higher = admitted first,
+        preempted last under overload — DESIGN.md §8)."""
         sp = sampling_params or SamplingParams.greedy()
         if uid is None:
             while self._next_uid in self.batcher._inflight_uids:
@@ -74,7 +77,8 @@ class LLMEngine:
             uid = self._next_uid
             self._next_uid += 1
         req = Request(uid=uid, prompt=np.asarray(prompt, np.int32),
-                      sampling=sp)     # budget resolved from sp at submit
+                      sampling=sp,     # budget resolved from sp at submit
+                      priority=priority)
         self.batcher.submit(req)
         self._live[uid] = req
         self._emitted[uid] = 0

@@ -48,6 +48,7 @@ class SamplingParams:
     stop_token_ids: tuple[int, ...] = ()
     stop: tuple[str, ...] = ()           # stop strings (host-side)
     max_new_tokens: int = 16
+    priority: int = 0                    # higher = served/kept first (§8)
 
     def __post_init__(self):
         if self.temperature < 0:
@@ -59,6 +60,9 @@ class SamplingParams:
             raise ValueError(f"top_k must be >= 0 (got {self.top_k})")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if not isinstance(self.priority, int):
+            raise ValueError(f"priority must be an int "
+                             f"(got {self.priority!r})")
         # normalize list inputs so the dataclass stays hashable
         object.__setattr__(self, "stop_token_ids",
                            tuple(int(t) for t in self.stop_token_ids))
@@ -149,7 +153,21 @@ class EngineConfig:
     paged INT8 flash kernel (default); False falls back to the
     dequantize-gather oracle path — parity-equal, slower, kept for
     debugging and A/B benchmarks. Read per dispatch, so flipping it on a
-    live scheduler recompiles rather than serving a stale trace."""
+    live scheduler recompiles rather than serving a stale trace.
+
+    Overload controls (DESIGN.md §8, paged backend): `watermark` switches
+    admission from the worst-case ``prompt + max_new`` page reservation to
+    an optimistic ``prompt + watermark`` pages (None keeps worst-case, in
+    which case the pool can never exhaust mid-decode and the preemption
+    machinery stays cold); `aging_ticks` grants a queued request +1
+    effective priority per that many ticks waited (0 disables aging);
+    `preempt_loop_limit` bounds consecutive preemptions without global
+    progress before the scheduler raises `PoolExhaustedError`;
+    `stall_ticks` arms the tick-level stall watchdog (no progress for that
+    many consecutive ticks with work in flight raises `StallError`; None
+    disables); `fault_injector` attaches a `core.paging.PoolFaultInjector`
+    to the page allocator so tests/benchmarks can drive every recovery
+    path deterministically."""
     batch: int = 4
     max_len: int = 128
     eos_id: int | None = None
@@ -160,3 +178,8 @@ class EngineConfig:
     prefill_chunk: int | None = None
     detokenize: Callable[[Sequence[int]], str] | None = None
     use_fused_prefill: bool = True
+    watermark: int | None = None         # optimistic-admission headroom (§8)
+    aging_ticks: int = 0                 # 0 = no anti-starvation aging
+    preempt_loop_limit: int = 8
+    stall_ticks: int | None = 500
+    fault_injector: object | None = None  # core.paging.PoolFaultInjector

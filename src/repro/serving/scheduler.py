@@ -74,6 +74,22 @@ The contiguous backend is pad-retaining legacy: its single scalar cache
 length structurally requires a common (left-padded) history length per
 rebuild, so it keeps the padded layout and is excluded from prefix
 caching. The paged path is the production one.
+
+Overload survival (DESIGN.md §8): with `EngineConfig.watermark` set,
+admission reserves only the prompt's pages plus a watermark of decode
+headroom instead of the worst-case prompt+max_new — decode then *grows*
+a row's reservation page by page, and when growth would exhaust the pool
+the scheduler preempts a victim (lowest priority, then latest arrival):
+its pages release through the promotion/LRU path so the prefix stays
+hittable, the row's fp residual + pending token are snapshotted, and the
+request re-queues. Re-admission adopts the still-resident pages and
+restores the snapshot — bitwise-identical to a never-preempted run — or,
+if pages were reclaimed, re-prefills (prompt + generated) with prefix
+hits and restores the pending token so no token is ever redrawn.
+Priorities with anti-starvation aging order admission and victim choice;
+a preemption-loop detector (`PoolExhaustedError`) and a tick-level stall
+watchdog (`StallError`, via runtime/fault.StallWatchdog) make the
+failure modes diagnostic rather than livelocks.
 """
 from __future__ import annotations
 
@@ -89,9 +105,30 @@ import numpy as np
 
 from repro.core import paging as PG
 from repro.core.paging import PagedQuantizedKVCache
+from repro.runtime.fault import StallWatchdog
 from repro.serving.params import (EngineConfig, SamplingParams,
                                   default_detokenize, request_key,
                                   sampling_arrays)
+
+
+class PoolExhaustedError(RuntimeError):
+    """The scheduler preempted repeatedly without any request advancing —
+    the pool cannot serve the committed working set (DESIGN.md §8). The
+    message lists every page holder (uid -> pages held), queue depth and
+    injector state, so the operator sees *who* owns the pool instead of a
+    livelocked preempt/resume loop. Raised only after
+    `EngineConfig.preempt_loop_limit` fruitless preemptions; the
+    forward-progress rule (never preempt the last running request) makes
+    it unreachable without fault injection or external page pressure."""
+
+
+class StallError(RuntimeError):
+    """No request advanced for `EngineConfig.stall_ticks` consecutive
+    ticks with work in flight (DESIGN.md §8). Carries the per-uid
+    stuck-state (queued / preempted / mid-prefill cursor / decoding
+    position) plus pool occupancy, replacing the old practice of waiting
+    for `run_to_completion`'s bare max_ticks RuntimeError to notice an
+    admission deadlock."""
 
 
 def pages_for_request(prompt_len: int, max_new: int, page_size: int) -> int:
@@ -121,12 +158,16 @@ class Request:
     `max_new_tokens=None` takes the budget from
     `sampling.max_new_tokens` (resolved at submit) — there is ONE
     authoritative decode budget per request, and an explicit Request
-    value overrides the SamplingParams one."""
+    value overrides the SamplingParams one. `priority=None` likewise
+    resolves from `sampling.priority` at submit (DESIGN.md §8): higher
+    priorities admit first and are preempted last; anti-starvation aging
+    raises a queued request's *effective* priority over time."""
     uid: int
     prompt: np.ndarray              # (S,) int32
     max_new_tokens: int | None = None
     sampling: SamplingParams = dataclasses.field(
         default_factory=SamplingParams.greedy)
+    priority: int | None = None
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
     finish_reason: str | None = None
@@ -211,6 +252,27 @@ class ContinuousBatcher:
         if (prefix_cache or prefill_chunk) and not paged:
             raise ValueError("prefix caching / chunked prefill require the "
                              "paged backend (paged=True)")
+        # overload controls (DESIGN.md §8)
+        if (config.watermark is not None
+                or config.fault_injector is not None) and not paged:
+            raise ValueError("watermark admission / pool fault injection "
+                             "require the paged backend (paged=True)")
+        if config.watermark is not None and config.watermark < 0:
+            raise ValueError(f"watermark must be >= 0 "
+                             f"(got {config.watermark})")
+        self.watermark = config.watermark
+        self.aging_ticks = int(config.aging_ticks or 0)
+        self.preempt_loop_limit = config.preempt_loop_limit
+        self._watchdog = StallWatchdog(config.stall_ticks)
+        self._seq = 0               # arrival order for priority tie-breaks
+        self._progressed = False
+        self._preempts_since_progress = 0
+        self.preemptions = 0
+        self.preempt_fast_resumes = 0
+        self.preempt_recompute_resumes = 0
+        self.decode_stall_ticks = 0
+        self.prefill_tokens_computed = 0
+        self.decode_tokens_computed = 0
         if paged:
             self.page_size = cfg.quant.block_size
             self.max_blocks = max_len // self.page_size
@@ -220,9 +282,19 @@ class ContinuousBatcher:
             # host-authoritative allocator (free list + refcounts + prefix
             # index), mirrored to the device pytree on change
             self.allocator = PG.HostPageAllocator(
-                n_pages, prefix_cache=self.prefix_cache)
+                n_pages, prefix_cache=self.prefix_cache,
+                injector=config.fault_injector)
             self.tables = np.zeros((batch, self.max_blocks), np.int32)
             self.row_pages: list[list[int]] = [[] for _ in range(batch)]
+            # preemption-by-recompute state (DESIGN.md §8): uid -> suspend
+            # snapshot (pending token, fp residual, full token stream and
+            # its hash chain); per-row base into `generated` marking where
+            # this residency's decoding started (promotion must not
+            # re-extend over tokens already inside the stream); rows whose
+            # re-prefill must restore a pending token instead of sampling
+            self._suspended: dict[int, dict] = {}
+            self.gen_base = [0] * batch
+            self._resume_tok: dict[int, int] = {}
             # copy-on-write scan before decode: armed only when something
             # can actually share a flush target (fork_row wiring) — the
             # scheduler itself never forks, so scanning every tick would
@@ -275,34 +347,72 @@ class ContinuousBatcher:
         admission memo, streaming outputs), so two live requests must never
         share one. Paged capacity is unpadded (varlen prefill); the legacy
         contiguous backend still pads to a block multiple and validates
-        accordingly."""
+        accordingly.
+
+        Every check runs before ANY state mutates — scheduler or request —
+        so a rejected submit leaves the queue, the pool report, and the
+        request object byte-identical to before the call (DESIGN.md §8).
+        The worst-case page bound is validated even under watermark
+        admission: a request that fits the pool *alone* underpins the
+        forward-progress guarantee (the last running row can always grow
+        to its full budget)."""
         if req.uid in self._inflight_uids:
             raise ValueError(f"request uid {req.uid} is already in flight "
                              f"(queued or running); uids are the lifecycle "
                              f"handle and must be unique until completion")
-        if req.max_new_tokens is None:      # single source: SamplingParams
-            req.max_new_tokens = req.sampling.max_new_tokens
+        budget = (req.max_new_tokens if req.max_new_tokens is not None
+                  else req.sampling.max_new_tokens)
         if self.paged:
             if len(req.prompt) < 1:
                 raise ValueError(f"request {req.uid}: empty prompt")
-            if len(req.prompt) + req.max_new_tokens > self.max_len:
+            if len(req.prompt) + budget > self.max_len:
                 raise ValueError(f"request {req.uid}: prompt+max_new exceeds "
                                  f"max_len={self.max_len}")
-            if pages_for_request(len(req.prompt), req.max_new_tokens,
+            if pages_for_request(len(req.prompt), budget,
                                  self.page_size) > self.n_pages - 1:
                 raise ValueError(f"request {req.uid} needs more pages than "
                                  f"the pool holds ({self.n_pages - 1}); "
                                  f"raise n_pages")
-        elif self._pad(len(req.prompt)) + req.max_new_tokens > self.max_len:
+        elif self._pad(len(req.prompt)) + budget > self.max_len:
             raise ValueError(f"request {req.uid}: prompt+max_new exceeds "
                              f"max_len={self.max_len}")
+        # -- commit: nothing above mutated scheduler or request state ------
+        req.max_new_tokens = budget         # single source: SamplingParams
+        if req.priority is None:
+            req.priority = req.sampling.priority
         req.submit_time = time.perf_counter()
+        req._submit_tick = self.ticks       # aging clock (DESIGN.md §8)
+        req._arrival = self._seq            # priority tie-break: FCFS
+        self._seq += 1
         self._inflight_uids.add(req.uid)
         self.queue.append(req)
 
     # -- shared helpers ----------------------------------------------------
     def _pad(self, n: int) -> int:
         return -(-max(n, 1) // self.block) * self.block
+
+    # -- priorities + anti-starvation aging (DESIGN.md §8) -----------------
+    def _queue_priority(self, r: Request) -> int:
+        """Effective priority of a QUEUED request: its static priority
+        plus one point per `aging_ticks` waited, so a low-priority request
+        blocked behind a stream of high-priority arrivals eventually
+        outranks them (no starvation; aging off when aging_ticks=0).
+        Running rows never age — victim selection uses static priority."""
+        p = r.priority if r.priority is not None else 0
+        if self.aging_ticks:
+            p += (self.ticks - getattr(r, "_submit_tick", self.ticks)) \
+                // self.aging_ticks
+        return p
+
+    def _next_candidate_index(self) -> int:
+        """Queue index of the next admission candidate: highest effective
+        priority first, FCFS (arrival sequence) within a priority. The
+        head candidate does NOT yield to smaller later requests when it is
+        blocked on pool pressure — bypass would re-introduce starvation
+        exactly where aging removes it (DESIGN.md §8)."""
+        return min(range(len(self.queue)),
+                   key=lambda k: (-self._queue_priority(self.queue[k]),
+                                  getattr(self.queue[k], "_arrival", k)))
 
     def _sample(self, logits) -> np.ndarray:
         """Pure-greedy batch argmax — the fast path when no active row
@@ -408,6 +518,7 @@ class ContinuousBatcher:
                 del self.queue[idx]
                 if self.paged:
                     self._admit_memo.pop(uid, None)
+                    self._suspended.pop(uid, None)
                 self._finish(r, "aborted")
                 self.aborted_requests += 1
                 return r
@@ -437,18 +548,70 @@ class ContinuousBatcher:
         """One scheduler tick: admit, prefill admitted rows, decode one
         chunk (up to `chunk` tokens, one device dispatch) for all active
         rows. Returns requests completed this tick. `self.ticks` counts
-        ticks taken since construction (tokens/dispatch telemetry)."""
+        ticks taken since construction (tokens/dispatch telemetry).
+
+        A tick-level stall watchdog (runtime/fault.StallWatchdog,
+        DESIGN.md §8) observes every tick: if no request advances for
+        `EngineConfig.stall_ticks` consecutive ticks while work is in
+        flight, the tick raises `StallError` with per-uid stuck-state —
+        an admission deadlock surfaces as a structured diagnostic instead
+        of a silent spin."""
         self.ticks += 1
+        self._progressed = False
+        done = self._step_paged() if self.paged else self._step_contiguous()
+        if done:
+            self._progressed = True
+        if self._progressed:
+            self._preempts_since_progress = 0
+        busy = bool(self.queue) or any(r is not None for r in self.rows)
+        if self._watchdog.observe(self._progressed, busy):
+            raise StallError(
+                f"scheduler stalled: no request advanced in "
+                f"{self._watchdog.limit} consecutive ticks with work in "
+                f"flight; {self._stuck_report()}")
+        return done
+
+    def _stuck_report(self) -> str:
+        """Per-uid lifecycle state plus pool occupancy, for the watchdog
+        and run_to_completion diagnostics (DESIGN.md §8): queued (and
+        whether a preemption snapshot is waiting), mid-prefill with its
+        cursor, or decoding with its position."""
+        parts = []
+        for r in self.queue:
+            tag = ("queued(preempted)" if self.paged
+                   and r.uid in self._suspended else "queued")
+            parts.append(f"uid {r.uid}: {tag}")
+        for i, r in enumerate(self.rows):
+            if r is None:
+                continue
+            if self.paged and i in self.prefilling:
+                st = self.prefilling[i]
+                parts.append(f"uid {r.uid}: mid-prefill "
+                             f"{st['cursor']}/{st['S']}")
+            else:
+                parts.append(f"uid {r.uid}: decoding pos={int(self.pos[i])} "
+                             f"generated={len(r.generated)}")
+        rep = "per-request state: [" + "; ".join(parts) + "]"
         if self.paged:
-            return self._step_paged()
-        return self._step_contiguous()
+            a = self.allocator
+            rep += (f"; pool: available={a.available} free={a.n_free} "
+                    f"cached={a.n_cached} preemptions={self.preemptions}")
+            if a.injector is not None:
+                rep += (f"; injector: fault_ticks="
+                        f"{a.injector.alloc_fault_ticks} "
+                        f"held={a.injector.hold_pages} "
+                        f"deferred={len(a.deferred)}")
+        return rep
 
     def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
         """Drain the queue; returns naturally finished requests (aborted
         ones are returned by `abort` itself). Raises RuntimeError when
         `max_ticks` is exhausted with requests still queued or active —
         the old behavior silently returned partial results, losing the
-        stranded requests without a trace."""
+        stranded requests without a trace; the message carries the per-uid
+        stuck-state (`_stuck_report`, DESIGN.md §8) so admission
+        deadlocks are debuggable. A genuine no-progress spin raises
+        `StallError` from `step` itself long before max_ticks."""
         out = []
         for _ in range(max_ticks):
             out.extend(self.step())
@@ -459,7 +622,8 @@ class ContinuousBatcher:
         raise RuntimeError(
             f"run_to_completion: max_ticks={max_ticks} exhausted with "
             f"{len(stranded)} request(s) still in flight (uids {stranded}); "
-            f"raise max_ticks or check for an admission deadlock")
+            f"{self._stuck_report()}; raise max_ticks or check for an "
+            f"admission deadlock")
 
     def _check_stop(self, r: Request, nxt: int) -> str | None:
         """Finish reason for the request after appending a token, given the
@@ -559,11 +723,18 @@ class ContinuousBatcher:
         return done
 
     def _decode_tick(self, active: list[int],
-                     row_mask: np.ndarray | None = None) -> list[Request]:
+                     row_mask: np.ndarray | None = None,
+                     n: int | None = None) -> list[Request]:
         """Decode one chunk for the active rows and run host bookkeeping.
         When any active row samples, the chunk runs the sampled scan
-        variant — still ONE device dispatch for the whole mixed batch."""
-        n = self._chunk_len(active)
+        variant — still ONE device dispatch for the whole mixed batch.
+        ``n`` lets the paged growth pass (`_ensure_decode_pages`,
+        DESIGN.md §8) pin the chunk length it sized page reservations
+        for; None computes it here (the historical behavior)."""
+        if n is None:
+            n = self._chunk_len(active)
+        self._progressed = True
+        self.decode_tokens_computed += n * len(active)
         if self.paged and self.cow_armed and self._cow_retarget(active, n):
             self._sync_device()          # retargeted tables before the scan
         args = (self.params, jnp.asarray(self.tok), self.state,
@@ -606,6 +777,8 @@ class ContinuousBatcher:
             self.prefilling.pop(i, None)
             self.streams[i] = None
             self.row_chain[i] = None
+            self.gen_base[i] = 0
+            self._resume_tok.pop(i, None)
 
     def _promote_on_release(self, i: int):
         """Publish the completing row's decode pages under the prompt's
@@ -616,17 +789,21 @@ class ContinuousBatcher:
         tail (those tokens share their page with the first generated ones).
         Only blocks whose ps tokens are all *kept* are promoted — a block
         reaching into tokens discarded after an EOS mid-scan holds KV the
-        request never acknowledged. DESIGN.md §7."""
+        request never acknowledged. For a resumed row (DESIGN.md §8) the
+        stream already contains the pre-preemption generated tokens, so
+        the extension starts at `gen_base` — promoting the full
+        `generated` again would double-count those tokens. DESIGN.md §7."""
         r, stream, chain = self.rows[i], self.streams[i], self.row_chain[i]
         if r is None or stream is None:
             return
         ps = self.page_size
-        S, nb = len(stream), len(stream) // ps       # nb = full prompt pages
-        kept = S + len(r.generated)
+        gb = self.gen_base[i]
+        S, nb = len(stream), len(stream) // ps       # nb = full stream pages
+        kept = S + len(r.generated) - gb
         if kept // ps <= nb:
             return
         ext = np.concatenate([stream[nb * ps:],
-                              np.asarray(r.generated, np.int32)])
+                              np.asarray(r.generated[gb:], np.int32)])
         ext = ext[:(kept // ps) * ps - nb * ps]
         parent = chain[-1] if chain else None        # S < ps: seed the chain
         for j, h in enumerate(PG.chain_hashes(ext, ps, parent=parent)):
@@ -643,7 +820,8 @@ class ContinuousBatcher:
         new = []
         free = [i for i in range(self.batch) if self.rows[i] is None]
         while free[len(new):] and self.queue:
-            cand = self.queue[0]                 # validated at submit()
+            k = self._next_candidate_index()     # priority order, FCFS ties
+            cand = self.queue[k]                 # validated at submit()
             group = active + [self.rows[i] for i in new] + [cand]
             S = self._pad(max(len(r.prompt) + len(r.generated)
                               for r in group))
@@ -651,8 +829,11 @@ class ContinuousBatcher:
             if any(S + remaining(r) > self.max_len for r in group):
                 break                      # defer until rows free up
             i = free[len(new)]
-            self.rows[i] = self.queue.popleft()
+            del self.queue[k]
+            self.rows[i] = cand
             new.append(i)
+        if new:
+            self._progressed = True
         return new
 
     def _step_contiguous(self) -> list[Request]:
@@ -751,24 +932,49 @@ class ContinuousBatcher:
         hit_chunks = min(match_pages // cpp, n_chunks - 1)
         return max(hit_chunks, 0) * cp
 
+    def _initial_pages(self, stream_len: int, max_new: int) -> int:
+        """Pages reserved at admission (DESIGN.md §8). Worst-case mode
+        (`watermark=None`): the full `pages_for_request` reservation — the
+        pool can never exhaust mid-decode and preemption stays cold.
+        Optimistic mode: the stream's own pages plus `watermark` pages of
+        decode headroom (never more than the worst case) — requests that
+        stop early release pages they never reserved, and decode grows the
+        reservation page by page (`_ensure_decode_pages`)."""
+        total = self._pages_needed(stream_len, max_new)
+        if self.watermark is None:
+            return total
+        return min(total,
+                   -(-max(stream_len, 1) // self.page_size) + self.watermark)
+
     def _admit_chunked(self) -> bool:
         """Admit queued requests into free rows, one at a time (no length
-        grouping of any kind — rows prefill independently). For each
-        candidate: hash the *unpadded* prompt's full pages, match the chain
-        against the index, adopt hit pages by refcount, allocate the rest
-        (reclaiming evictable cached pages LRU-first under pressure), and
-        start its prefill cursor past the hits. Admission is gated by
-        `HostPageAllocator.available_after_adopt`. Returns True when page
-        tables changed (device sync required). DESIGN.md §7."""
+        grouping of any kind — rows prefill independently). Candidates are
+        taken in effective-priority order (aging included, FCFS within a
+        priority, DESIGN.md §8); a blocked head does not yield to later
+        candidates. For each candidate: hash the *unpadded* prompt's full
+        pages, match the chain against the index, adopt hit pages by
+        refcount, allocate the rest of the initial reservation
+        (`_initial_pages`; reclaiming evictable cached pages LRU-first
+        under pressure), and start its prefill cursor past the hits.
+        Preempted requests re-admit through `_admit_resume` instead.
+        Admission is gated by `HostPageAllocator.available_after_adopt`.
+        Returns True when page tables changed (device sync required).
+        DESIGN.md §7."""
         ps = self.page_size
         changed = False
         for i in range(self.batch):
             if self.rows[i] is not None or not self.queue:
                 continue
-            cand = self.queue[0]                 # validated at submit()
+            k = self._next_candidate_index()
+            cand = self.queue[k]                 # validated at submit()
+            if cand.uid in self._suspended:
+                if not self._admit_resume(i, k, cand):
+                    break                        # wait for releases
+                changed = True
+                continue
             S = len(cand.prompt)                 # true length — no padding
             nb = S // ps                         # hashable full pages
-            total = self._pages_needed(S, cand.max_new_tokens)
+            init = self._initial_pages(S, cand.max_new_tokens)
             if cand.uid in self._admit_memo:     # blocked-head retry
                 toks, chain = self._admit_memo[cand.uid]
             else:
@@ -781,25 +987,99 @@ class ContinuousBatcher:
             hit = hit_toks // ps                 # adopted pages
             # gate on what is allocatable AFTER adoption: hit pages sitting
             # on the LRU stop being evictable the moment they are adopted
-            if total - hit > self.allocator.available_after_adopt(chain[:hit]):
-                break                            # FCFS: wait for releases
-            self.queue.popleft()
+            if init - hit > self.allocator.available_after_adopt(chain[:hit]):
+                break                            # wait for releases
+            del self.queue[k]
             self._admit_memo.pop(cand.uid, None)
             ids = (self.allocator.adopt(chain[:hit]) if hit else []) \
-                + self.allocator.alloc(total - hit)
+                + self.allocator.alloc(init - hit)
             if self.prefix_cache:
                 self.allocator.misses += nb - hit
             self.rows[i] = cand
             self.row_pages[i] = ids
             self.tables[i, :] = 0
-            self.tables[i, :total] = ids
+            self.tables[i, :init] = ids
             self.streams[i] = toks
             self.row_chain[i] = chain
+            self.gen_base[i] = 0
             self.prefilling[i] = {"toks": toks, "cursor": hit_toks, "S": S}
             self.pos[i] = hit_toks
             self.tok[i, 0] = 0
             changed = True
+        if changed:
+            self._progressed = True
         return changed
+
+    def _admit_resume(self, i: int, k: int, cand: Request) -> bool:
+        """Re-admit a preempted request into row ``i`` (DESIGN.md §8).
+
+        Fast path — every full page of the suspended stream
+        (prompt + generated) is still resident in the prefix index and the
+        fp-residual snapshot survives: adopt all of them, restore the
+        residual and the pending token, and rejoin decode with NO
+        prefill. Bitwise-identical to a never-preempted run: the physical
+        pages are the very ones the row flushed, the residual is restored
+        literally, and seeded sampling is draw-index invariant (token i is
+        always drawn at fold_in(key, i) — `generated` is preserved across
+        the preemption).
+
+        Recompute path — some pages were reclaimed (or no prefix cache):
+        re-prefill the full stream with whatever hits remain; the pending
+        token is restored at the prefill boundary instead of being
+        redrawn, so the emitted stream never forks even though the
+        recomputed cache may differ at quantization-noise scale
+        (DESIGN.md §7's chunk-grid caveat). Returns False when the pool
+        cannot host the resume yet (the caller waits, aging guarantees
+        the retry wins eventually)."""
+        ps = self.page_size
+        snap = self._suspended[cand.uid]
+        full, fchain = snap["full_toks"], snap["full_chain"]
+        Sf, nbf = len(full), len(full) // ps
+        rem = cand.max_new_tokens - len(cand.generated)
+        init = self._initial_pages(Sf, rem)
+        resident = self.allocator.match(fchain) if self.prefix_cache else 0
+        if resident >= nbf and snap["resid"] is not None:
+            if init - nbf > self.allocator.available_after_adopt(fchain):
+                return False
+            ids = self.allocator.adopt(fchain) \
+                + self.allocator.alloc(init - nbf)
+            del self.queue[k]
+            self.rows[i] = cand
+            self.row_pages[i] = ids
+            self.tables[i, :] = 0
+            self.tables[i, :init] = ids
+            self.streams[i] = full
+            self.row_chain[i] = fchain
+            self.gen_base[i] = len(cand.generated)
+            self.pos[i] = Sf
+            self.tok[i, 0] = snap["pending"]
+            self._restore_resid(i, snap["resid"])
+            del self._suspended[cand.uid]
+            self.preempt_fast_resumes += 1
+            return True
+        hit_toks = self._cap_hits(resident, Sf) if self.prefix_cache else 0
+        hit = hit_toks // ps
+        if init - hit > self.allocator.available_after_adopt(fchain[:hit]):
+            return False
+        ids = (self.allocator.adopt(fchain[:hit]) if hit else []) \
+            + self.allocator.alloc(init - hit)
+        if self.prefix_cache:
+            self.allocator.misses += nbf - hit
+        del self.queue[k]
+        self.rows[i] = cand
+        self.row_pages[i] = ids
+        self.tables[i, :] = 0
+        self.tables[i, :init] = ids
+        self.streams[i] = full
+        self.row_chain[i] = fchain
+        self.gen_base[i] = len(cand.generated)
+        self.prefilling[i] = {"toks": full, "cursor": hit_toks, "S": Sf}
+        self.pos[i] = hit_toks
+        self.tok[i, 0] = 0
+        self._resume_tok[i] = snap["pending"]
+        del self._suspended[cand.uid]
+        self.preempt_recompute_resumes += 1
+        return True
 
     def _chunk_prefill_fn(self, max_start: int):
         """Jitted chunk fn for a dispatch whose deepest cursor is
@@ -886,9 +1166,14 @@ class ContinuousBatcher:
         logits, self.state = self._chunk_prefill_fn(int(start.max()))(
             self.params, jnp.asarray(toks), self.state, jnp.asarray(start),
             jnp.asarray(valid), jnp.asarray(mask))
+        self._progressed = True
+        self.prefill_tokens_computed += int(valid.sum())
         sampled = None
+        # resumed rows (DESIGN.md §8) restore their pre-preemption pending
+        # token instead of redrawing — they are not "finishing" rows
         finishing = [i for i in group
-                     if rem_of[i] <= self.prefill_chunk_tokens]
+                     if rem_of[i] <= self.prefill_chunk_tokens
+                     and i not in self._resume_tok]
         done: list[Request] = []
         for i in group:
             st = self.prefilling[i]
@@ -902,6 +1187,14 @@ class ContinuousBatcher:
             st["cursor"] += c
             self.pos[i] = st["cursor"]
             if st["cursor"] == st["S"]:
+                rtok = self._resume_tok.pop(i, None)
+                if rtok is not None:
+                    # recompute-resume complete: the pending token was drawn
+                    # before preemption (first token already recorded) — do
+                    # not redraw, do not re-record TTFT (DESIGN.md §8)
+                    del self.prefilling[i]
+                    self.tok[i, 0] = rtok
+                    continue
                 if sampled is None:      # token index 0 for finishing rows
                     sampled = self._sample_rows(logits, finishing, offset=0)
                 del self.prefilling[i]
@@ -916,6 +1209,168 @@ class ContinuousBatcher:
                 self.tok[i, 0] = sampled[i]
                 self._record_first_token(r)
         return done
+
+    # -- preemption-by-recompute (DESIGN.md §8) ----------------------------
+    def _snapshot_resid(self, i: int) -> list:
+        """Pull row ``i``'s per-layer fp residuals (the mutable partial
+        page) to host numpy, in the deterministic pytree traversal order
+        `_restore_resid` replays. Together with the pending token this is
+        the row's entire non-page state — flushed pages are immutable and
+        survive in the pool/index (DESIGN.md §8)."""
+        out = []
+
+        def rec(x):
+            if isinstance(x, PagedQuantizedKVCache):
+                out.append((np.asarray(x.resid_k[i]),
+                            np.asarray(x.resid_v[i])))
+            elif isinstance(x, dict):
+                for v in x.values():
+                    rec(v)
+            elif isinstance(x, (list, tuple)):
+                for v in x:
+                    rec(v)
+        rec(self.state)
+        return out
+
+    def _restore_resid(self, i: int, snaps: list) -> None:
+        """Write a `_snapshot_resid` snapshot back into row ``i``'s cache
+        leaves (fast resume, DESIGN.md §8). Same traversal order as the
+        snapshot, so layer k's residual lands back in layer k."""
+        it = iter(snaps)
+
+        def rec(x):
+            if isinstance(x, PagedQuantizedKVCache):
+                k, v = next(it)
+                return dataclasses.replace(
+                    x, resid_k=x.resid_k.at[i].set(jnp.asarray(k)),
+                    resid_v=x.resid_v.at[i].set(jnp.asarray(v)))
+            if isinstance(x, dict):
+                return {kk: rec(vv) for kk, vv in x.items()}
+            if isinstance(x, (list, tuple)):
+                return type(x)(rec(v) for v in x)
+            return x
+        self.state = rec(self.state)
+
+    def _pick_victim(self) -> int | None:
+        """Preemption victim among running rows: lowest static priority
+        first, then latest arrival (LIFO within a priority — the newest
+        request re-queues, the oldest keeps its progress). Never the last
+        running row: the sole survivor must be able to grow to its full
+        budget (its worst case fits the pool alone, validated at submit),
+        which is the forward-progress guarantee (DESIGN.md §8)."""
+        running = [i for i, r in enumerate(self.rows) if r is not None]
+        if len(running) <= 1:
+            return None
+        return min(running,
+                   key=lambda i: (self.rows[i].priority
+                                  if self.rows[i].priority is not None else 0,
+                                  -getattr(self.rows[i], "_arrival", i)))
+
+    def _preempt_row(self, i: int) -> None:
+        """Suspend row ``i`` and re-queue its request (DESIGN.md §8).
+
+        Mid-decode rows snapshot (pending token, fp residuals, the full
+        token stream and its hash chain) for `_admit_resume`; release then
+        runs the normal promotion path, so the row's flushed pages park on
+        the evictable LRU still indexed — the fast (bitwise) resume adopts
+        exactly those pages back. Mid-prefill rows have no decode state:
+        they re-queue plainly (restart prefill, prefix hits make it
+        near-free), except a resume-in-progress, which keeps carrying its
+        pending token. The preemption-loop detector counts preemptions
+        since the last global progress and raises `PoolExhaustedError`
+        past the configured limit instead of livelocking."""
+        r = self.rows[i]
+        self._preempts_since_progress += 1
+        if self._preempts_since_progress > self.preempt_loop_limit:
+            holders = {rr.uid: len(self.row_pages[j])
+                       for j, rr in enumerate(self.rows) if rr is not None}
+            raise PoolExhaustedError(
+                f"pool exhausted: {self._preempts_since_progress} "
+                f"preemption(s) without any request advancing (limit "
+                f"{self.preempt_loop_limit}); page holders "
+                f"(uid -> pages): {holders}; "
+                f"available={self.allocator.available} of "
+                f"{self.n_pages - 1}; {self._stuck_report()}")
+        self.preemptions += 1
+        ps = self.page_size
+        if i in self.prefilling:
+            rtok = self._resume_tok.pop(i, None)
+            if rtok is not None:     # resume-in-progress: keep its snapshot
+                self._suspended[r.uid] = {
+                    "pending": rtok, "resid": None,
+                    "full_toks": self.streams[i],
+                    "full_chain": list(self.row_chain[i])}
+        else:
+            stream, gb = self.streams[i], self.gen_base[i]
+            full = np.concatenate(
+                [stream, np.asarray(r.generated[gb:], np.int32)])
+            fchain = (PG.chain_hashes(full[:(len(full) // ps) * ps], ps)
+                      if self.prefix_cache else [])
+            self._suspended[r.uid] = {
+                "pending": int(self.tok[i, 0]),
+                "resid": self._snapshot_resid(i),
+                "full_toks": full,
+                "full_chain": fchain}
+        self._release_row(i)         # promote -> LRU: prefix stays hittable
+        r._submit_tick = self.ticks  # aging clock restarts at preemption
+        self.queue.append(r)
+
+    def _ensure_decode_pages(self, active: list[int]
+                             ) -> tuple[list[int], int, bool]:
+        """Optimistic-admission growth pass before a decode chunk
+        (DESIGN.md §8): every block the n-step scan can flush into
+        (`append` flushes block pos//ps at page boundaries — an unmapped
+        entry would silently lose the page to the sentinel) must be mapped
+        BEFORE the dispatch. Grows each active row's reservation to cover
+        pos+n; when the pool cannot cover the growth, preempts victims
+        (`_pick_victim`) until it can, and when no victim remains
+        (forward-progress rule) stalls the lowest-priority needy rows for
+        this tick — they keep their pages and retry next tick. Returns
+        (active rows to decode, chunk length n, tables changed)."""
+        ps = self.page_size
+        changed = False
+        for _ in range(4 * self.batch + 8):      # paranoia bound
+            if not active:
+                return active, 0, changed
+            n = self._chunk_len(active)
+            need = {}
+            for i in active:
+                want = -(-(int(self.pos[i]) + n) // ps)
+                have = len(self.row_pages[i])
+                if want > have:
+                    need[i] = want - have
+            if not need:
+                return active, n, changed
+            if sum(need.values()) <= self.allocator.available:
+                # deterministic order: highest priority grows first
+                for i in sorted(need,
+                                key=lambda j: (-(self.rows[j].priority or 0),
+                                               getattr(self.rows[j],
+                                                       "_arrival", j))):
+                    ids = self.allocator.alloc(need[i])
+                    have = len(self.row_pages[i])
+                    self.tables[i, have:have + len(ids)] = ids
+                    self.row_pages[i].extend(ids)
+                return active, n, True
+            victim = self._pick_victim()
+            if victim is None:
+                # no preemptable victim: stall the lowest-priority needy
+                # rows this tick until the rest fits (they hold pages and
+                # retry next tick); re-loop — n can change with the set
+                order = sorted(need,
+                               key=lambda j: ((self.rows[j].priority or 0),
+                                              -getattr(self.rows[j],
+                                                       "_arrival", j)))
+                while order and sum(need[j] for j in order) \
+                        > self.allocator.available:
+                    drop = order.pop(0)
+                    self.decode_stall_ticks += 1
+                    active = [i for i in active if i != drop]
+                continue
+            self._preempt_row(victim)
+            changed = True
+            active = [i for i in active if self.rows[i] is not None]
+        return [], 0, changed                    # bound hit: stall the tick
 
     def _cow_retarget(self, active: list[int], n: int) -> bool:
         """Copy-on-write gate before an n-step decode scan: any block the
@@ -946,18 +1401,31 @@ class ContinuousBatcher:
         admit (hash-match + adopt + alloc), advance one prefill chunk, then
         decode one scanned chunk for the rows that are past prefill.
         Prefill and decode interleave tick by tick, so a long prompt never
-        stalls running decodes."""
+        stalls running decodes.
+
+        Under optimistic admission (`watermark` set, DESIGN.md §8) a growth
+        pass runs between prefill and decode: it maps every block the
+        decode scan can flush into, preempting victims when the pool can't
+        cover the growth. With `watermark=None` the worst-case reservation
+        makes growth impossible and the pass is skipped entirely — the
+        preemption machinery costs nothing when disabled."""
         if self.state is None:
             self.state = self._init_state(self.batch)
+        self.allocator.tick()        # fault-injection clock + deferred drain
         if self._admit_chunked():
             self._sync_device()      # hit pages + cursors live before use
         done = self._advance_prefill()   # first-draw-is-stop completions
         active = [i for i, r in enumerate(self.rows)
                   if r is not None and i not in self.prefilling]
+        n = None
+        if active and self.watermark is not None:
+            active, n, grew = self._ensure_decode_pages(active)
+            if grew:
+                self._sync_device()  # new/changed tables live before decode
         if active:
             row_mask = np.zeros((self.batch,), bool)
             row_mask[active] = True
-            done = done + self._decode_tick(active, row_mask)
+            done = done + self._decode_tick(active, row_mask, n=n)
         if done:
             self._sync_device()
         return done
@@ -983,13 +1451,20 @@ class ContinuousBatcher:
                    for i, r in enumerate(self.rows)]
         live = PG.live_page_count(self.tables, lengths, self.page_size)
         a = self.allocator
-        allocated = (self.n_pages - 1) - a.n_free - a.n_cached
+        allocated = (self.n_pages - 1) - a.n_free - a.n_cached \
+            - len(a.deferred)
         rep = {"pages_total": self.n_pages - 1,
                "pages_free": a.n_free,
                "pages_cached": a.n_cached,
                "pages_allocated": allocated,
                "pages_live": live,
                "utilization": live / max(allocated, 1),
+               "preemptions": self.preemptions,
+               "preempt_fast_resumes": self.preempt_fast_resumes,
+               "preempt_recompute_resumes": self.preempt_recompute_resumes,
+               "decode_stall_ticks": self.decode_stall_ticks,
+               "prefill_tokens_computed": self.prefill_tokens_computed,
+               "decode_tokens_computed": self.decode_tokens_computed,
                **self.lifecycle_report()}
         if self.prefix_cache:
             rep.update({
@@ -998,5 +1473,12 @@ class ContinuousBatcher:
                 "page_hit_rate": a.hits / max(a.hits + a.misses, 1),
                 "reclaims": a.reclaims,
                 "cow_retargets": a.cow_retargets,
+            })
+        if a.injector is not None:
+            rep.update({
+                "injected_alloc_fault_ticks": a.injector.alloc_fault_ticks,
+                "injected_delayed_releases": a.injector.delayed_releases,
+                "injected_held_pages": a.injector.hold_pages,
+                "pages_deferred": len(a.deferred),
             })
         return rep

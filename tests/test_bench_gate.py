@@ -13,7 +13,8 @@ ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT))
 
 from benchmarks.check_regression import (collect, compare, decode_metrics,
-                                         prefix_metrics, main)
+                                         overload_metrics, prefix_metrics,
+                                         main)
 
 
 def _decode(tokens_s=1000.0, us_per_step=500.0, seed_tokens_s=500.0,
@@ -31,6 +32,13 @@ def _prefix(speedup=2.5, hit_rate=0.87):
                       "page_hit_rate": 0.0}]}
 
 
+def _overload(goodput=0.8, fast_frac=0.5):
+    return {"rows": [{"config": "oversub2x", "goodput_frac": goodput,
+                      "resume_fast_frac": fast_frac},
+                     {"config": "oversub4x", "goodput_frac": 0.5,
+                      "resume_fast_frac": 0.1}]}
+
+
 def test_gate_fails_on_synthetic_regressions():
     base = collect(_decode(), _prefix())
     # >15% tokens/s drop (seed measurement unchanged -> real regression)
@@ -41,6 +49,12 @@ def test_gate_fails_on_synthetic_regressions():
     assert compare(base, collect(_decode(), _prefix(speedup=2.0)))
     # hit-rate collapse (hardware-independent structural signal)
     assert compare(base, collect(_decode(), _prefix(hit_rate=0.4)))
+    # overload goodput collapse / fast-resume collapse at 2x oversub
+    base_o = collect(_decode(), _prefix(), _overload())
+    assert compare(base_o, collect(_decode(), _prefix(),
+                                   _overload(goodput=0.5)))
+    assert compare(base_o, collect(_decode(), _prefix(),
+                                   _overload(fast_frac=0.2)))
 
 
 def test_gate_passes_within_threshold_and_on_improvement():
@@ -81,10 +95,16 @@ def test_committed_artifacts_yield_metrics():
     metric set would make the CI gate pass without checking anything."""
     decode = json.loads((ROOT / "BENCH_decode.json").read_text())
     prefix = json.loads((ROOT / "BENCH_prefix.json").read_text())
-    m = collect(decode, prefix)
+    overload = json.loads((ROOT / "BENCH_overload.json").read_text())
+    m = collect(decode, prefix, overload)
     assert any(k.endswith(".tokens_s_vs_seed") for k in m)
     assert any(k.endswith(".us_per_step_vs_seed") for k in m)
     assert "prefix.shared90.ttft_speedup" in m
+    assert "overload.oversub2x.goodput_frac" in m
+    assert "overload.oversub2x.resume_fast_frac" in m
+    # the overload artifact must certify a deadlock-free oversubscribed run
+    assert all(r["deadlocks"] == 0 and r["completed"] == r["requests"]
+               for r in overload["rows"])
     # self-comparison is the identity: committed vs committed passes
     assert compare(m, m) == []
 
@@ -98,6 +118,7 @@ def test_gate_cli_detects_regression(tmp_path):
                         (cdir, _decode(tokens_s=700.0), _prefix())):
         (d / "BENCH_decode.json").write_text(json.dumps(dec))
         (d / "BENCH_prefix.json").write_text(json.dumps(pre))
+        (d / "BENCH_overload.json").write_text(json.dumps(_overload()))
     assert main(["--baseline-dir", str(bdir), "--current-dir",
                  str(cdir)]) == 1
     (cdir / "BENCH_decode.json").write_text(json.dumps(_decode()))
@@ -112,3 +133,7 @@ def test_metric_directions():
     p = prefix_metrics(_prefix())
     assert p["prefix.shared90.ttft_speedup"][1] is True
     assert p["prefix.shared90.page_hit_rate"][1] is True
+    o = overload_metrics(_overload())
+    assert o["overload.oversub2x.goodput_frac"][1] is True
+    assert o["overload.oversub2x.resume_fast_frac"][1] is True
+    assert not any(k.startswith("overload.oversub4x") for k in o)

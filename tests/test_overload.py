@@ -1,0 +1,414 @@
+"""Overload survival (DESIGN.md §8): optimistic admission, priority
+preemption-by-recompute, anti-starvation aging, fault injection, and the
+stall/exhaustion diagnostics — every recovery path driven deterministically
+by the seeded `PoolFaultInjector`, not by hoped-for pressure."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.paging import HostPageAllocator, PoolFaultInjector
+from repro.models import transformer as T
+from repro.serving import (ContinuousBatcher, EngineConfig, LLMEngine,
+                           PoolExhaustedError, Request, SamplingParams,
+                           StallError)
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("internlm2_1_8b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return params, cfg
+
+
+def _prompts(cfg, sizes, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab, (s,)).astype(np.int32) for s in sizes]
+
+
+def _alloc_invariant(a: HostPageAllocator) -> bool:
+    """free + live(ref) + evictable(lru) + deferred partitions the pool."""
+    pops = [set(a.free), set(a.ref), set(a.lru), set(a.deferred)]
+    total = sum(len(p) for p in pops)
+    return total == a.n_pages - 1 and len(set().union(*pops)) == total
+
+
+# -- preemption parity (the tentpole guarantee) ---------------------------
+def _parity_run(model, *, n_pages, pressure, hold=18, span=(12, 30)):
+    params, cfg = model
+    inj = PoolFaultInjector(seed=1)
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=2, max_len=64, paged=True, n_pages=n_pages, chunk=1,
+        prefix_cache=True, watermark=1, fault_injector=inj))
+    p0, p1 = _prompts(cfg, [9, 11])
+    b.submit(Request(uid=0, prompt=p0,
+                     sampling=SamplingParams.greedy(max_new_tokens=20)))
+    b.submit(Request(uid=1, prompt=p1, sampling=SamplingParams(
+        temperature=0.9, seed=7, max_new_tokens=20)))
+    outs = {}
+    for t in range(400):
+        if pressure and t == span[0]:
+            inj.hold_pages = hold
+        if pressure and t == span[1]:
+            inj.hold_pages = 0
+        for r in b.step():
+            outs[r.uid] = list(r.generated)
+        if len(outs) == 2:
+            return outs, b.pool_report()
+    raise AssertionError("requests did not complete")
+
+
+def test_preempt_fast_resume_bitwise_parity(model):
+    """Forced preempt-then-resume == never-preempted run, bitwise, for a
+    greedy AND a seeded-sampled row (DESIGN.md §8): the fast resume adopts
+    the very pages the row flushed, restores the fp residual + pending
+    token, and seeded draws are draw-index invariant."""
+    base, brep = _parity_run(model, n_pages=24, pressure=False)
+    pres, prep = _parity_run(model, n_pages=24, pressure=True)
+    assert brep["preemptions"] == 0
+    assert prep["preemptions"] >= 1
+    assert prep["preempt_fast_resumes"] >= 1
+    assert pres == base          # bitwise: greedy and seeded streams
+
+
+def test_recompute_resume_restores_pending_token(model):
+    """When the suspended row's pages are reclaimed before re-admission,
+    resume re-prefills (prompt + generated) and restores the pending token
+    at the boundary instead of redrawing — the stream picks up exactly
+    where it stopped (DESIGN.md §8)."""
+    params, cfg = model
+    inj = PoolFaultInjector(seed=1)
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=2, max_len=64, paged=True, n_pages=24, chunk=1,
+        prefix_cache=True, watermark=1, fault_injector=inj))
+    p0, p1 = _prompts(cfg, [9, 11])
+    b.submit(Request(uid=0, prompt=p0,
+                     sampling=SamplingParams.greedy(max_new_tokens=20)))
+    b.submit(Request(uid=1, prompt=p1,
+                     sampling=SamplingParams.greedy(max_new_tokens=20)))
+    outs, snap_prefix = {}, None
+    for t in range(400):
+        if t == 12:
+            inj.hold_pages = 18
+        if t == 16 and b._suspended and snap_prefix is None:
+            # reclaim the suspended row's cached pages: adopt-by-alloc pulls
+            # them off the LRU (de-indexed), release returns them free
+            uid = next(iter(b._suspended))
+            snap_prefix = (uid, list(b._suspended[uid]["full_toks"]),
+                           b._suspended[uid]["pending"])
+            inj.hold_pages = 0
+            b.allocator.release(b.allocator.alloc(b.allocator.available))
+        for r in b.step():
+            outs[r.uid] = list(r.generated)
+        if len(outs) == 2:
+            break
+    rep = b.pool_report()
+    assert rep["preemptions"] >= 1
+    assert rep["preempt_recompute_resumes"] >= 1
+    uid, full, pending = snap_prefix             # full = prompt ++ generated
+    gen_at_preempt = full[len(p0 if uid == 0 else p1):]
+    # the resumed stream preserves every pre-preemption token and continues
+    # with the restored pending token — nothing was redrawn
+    n = len(gen_at_preempt)
+    assert outs[uid][:n] == [int(x) for x in gen_at_preempt]
+    assert outs[uid][n] == pending
+    assert len(outs[uid]) == 20
+
+
+# -- optimistic admission --------------------------------------------------
+def test_optimistic_admission_reserves_fewer_pages(model):
+    """watermark admission reserves prompt+watermark pages instead of the
+    worst-case prompt+max_new, so more rows admit concurrently into the
+    same pool (DESIGN.md §8)."""
+    params, cfg = model
+
+    def admitted_at_first_tick(watermark):
+        b = ContinuousBatcher(params, cfg, EngineConfig(
+            batch=4, max_len=64, paged=True, n_pages=9, chunk=1,
+            watermark=watermark))
+        for u, p in enumerate(_prompts(cfg, [8, 8, 8, 8])):
+            b.submit(Request(uid=u, prompt=p,
+                             sampling=SamplingParams.greedy(
+                                 max_new_tokens=24)))
+        b.step()
+        return sum(r is not None for r in b.rows), b
+
+    worst, _ = admitted_at_first_tick(None)     # 4 pages each: 2 rows fit
+    opt, b = admitted_at_first_tick(1)          # 2 pages each: all 4 fit
+    assert opt > worst
+    assert opt == 4
+    done = b.run_to_completion(max_ticks=2000)  # oversubscribed mix drains
+    assert sorted(r.uid for r in done) == [0, 1, 2, 3]
+    assert all(len(r.generated) == 24 for r in done)
+    assert b.pool_report()["preemptions"] >= 1  # growth had to preempt
+
+
+def test_no_overload_machinery_is_cold(model):
+    """watermark=None keeps the worst-case gate: the pool can never exhaust
+    mid-decode, preemption/stall counters stay zero (free when idle)."""
+    params, cfg = model
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=2, max_len=64, paged=True, n_pages=24, chunk=1,
+        prefix_cache=True))
+    for u, p in enumerate(_prompts(cfg, [9, 11])):
+        b.submit(Request(uid=u, prompt=p,
+                         sampling=SamplingParams.greedy(max_new_tokens=12)))
+    b.run_to_completion(max_ticks=400)
+    rep = b.pool_report()
+    assert rep["preemptions"] == 0
+    assert rep["preempt_fast_resumes"] == 0
+    assert rep["decode_stall_ticks"] == 0
+
+
+# -- submit validation ordering (satellite) --------------------------------
+def test_rejected_submit_leaves_state_byte_identical(model):
+    """An invalid request must raise before ANY state mutates: queue, pool
+    report, and the request object stay byte-identical (DESIGN.md §8)."""
+    params, cfg = model
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=2, max_len=64, paged=True, n_pages=16, chunk=1,
+        prefix_cache=True))
+    (p0,) = _prompts(cfg, [9])
+    b.submit(Request(uid=0, prompt=p0,
+                     sampling=SamplingParams.greedy(max_new_tokens=4)))
+    b.step()
+    before_rep = dict(b.pool_report())
+    before_q = [(r.uid, r._arrival) for r in b.queue]
+    before_seq = b._seq
+    bad = Request(uid=99, prompt=np.arange(60, dtype=np.int32),
+                  sampling=SamplingParams.greedy(max_new_tokens=60))
+    with pytest.raises(ValueError):
+        b.submit(bad)                  # prompt+max_new exceeds max_len
+    dup = Request(uid=0, prompt=p0,
+                  sampling=SamplingParams.greedy(max_new_tokens=4))
+    with pytest.raises(ValueError):
+        b.submit(dup)                  # duplicate in-flight uid
+    # drop wall-clock TTFT fields: time passed, but no *state* moved
+    strip = lambda d: {k: v for k, v in d.items()
+                       if not k.startswith("ttft")}
+    assert strip(b.pool_report()) == strip(before_rep)
+    assert [(r.uid, r._arrival) for r in b.queue] == before_q
+    assert b._seq == before_seq
+    assert bad.submit_time is None and bad.max_new_tokens is None
+    assert 99 not in b._inflight_uids
+
+
+# -- diagnostics (satellite: watchdog + exhaustion) ------------------------
+def test_stall_watchdog_raises_structured_diagnostic(model):
+    """Permanent alloc faults starve admission: after `stall_ticks` no-
+    progress ticks the scheduler raises StallError naming each stuck uid's
+    lifecycle state and the injector's fault counters (DESIGN.md §8)."""
+    params, cfg = model
+    inj = PoolFaultInjector(seed=0, p_alloc_fail=1.0)
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=2, max_len=64, paged=True, n_pages=16, chunk=1,
+        stall_ticks=5, fault_injector=inj))
+    (p0,) = _prompts(cfg, [9])
+    b.submit(Request(uid=0, prompt=p0,
+                     sampling=SamplingParams.greedy(max_new_tokens=4)))
+    with pytest.raises(StallError, match=r"uid 0: queued"):
+        for _ in range(50):
+            b.step()
+    assert b._watchdog.stalled_ticks >= 5
+    assert inj.alloc_fault_ticks > 0
+
+
+def test_pool_exhausted_lists_holders(model):
+    """A preemption loop without progress raises PoolExhaustedError naming
+    every page holder instead of livelocking (DESIGN.md §8): all rows hit
+    their page boundary on one tick while the injector holds the pool."""
+    params, cfg = model
+    inj = PoolFaultInjector(seed=0)
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=3, max_len=64, paged=True, n_pages=12, chunk=1,
+        prefix_cache=True, watermark=0, preempt_loop_limit=1,
+        fault_injector=inj))
+    ps = b.page_size
+    for u, p in enumerate(_prompts(cfg, [ps, ps, ps])):
+        b.submit(Request(uid=u, prompt=p,
+                         sampling=SamplingParams.greedy(max_new_tokens=10)))
+    with pytest.raises(PoolExhaustedError, match=r"page holders"):
+        for _ in range(200):
+            b.step()
+            if not b.prefilling and all(r is not None for r in b.rows):
+                inj.hold_pages = b.n_pages - 1   # freeze the whole pool
+    assert b.pool_report()["preemptions"] >= 1
+
+
+def test_run_to_completion_reports_stuck_state(model):
+    """The max_ticks diagnostic carries per-uid stuck-state, not just a
+    count (satellite: debuggable admission deadlocks)."""
+    params, cfg = model
+    inj = PoolFaultInjector(seed=0, p_alloc_fail=1.0)
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=2, max_len=64, paged=True, n_pages=16, chunk=1,
+        stall_ticks=None, fault_injector=inj))     # watchdog disarmed
+    (p0,) = _prompts(cfg, [9])
+    b.submit(Request(uid=5, prompt=p0,
+                     sampling=SamplingParams.greedy(max_new_tokens=4)))
+    with pytest.raises(RuntimeError,
+                       match=r"uids \[5\].*uid 5: queued"):
+        b.run_to_completion(max_ticks=8)
+
+
+# -- fault injection recovery ----------------------------------------------
+def test_transient_alloc_faults_recover_identically(model):
+    """Random transient alloc failures only delay admission — the drained
+    outputs are identical to a fault-free run and the injector counters
+    prove the faults actually fired (DESIGN.md §8)."""
+    params, cfg = model
+
+    def run(inj):
+        b = ContinuousBatcher(params, cfg, EngineConfig(
+            batch=2, max_len=64, paged=True, n_pages=24, chunk=1,
+            prefix_cache=True, fault_injector=inj))
+        for u, p in enumerate(_prompts(cfg, [9, 11, 7])):
+            b.submit(Request(uid=u, prompt=p,
+                             sampling=SamplingParams.greedy(
+                                 max_new_tokens=8)))
+        done = b.run_to_completion(max_ticks=800)
+        return {r.uid: list(r.generated) for r in done}
+
+    clean = run(None)
+    inj = PoolFaultInjector(seed=11, p_alloc_fail=0.5)
+    faulty = run(inj)
+    assert faulty == clean
+    assert inj.alloc_fault_ticks > 0
+
+
+def test_delayed_reclaim_recovers_identically(model):
+    """Delayed page reclaim (released pages park `reclaim_delay` ticks
+    before becoming reusable) changes timing, never content; the deferred
+    population drains back to zero (DESIGN.md §8)."""
+    params, cfg = model
+
+    def run(inj):
+        b = ContinuousBatcher(params, cfg, EngineConfig(
+            batch=1, max_len=64, paged=True, n_pages=8, chunk=1,
+            fault_injector=inj))
+        for u, p in enumerate(_prompts(cfg, [9, 11, 7])):
+            b.submit(Request(uid=u, prompt=p,
+                             sampling=SamplingParams.greedy(
+                                 max_new_tokens=8)))
+        done = b.run_to_completion(max_ticks=800)
+        return {r.uid: list(r.generated) for r in done}, b
+
+    clean, _ = run(None)
+    inj = PoolFaultInjector(seed=3, reclaim_delay=3)
+    delayed, b = run(inj)
+    assert delayed == clean
+    assert inj.delayed_releases > 0
+    for _ in range(4):
+        b.allocator.tick()                       # drain the tail
+    assert not b.allocator.deferred
+    assert _alloc_invariant(b.allocator)
+
+
+# -- priorities + aging ----------------------------------------------------
+def test_priority_orders_admission(model):
+    """With one row, the higher-priority request is admitted (and finishes)
+    first regardless of submit order; `LLMEngine.add_request(priority=...)`
+    overrides the SamplingParams value (DESIGN.md §8)."""
+    params, cfg = model
+    eng = LLMEngine(params, cfg, EngineConfig(
+        batch=1, max_len=64, paged=True, n_pages=16, chunk=1))
+    lo, hi = _prompts(cfg, [9, 11])
+    u_lo = eng.add_request(lo, SamplingParams.greedy(max_new_tokens=4))
+    u_hi = eng.add_request(hi, SamplingParams.greedy(max_new_tokens=4),
+                           priority=5)
+    order = []
+    for _ in range(200):
+        order += [o.uid for o in eng.step() if o.finished]
+        if len(order) == 2:
+            break
+    assert order == [u_hi, u_lo]
+
+
+def test_aging_prevents_starvation(model):
+    """A low-priority request behind a stream of high-priority arrivals
+    gains +1 effective priority per `aging_ticks` waited and eventually
+    outranks them; without aging it is served dead last (DESIGN.md §8)."""
+    params, cfg = model
+
+    def finish_rank(aging_ticks):
+        b = ContinuousBatcher(params, cfg, EngineConfig(
+            batch=1, max_len=64, paged=True, n_pages=16, chunk=1,
+            aging_ticks=aging_ticks))
+        prompts = _prompts(cfg, [9, 9, 9, 9, 9])
+        hi = lambda u: Request(uid=u, prompt=prompts[u],
+                               sampling=SamplingParams(
+                                   temperature=0.0, priority=3,
+                                   max_new_tokens=4))
+        b.submit(hi(1))                          # occupies the single row
+        b.submit(Request(uid=0, prompt=prompts[0],
+                         sampling=SamplingParams.greedy(max_new_tokens=4)))
+        order, pending = [], {2: 2, 4: 3, 6: 4}     # hi stream keeps coming
+        for t in range(2000):
+            if b.ticks in pending:
+                b.submit(hi(pending.pop(b.ticks)))
+            order += [r.uid for r in b.step()]
+            if len(order) == 5:
+                return order.index(0)
+        raise AssertionError("queue did not drain")
+
+    assert finish_rank(0) == 4                   # no aging: starved to last
+    assert finish_rank(1) < 4                    # aging: overtakes the herd
+
+
+# -- hypothesis property test (satellite) ----------------------------------
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=5, deadline=None)
+@given(st.data())
+def test_random_interleavings_keep_accounting_and_terminate(model, data):
+    """Random submit/abort/pressure/tick interleavings at mixed priorities:
+    after every tick the page populations (free + live + evictable +
+    deferred) partition the pool exactly, and once pressure lifts the
+    system always drains — no deadlock, no starved request (DESIGN.md §8)."""
+    params, cfg = model
+    inj = PoolFaultInjector(
+        seed=data.draw(st.integers(0, 2**16), label="inj_seed"),
+        reclaim_delay=data.draw(st.integers(0, 2), label="delay"))
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=2, max_len=64, paged=True, n_pages=14, chunk=1,
+        prefix_cache=True, watermark=1, aging_ticks=3,
+        fault_injector=inj))
+    rng = np.random.RandomState(data.draw(st.integers(0, 2**16),
+                                          label="prompt_seed"))
+    uid, live = 0, set()
+    for op in data.draw(st.lists(st.sampled_from(
+            ["submit", "abort", "tick", "squeeze", "lift"]),
+            min_size=6, max_size=14), label="ops"):
+        if op == "submit" and len(live) < 5:
+            b.submit(Request(
+                uid=uid, prompt=rng.randint(
+                    0, cfg.vocab, (rng.randint(3, 17),)).astype(np.int32),
+                sampling=SamplingParams(
+                    temperature=0.0, max_new_tokens=int(rng.randint(2, 9)),
+                    priority=int(rng.randint(0, 3)))))
+            live.add(uid)
+            uid += 1
+        elif op == "abort" and live:
+            gone = sorted(live)[0]
+            b.abort(gone)
+            live.discard(gone)
+        elif op == "squeeze":
+            inj.hold_pages = 9
+        elif op == "lift":
+            inj.hold_pages = 0
+        else:
+            b.step()
+        assert _alloc_invariant(b.allocator), "pool accounting broken"
+    inj.hold_pages = 0                           # overload ends; must drain
+    finished = set()
+    for _ in range(3000):
+        finished |= {r.uid for r in b.step()}
+        assert _alloc_invariant(b.allocator), "pool accounting broken"
+        if not b.queue and all(r is None for r in b.rows):
+            break
+    else:
+        raise AssertionError("interleaving did not terminate")
+    assert finished == live                      # every survivor completed
