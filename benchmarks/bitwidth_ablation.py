@@ -2,6 +2,13 @@
 
 INT8 (paper) vs FP8-e4m3 vs packed INT4 on the paper's metrics:
 reconstruction error, attention dot-product error, compression ratio.
+
+Each row also carries ``err_bound`` — the per-format analytic ceiling
+(global absmax over one quantization step: absmax/127 for int8, absmax/8
+for fp8-e4m3's 3-bit mantissa, absmax/7 for the 15-level int4 grid).
+``max_abs_err <= err_bound`` is a mathematical property of the rounding,
+not a perf number, so benchmarks/check_regression.py gates it outright
+from BENCH_accuracy.json (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -21,16 +28,18 @@ def run():
         ("normal", jax.random.normal(k1, (T, D))),          # heavy-tailed-ish
     ]:
         qv = jax.random.uniform(k2, (64, D), minval=-1, maxval=1)
-        for name, (qf, df, elem_bytes) in {
-            "int8": (Q.quantize_matrix, Q.dequantize, 1.0),
-            "fp8_e4m3": (Q.quantize_fp8, Q.dequantize_fp8, 1.0),
-            "int4_packed": (Q.quantize_int4, Q.dequantize_int4, 0.5),
+        absmax = float(jnp.max(jnp.abs(x)))
+        for name, (qf, df, elem_bytes, qeff) in {
+            "int8": (Q.quantize_matrix, Q.dequantize, 1.0, 127.0),
+            "fp8_e4m3": (Q.quantize_fp8, Q.dequantize_fp8, 1.0, 8.0),
+            "int4_packed": (Q.quantize_int4, Q.dequantize_int4, 0.5, 7.0),
         }.items():
             q, s = qf(x)
             xh = df(q, s)
             rows.append({
                 "bench": "bitwidth", "config": f"{name}_{dist}",
                 "max_abs_err": float(Q.max_abs_error(x, xh)),
+                "err_bound": absmax / qeff,
                 "attn_err_raw": float(Q.attention_score_error_raw(qv, x, xh)),
                 "compression_vs_fp32": 4.0 / elem_bytes,
             })

@@ -17,6 +17,14 @@ regresses by more than the threshold:
     (both higher is better) from BENCH_overload.json — pure same-run token
     and resume counters over a deterministic tick-replayed trace, so they
     are hardware-independent outright (DESIGN.md §8)
+  * the multi-precision accuracy numbers from BENCH_accuracy.json
+    (DESIGN.md §9): every perplexity arm's ``ppl`` (lower is better,
+    15% band vs baseline) PLUS two *outright* gates that hold with no
+    baseline at all — deterministic seeds and CPU math make them
+    hardware-independent: each bitwidth row's ``max_abs_err`` must stay
+    under its analytic ``err_bound``, and the paged-int4 backend's
+    perplexity delta vs the position-matched fp reference must stay under
+    ``INT4_PPL_DELTA_CEILING_PCT``
 
 This turns the CI bench steps from smoke tests into a regression gate: a
 PR that silently halves decode throughput or loses the prefix-cache TTFT
@@ -50,8 +58,13 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 ARTIFACTS = ("BENCH_decode.json", "BENCH_prefix.json",
-             "BENCH_overload.json")
+             "BENCH_overload.json", "BENCH_accuracy.json")
 DEFAULT_THRESHOLD = 0.15
+# Outright ceiling for the paged-int4 backend's perplexity delta (percent
+# over the fp reference). int4's 15-level grid costs real accuracy — the
+# committed run measures it — but a PR that breaks nibble packing or scale
+# alignment shows up as an order-of-magnitude blowup, far past this band.
+INT4_PPL_DELTA_CEILING_PCT = 25.0
 
 
 def decode_metrics(data: dict) -> dict[str, tuple[float, bool]]:
@@ -143,8 +156,51 @@ def overload_metrics(data: dict) -> dict[str, tuple[float, bool]]:
     return out
 
 
+def accuracy_metrics(data: dict) -> dict[str, tuple[float, bool]]:
+    """Per-arm perplexity from BENCH_accuracy.json (lower is better).
+
+    The values are deterministic on a given jax build (seeded training,
+    seeded eval batch, CPU math), so the 15% band is pure slack for
+    numeric drift across library versions — a real packing/scale bug
+    moves perplexity by multiples, not percent (DESIGN.md §9)."""
+    out: dict[str, tuple[float, bool]] = {}
+    for row in data.get("perplexity", []):
+        if "ppl" in row:
+            out[f"accuracy.ppl.{row.get('config')}"] = (
+                float(row["ppl"]), False)
+    return out
+
+
+def accuracy_absolute_violations(data: dict) -> list[str]:
+    """Hardware-independent outright gates — no baseline involved.
+
+    * every bitwidth row: ``max_abs_err <= err_bound`` (the analytic
+      one-step reconstruction ceiling; a violation means the quantizer's
+      rounding or scale math is wrong, not that the runner is slow)
+    * the paged-int4 perplexity arm: ``delta_pct`` under the committed
+      ceiling (a nibble-order or scale-alignment bug blows this up by
+      orders of magnitude)"""
+    bad = []
+    for row in data.get("bitwidth", []):
+        if "err_bound" not in row or "max_abs_err" not in row:
+            continue
+        if float(row["max_abs_err"]) > float(row["err_bound"]):
+            bad.append(f"accuracy.bitwidth.{row.get('config')}: "
+                       f"max_abs_err {row['max_abs_err']:.4g} exceeds the "
+                       f"analytic bound {row['err_bound']:.4g}")
+    for row in data.get("perplexity", []):
+        if row.get("config") == "paged_int4" and "delta_pct" in row:
+            if float(row["delta_pct"]) > INT4_PPL_DELTA_CEILING_PCT:
+                bad.append(f"accuracy.ppl.paged_int4: delta "
+                           f"{row['delta_pct']:+.2f}% over the fp reference "
+                           f"exceeds the outright ceiling "
+                           f"{INT4_PPL_DELTA_CEILING_PCT:.0f}%")
+    return bad
+
+
 def collect(decode: dict | None, prefix: dict | None,
-            overload: dict | None = None) -> dict[str, tuple[float, bool]]:
+            overload: dict | None = None,
+            accuracy: dict | None = None) -> dict[str, tuple[float, bool]]:
     m: dict[str, tuple[float, bool]] = {}
     if decode:
         m.update(decode_metrics(decode))
@@ -152,6 +208,8 @@ def collect(decode: dict | None, prefix: dict | None,
         m.update(prefix_metrics(prefix))
     if overload:
         m.update(overload_metrics(overload))
+    if accuracy:
+        m.update(accuracy_metrics(accuracy))
     return m
 
 
@@ -234,11 +292,15 @@ def main(argv=None) -> int:
 
     baseline = collect(base_raw["BENCH_decode.json"],
                        base_raw["BENCH_prefix.json"],
-                       base_raw["BENCH_overload.json"])
+                       base_raw["BENCH_overload.json"],
+                       base_raw["BENCH_accuracy.json"])
     current = collect(cur_raw["BENCH_decode.json"],
                       cur_raw["BENCH_prefix.json"],
-                      cur_raw["BENCH_overload.json"])
+                      cur_raw["BENCH_overload.json"],
+                      cur_raw["BENCH_accuracy.json"])
     bad = compare(baseline, current, args.threshold)
+    # baseline-free outright gates (hardware-independent accuracy claims)
+    bad += accuracy_absolute_violations(cur_raw["BENCH_accuracy.json"] or {})
     for name in sorted(baseline):
         if name in current:
             print(f"[bench-gate] {name}: {baseline[name][0]:.4g} -> "

@@ -5,8 +5,13 @@ perplexity)").
 We train a smoke LM to convergence-ish on structured synthetic data, then
 measure teacher-forced perplexity with (a) the fp (unquantized) forward,
 (b) the INT8 per-channel cache (paper-faithful), (c) the INT8 per-block
-cache, (d) packed INT4. The deltas quantify the paper's "minimal impact"
-claim at the *model output* level, not just the attention-score level.
+cache, and (d) the paged multi-precision backends (int8 / fp8_e4m3 /
+int4 page pools — DESIGN.md §9), every decode step reading history
+through the quantized pages. The deltas quantify the paper's "minimal
+impact" claim at the *model output* level, not just the attention-score
+level; the int4 delta is gated outright in
+benchmarks/check_regression.py (deterministic seeds, CPU math — the
+number is hardware-independent).
 """
 from __future__ import annotations
 
@@ -38,15 +43,40 @@ def _train_small(cfg, steps=60):
     return params, data
 
 
-def _ppl_via_decode(params, cfg, tokens, prefix: int = 1):
+def _map_identity_pages(state):
+    """Give every paged layer cache a dense identity page table (row b,
+    block j -> page 1 + b*nb + j) so the direct prefill/decode_step path
+    works outside the serving scheduler (which maps tables itself)."""
+    import repro.core.paging as PG
+
+    def one(c):
+        if not isinstance(c, PG.PagedQuantizedKVCache):
+            return c
+        tbl = c.page_table
+        B, nb = tbl.shape[-2], tbl.shape[-1]
+        ident = (1 + jnp.arange(B * nb, dtype=jnp.int32)).reshape(B, nb)
+        return dataclasses.replace(
+            c, page_table=jnp.broadcast_to(ident, tbl.shape))
+
+    return {k: ([one(c) for c in v] if isinstance(v, list) else one(v))
+            for k, v in state.items()}
+
+
+def _ppl_via_decode(params, cfg, tokens, prefix: int = 1, *,
+                    paged: bool = False, kv_cache_dtype: str = "int8"):
     """Teacher-forced NLL where every step's attention reads the quantized
     cache (decode path) — the deployment-accurate measurement.
 
     `prefix` = calibration prompt length: per-channel (paper) scales are
     computed once over this prefix and reused for all appended tokens, so
-    the result measures calibration sensitivity too."""
+    the result measures calibration sensitivity too. ``paged`` +
+    ``kv_cache_dtype`` route history through a multi-precision page pool
+    (identity-mapped tables) instead of the contiguous cache."""
     B, S = tokens.shape
-    state = T.init_decode_state(cfg, B, -(-S // 8) * 8 + 8)
+    state = T.init_decode_state(cfg, B, -(-S // 8) * 8 + 8, paged=paged,
+                                kv_cache_dtype=kv_cache_dtype)
+    if paged:
+        state = _map_identity_pages(state)
     nll = []
     if prefix > 1:
         logits, state = T.prefill(params, tokens[:, :prefix], cfg, state)
@@ -96,6 +126,15 @@ def run():
         rows.append({"bench": "perplexity", "config": name,
                      "ppl": _ppl_via_decode(params, cfg, eval_toks, prefix),
                      "_ref": fp_ppl(prefix)})
+    # paged multi-precision backends (DESIGN.md §9): page-aligned 24-token
+    # prefill, then every decode step reads history through the pool
+    pcfg = dataclasses.replace(base, quant=QuantConfig(
+        granularity="per_block", block_size=8))
+    for dt in ("int8", "fp8_e4m3", "int4"):
+        rows.append({"bench": "perplexity", "config": f"paged_{dt}",
+                     "ppl": _ppl_via_decode(params, pcfg, eval_toks, 24,
+                                            paged=True, kv_cache_dtype=dt),
+                     "_ref": fp_ppl(24)})
     for r in rows:
         r["delta_pct"] = 100.0 * (r["ppl"] - r["_ref"]) / r["_ref"]
     return rows

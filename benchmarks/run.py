@@ -34,6 +34,11 @@ def main() -> None:
     ap.add_argument("--json", action="store_true",
                     help="write the decode benchmark to BENCH_decode.json")
     ap.add_argument("--json-path", default="BENCH_decode.json")
+    ap.add_argument("--accuracy-json", action="store_true",
+                    help="run the bitwidth ablation + perplexity delta and "
+                         "write BENCH_accuracy.json (multi-precision "
+                         "accuracy gate inputs — DESIGN.md §9)")
+    ap.add_argument("--accuracy-json-path", default="BENCH_accuracy.json")
     args = ap.parse_args()
     failures = 0
     for name, mod in SUITES:
@@ -62,6 +67,21 @@ def main() -> None:
         except Exception as e:                        # pragma: no cover
             failures += 1
             print(f"{args.json_path},FAILED,{type(e).__name__}: {e}")
+    if args.accuracy_json:
+        try:
+            data = {
+                "bitwidth": bitwidth_ablation.run(),
+                "perplexity": [{k: v for k, v in r.items()
+                                if not k.startswith("_")}
+                               for r in perplexity_delta.run()],
+            }
+            with open(args.accuracy_json_path, "w") as f:
+                json.dump(data, f, indent=2)
+            print(f"# wrote {args.accuracy_json_path}")
+        except Exception as e:                        # pragma: no cover
+            failures += 1
+            print(f"{args.accuracy_json_path},FAILED,"
+                  f"{type(e).__name__}: {e}")
     sys.exit(1 if failures else 0)
 
 

@@ -431,37 +431,57 @@ def gather_pages(pool_kq, pool_ks, pool_vq, pool_vs, page_table):
     return gq(pool_kq), gs(pool_ks), gq(pool_vq), gs(pool_vs)
 
 
+def page_bytes_for(page_size: int, kv_heads: int, head_dim: int,
+                   kv_dtype: str = "int8") -> int:
+    """Storage cost of ONE page of ``kv_dtype``: K+V value slots (int4 packs
+    two tokens per byte) plus their f32 scale rows (DESIGN.md §9). Pure
+    arithmetic so reports can compare backends without building pools."""
+    ps_eff = Q.packed_tokens(page_size, kv_dtype)
+    itemsize = jnp.dtype(Q.kv_storage_dtype(kv_dtype)).itemsize
+    return 2 * (ps_eff * kv_heads * head_dim * itemsize
+                + kv_heads * head_dim * 4)
+
+
 @partial(jax.tree_util.register_dataclass,
          data_fields=["k_q", "v_q", "k_s", "v_s", "free_stack", "n_free"],
-         meta_fields=["page_size"])
+         meta_fields=["page_size", "kv_dtype"])
 @dataclasses.dataclass
 class PagePool:
     """Shared physical page storage + functional free-list allocator
-    (DESIGN.md §5): k_q/v_q int8 (n_pages, page_size, H_kv, D), k_s/v_s f32
-    (n_pages, H_kv, D) — one scale row per page — plus an int32 free stack.
-    Device-side pytree; allocation *policy* (refcounts, prefix caching)
-    lives in the host-side `HostPageAllocator` (DESIGN.md §7)."""
-    k_q: jax.Array          # int8 (n_pages, page_size, H_kv, D)
+    (DESIGN.md §5): k_q/v_q (n_pages, tokens_packed, H_kv, D) in the pool's
+    ``kv_dtype`` storage (int8 / fp8_e4m3 / int4-packed-in-int8 — DESIGN.md
+    §9; tokens_packed is page_size, or page_size // 2 for int4), k_s/v_s f32
+    (n_pages, H_kv, D) — one scale row per page, identical across backends —
+    plus an int32 free stack. ``kv_dtype`` is a *meta* field: it is part of
+    the pytree structure, so jitted functions retrace (never reuse a stale
+    trace) when a pool of a different precision flows in. Device-side
+    pytree; allocation *policy* (refcounts, prefix caching) lives in the
+    host-side `HostPageAllocator` (DESIGN.md §7)."""
+    k_q: jax.Array          # kv storage (n_pages, tokens_packed, H_kv, D)
     v_q: jax.Array
     k_s: jax.Array          # f32  (n_pages, H_kv, D)
     v_s: jax.Array
     free_stack: jax.Array   # int32 (n_pages,); entries [0, n_free) are free
     n_free: jax.Array       # int32 ()
     page_size: int
+    kv_dtype: str = "int8"
 
     @staticmethod
     def init(n_pages: int, page_size: int, kv_heads: int,
-             head_dim: int) -> "PagePool":
+             head_dim: int, kv_dtype: str = "int8") -> "PagePool":
         if n_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the sentinel)")
         if page_size % 8:
             raise ValueError(f"page_size must be a multiple of 8, got {page_size}")
-        z8 = jnp.zeros((n_pages, page_size, kv_heads, head_dim), jnp.int8)
+        ps_eff = Q.packed_tokens(page_size, kv_dtype)
+        zq = jnp.zeros((n_pages, ps_eff, kv_heads, head_dim),
+                       Q.kv_storage_dtype(kv_dtype))
         zs = jnp.full((n_pages, kv_heads, head_dim), Q._EPS, jnp.float32)
         # pages 1..n_pages-1 are allocatable; slot for the sentinel is unused
         stack = jnp.roll(jnp.arange(n_pages, dtype=jnp.int32), -1)
-        return PagePool(z8, jnp.zeros_like(z8), zs, jnp.copy(zs), stack,
-                        jnp.asarray(n_pages - 1, jnp.int32), page_size)
+        return PagePool(zq, jnp.zeros_like(zq), zs, jnp.copy(zs), stack,
+                        jnp.asarray(n_pages - 1, jnp.int32), page_size,
+                        kv_dtype)
 
     # -- allocator (functional, jit-safe; n is static) ---------------------
     def alloc(self, n: int) -> tuple["PagePool", jax.Array]:
@@ -499,8 +519,15 @@ class PagePool:
 
     @property
     def page_bytes(self) -> int:
-        """Storage cost of one page: K+V int8 slots plus their scale rows."""
+        """Storage cost of one page: K+V value slots (in this pool's
+        ``kv_dtype`` — int4 packs two tokens per byte) plus scale rows."""
         return self.memory_bytes // self.n_pages
+
+    @property
+    def tokens_packed(self) -> int:
+        """Storage rows per page along the token axis (page_size, or
+        page_size // 2 for the int4 backend — DESIGN.md §9)."""
+        return self.k_q.shape[1]
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -528,14 +555,15 @@ class PagedQuantizedKVCache:
     # -- constructors ------------------------------------------------------
     @staticmethod
     def init(batch: int, kv_heads: int, max_len: int, head_dim: int,
-             cfg: Q.QuantConfig, *, n_pages: int) -> "PagedQuantizedKVCache":
+             cfg: Q.QuantConfig, *, n_pages: int,
+             kv_dtype: str = "int8") -> "PagedQuantizedKVCache":
         if cfg.granularity != "per_block":
             raise ValueError("paged cache requires per_block quantization "
                              "(one scale row per page)")
         ps = cfg.block_size
         if max_len % ps:
             raise ValueError(f"max_len={max_len} not a multiple of page {ps}")
-        pool = PagePool.init(n_pages, ps, kv_heads, head_dim)
+        pool = PagePool.init(n_pages, ps, kv_heads, head_dim, kv_dtype)
         table = jnp.zeros((batch, max_len // ps), jnp.int32)
         resid = jnp.zeros((batch, kv_heads, ps, head_dim), cfg.ref_dtype)
         return PagedQuantizedKVCache(pool, table, resid, jnp.copy(resid),
@@ -545,6 +573,12 @@ class PagedQuantizedKVCache:
     @property
     def page_size(self) -> int:
         return self.pool.page_size
+
+    @property
+    def kv_dtype(self) -> str:
+        """The pool's page precision ∈ {int8, fp8_e4m3, int4} (DESIGN.md
+        §9). A *meta* field of the pool pytree, so it is static under jit."""
+        return self.pool.kv_dtype
 
     @property
     def block_size(self) -> int:     # interface parity with QuantizedKVCache
@@ -585,14 +619,16 @@ class PagedQuantizedKVCache:
         B, H, T, D = k.shape
         ps = self.page_size
         nb = T // ps
-        k_q, k_s = Q.quantize_blocked(k, ps)       # (B,H,T,D), (B,H,nb,D)
-        v_q, v_s = Q.quantize_blocked(v, ps)
+        kv_dtype = self.pool.kv_dtype
+        ps_eff = Q.packed_tokens(ps, kv_dtype)     # int4 packs 2 tokens/byte
+        k_q, k_s = Q.quantize_pages(k, ps, kv_dtype)   # (B,H,T_eff,D)
+        v_q, v_s = Q.quantize_pages(v, ps, kv_dtype)   # scales (B,H,nb,D)
         flat_ids = ids.reshape(-1)                 # (B*nb,)
 
         def to_pages(x_q):
-            # (B, H, T, D) -> (B*nb, ps, H, D)
-            xb = x_q.reshape(B, H, nb, ps, D).transpose(0, 2, 3, 1, 4)
-            return xb.reshape(B * nb, ps, H, D)
+            # (B, H, nb*ps_eff, D) -> (B*nb, ps_eff, H, D)
+            xb = x_q.reshape(B, H, nb, ps_eff, D).transpose(0, 2, 3, 1, 4)
+            return xb.reshape(B * nb, ps_eff, H, D)
 
         def scales_to_pages(s):
             # (B, H, nb, D) -> (B*nb, H, D)
@@ -744,8 +780,9 @@ class PagedQuantizedKVCache:
         full = off == ps - 1                        # (B,) rows flushing now
         if row_mask is not None:
             full &= row_mask
-        fq_k, fs_k = Q.quantize_matrix(resid_k)     # (B,H,ps,D), (B,H,D)
-        fq_v, fs_v = Q.quantize_matrix(resid_v)
+        kv_dtype = self.pool.kv_dtype               # (B,H,ps_eff,D), (B,H,D)
+        fq_k, fs_k = Q.quantize_page_matrix(resid_k, kv_dtype)
+        fq_v, fs_v = Q.quantize_page_matrix(resid_v, kv_dtype)
         pid = self.page_table[jnp.arange(B), blk]   # (B,)
         pid = jnp.where(full, pid, SENTINEL_PAGE)   # non-flushing -> sentinel
         pool = dataclasses.replace(
@@ -792,15 +829,16 @@ class PagedQuantizedKVCache:
         k_q, k_s, v_q, v_s = gather_pages(
             self.pool.k_q, self.pool.k_s, self.pool.v_q, self.pool.v_s,
             self.page_table[:, :n_blocks])
-        return (Q.dequantize_blocked(k_q, k_s, dtype=dtype),
-                Q.dequantize_blocked(v_q, v_s, dtype=dtype))
+        kv_dtype = self.pool.kv_dtype
+        return (Q.dequantize_pages(k_q, k_s, kv_dtype, dtype=dtype),
+                Q.dequantize_pages(v_q, v_s, kv_dtype, dtype=dtype))
 
     def dequantized(self, dtype=jnp.float32) -> tuple[jax.Array, jax.Array]:
         """Full cache in `dtype` with the exact residual tail overlaid
         (interface parity with QuantizedKVCache.dequantized)."""
         k_q, k_s, v_q, v_s = self.gathered()
-        k = Q.dequantize_blocked(k_q, k_s, dtype=dtype)
-        v = Q.dequantize_blocked(v_q, v_s, dtype=dtype)
+        k = Q.dequantize_pages(k_q, k_s, self.pool.kv_dtype, dtype=dtype)
+        v = Q.dequantize_pages(v_q, v_s, self.pool.kv_dtype, dtype=dtype)
         ps = self.page_size
         B, H, _, D = k.shape
         # per-row residual overlay: token t of row b is exact iff it sits in

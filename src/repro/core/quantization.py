@@ -23,6 +23,47 @@ QMAX = 127.0  # symmetric INT8 range [-127, 127]; -128 never emitted (paper §4.
 _EPS = 1e-30
 
 
+class QuantizationError(ValueError):
+    """A quantizer was handed a shape/dtype it cannot represent.
+
+    Raised instead of bare ``assert`` so the contract survives ``python -O``
+    and callers can catch it specifically (DESIGN.md §9)."""
+
+
+# Multi-precision KV page formats (DESIGN.md §9). Every format keeps the
+# paper's scale machinery (one f32 scale row per (page, channel)); only the
+# stored element changes:
+#   int8      — the paper's scheme, 1 byte/token/channel, qmax 127
+#   fp8_e4m3  — same bytes, non-uniform grid (qmax 448 = e4m3 max normal)
+#   int4      — two tokens per byte, nibble-interleaved along the token
+#               axis (token 2i -> low nibble of byte i, 2i+1 -> high)
+KV_DTYPES = ("int8", "fp8_e4m3", "int4")
+KV_QMAX = {"int8": QMAX, "fp8_e4m3": 448.0, "int4": 7.0}
+
+
+def kv_storage_dtype(kv_dtype: str):
+    """The array dtype a pool stores pages of ``kv_dtype`` in."""
+    if kv_dtype == "fp8_e4m3":
+        return jnp.float8_e4m3fn
+    if kv_dtype in ("int8", "int4"):
+        return jnp.int8
+    raise QuantizationError(f"unknown kv_cache_dtype {kv_dtype!r}; "
+                            f"expected one of {KV_DTYPES}")
+
+
+def packed_tokens(n_tokens: int, kv_dtype: str) -> int:
+    """Storage rows along the token axis for ``n_tokens`` logical tokens
+    (int4 packs two per byte; everything else is 1:1)."""
+    if kv_dtype == "int4":
+        if n_tokens % 2 != 0:
+            raise QuantizationError(
+                f"int4 page layout needs an even token count, got {n_tokens}"
+            )
+        return n_tokens // 2
+    kv_storage_dtype(kv_dtype)  # validates the name
+    return n_tokens
+
+
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
     """Configuration for KV-cache quantization.
@@ -213,25 +254,127 @@ def dequantize_fp8(q: jax.Array, scales: jax.Array,
     return (q.astype(jnp.float32) * scales[..., None, :]).astype(dtype)
 
 
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack int4-valued int8 tokens two-per-byte along the token axis.
+
+    Token 2i lands in the low nibble of byte i, token 2i+1 in the high
+    nibble (DESIGN.md §9). The token axis (second-to-last) must be even —
+    pad with a zero token first for odd counts (``quantize_int4`` does)."""
+    *lead, T, D = q.shape
+    if T % 2 != 0:
+        raise QuantizationError(f"pack_int4 needs an even token count, "
+                                f"got T={T}")
+    lo = q[..., 0::2, :] & 0x0F
+    hi = (q[..., 1::2, :] & 0x0F) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of ``pack_int4``: (..., T//2, D) bytes -> (..., T, D) int8
+    tokens in original order, sign-extended via arithmetic shifts (a logical
+    shift would corrupt every negative nibble)."""
+    *lead, Th, D = packed.shape
+    lo = (packed << 4) >> 4            # sign-extend low nibble (arith shift)
+    hi = packed >> 4                   # arithmetic shift keeps sign
+    return jnp.stack([lo, hi], axis=-2).reshape(*lead, 2 * Th, D)
+
+
 def quantize_int4(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Per-channel symmetric INT4 packed two-per-byte: 8x memory vs FP32.
 
-    Range ±7; even-index values in the low nibble. T must be even."""
+    Range ±7; even-index tokens in the low nibble. Odd token counts (a
+    varlen chunk's partial page tail) are defined: scales are computed over
+    the REAL tokens only, then one zero pad token fills the final byte's
+    high nibble — ``dequantize_int4`` returns ``2*ceil(T/2)`` tokens and
+    the caller slices back to T (the pad dequantizes to exactly 0.0, so an
+    unsliced read is harmless in masked attention). Raises
+    ``QuantizationError`` for shapes that cannot hold tokens at all."""
+    if x.ndim < 2:
+        raise QuantizationError(f"quantize_int4 needs (..., T, D), got "
+                                f"shape {x.shape}")
     *lead, T, D = x.shape
-    assert T % 2 == 0, "int4 packing needs even T"
+    if T == 0:
+        raise QuantizationError("quantize_int4 needs at least one token "
+                                f"(T=0 in shape {x.shape})")
     scales = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-2),
                          _EPS) / 7.0
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scales[..., None, :]),
                  -7, 7).astype(jnp.int8)
-    lo = q[..., 0::2, :] & 0x0F
-    hi = (q[..., 1::2, :] & 0x0F) << 4
-    return (lo | hi).astype(jnp.int8), scales
+    if T % 2 != 0:
+        q = jnp.concatenate(
+            [q, jnp.zeros((*lead, 1, D), jnp.int8)], axis=-2)
+    return pack_int4(q), scales
 
 
 def dequantize_int4(packed: jax.Array, scales: jax.Array,
                     dtype=jnp.float32) -> jax.Array:
-    *lead, Th, D = packed.shape
-    lo = (packed << 4) >> 4            # sign-extend low nibble (arith shift)
-    hi = packed >> 4                   # arithmetic shift keeps sign
-    q = jnp.stack([lo, hi], axis=-2).reshape(*lead, 2 * Th, D)
+    q = unpack_int4(packed)
     return (q.astype(jnp.float32) * scales[..., None, :]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dtype-generic page quantizers (DESIGN.md §9). The paged cache and both
+# fused kernels' XLA twins share these; int8 delegates to the paper-faithful
+# functions above so the default backend stays BITWISE-identical.
+# ---------------------------------------------------------------------------
+
+def quantize_pages(x: jax.Array, block_size: int,
+                   kv_dtype: str = "int8") -> tuple[jax.Array, jax.Array]:
+    """Quantize (..., T, D) with one scale row per (token-block, channel)
+    into ``kv_dtype`` page storage.
+
+    Returns (packed values, f32 scales (..., T//block_size, D)). The packed
+    token axis is T for int8/fp8 and T//2 for int4 (two tokens per byte)."""
+    if kv_dtype == "int8":
+        return quantize_blocked(x, block_size)
+    *lead, T, D = x.shape
+    if T % block_size != 0:
+        raise QuantizationError(
+            f"T={T} not a multiple of block_size={block_size}")
+    nb = T // block_size
+    xb = x.reshape(*lead, nb, block_size, D).astype(jnp.float32)
+    qmax = KV_QMAX[kv_dtype] if kv_dtype in KV_QMAX else None
+    if qmax is None:
+        raise QuantizationError(f"unknown kv_cache_dtype {kv_dtype!r}; "
+                                f"expected one of {KV_DTYPES}")
+    scales = jnp.maximum(jnp.max(jnp.abs(xb), axis=-2), _EPS) / qmax
+    if kv_dtype == "fp8_e4m3":
+        q = (xb / scales[..., None, :]).astype(jnp.float8_e4m3fn)
+        return q.reshape(*lead, T, D), scales
+    # int4: round/clip to the 15-level grid, then nibble-pack each block
+    packed_tokens(block_size, "int4")   # even-block guard (typed raise)
+    q = jnp.clip(jnp.round(xb / scales[..., None, :]), -7, 7).astype(jnp.int8)
+    return pack_int4(q).reshape(*lead, T // 2, D), scales
+
+
+def dequantize_pages(q: jax.Array, scales: jax.Array,
+                     kv_dtype: str = "int8", *,
+                     dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Inverse of ``quantize_pages`` (lossy for the values, exact layout)."""
+    if kv_dtype == "int8":
+        return dequantize_blocked(q, scales, dtype=dtype)
+    kv_storage_dtype(kv_dtype)          # validates the name
+    if kv_dtype == "int4":
+        q = unpack_int4(q)
+    *lead, T, D = q.shape
+    nb = scales.shape[-2]
+    xb = q.reshape(*lead, nb, T // nb, D).astype(jnp.float32)
+    out = xb * scales[..., None, :].astype(jnp.float32)
+    return out.reshape(*lead, T, D).astype(dtype)
+
+
+def quantize_page_matrix(x: jax.Array,
+                         kv_dtype: str = "int8") -> tuple[jax.Array,
+                                                          jax.Array]:
+    """Per-channel quantization of one full page (..., page_size, D) into
+    ``kv_dtype`` storage — the ``append`` flush path. int8 delegates to
+    ``quantize_matrix`` (bitwise-identical to the pre-multi-precision
+    flush); scales come back as (..., D)."""
+    if kv_dtype == "int8":
+        return quantize_matrix(x)
+    if kv_dtype == "fp8_e4m3":
+        return quantize_fp8(x)
+    if kv_dtype == "int4":
+        return quantize_int4(x)
+    raise QuantizationError(f"unknown kv_cache_dtype {kv_dtype!r}; "
+                            f"expected one of {KV_DTYPES}")

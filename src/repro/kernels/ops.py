@@ -27,6 +27,19 @@ from repro.kernels import ref as _ref
 Impl = Literal["auto", "xla", "pallas", "pallas_interpret"]
 
 
+def _unpack_int4_axis(q: jax.Array, axis: int) -> jax.Array:
+    """Nibble-unpack a packed-int4 array along `axis` (byte rows -> 2 token
+    rows, low nibble first), sign-extending via arithmetic shifts. Pure jnp
+    twin of the in-kernel unpack in quant_attention.page_dequant."""
+    lo = (q << 4) >> 4
+    hi = q >> 4
+    axis = axis % q.ndim
+    st = jnp.stack([lo, hi], axis=axis + 1)
+    shape = list(q.shape)
+    shape[axis] *= 2
+    return st.reshape(shape)
+
+
 def resolve_impl(impl: Impl = "auto") -> str:
     if impl != "auto":
         return impl
@@ -101,10 +114,13 @@ def quant_attention_decode_partials(q, k_q, k_s, v_q, v_s, length, *,
 
 def paged_attention_decode_partials(q, pool_kq, pool_ks, pool_vq, pool_vs,
                                     page_table, lengths, *,
+                                    kv_dtype: str = "int8",
                                     impl: Impl = "auto"):
-    """Flash partials over an INT8 page pool through per-row page tables.
+    """Flash partials over a quantized page pool through per-row page tables.
 
-    q (B, H, D); pool_kq/vq (P, ps, Hkv, D) int8; pool_ks/vs (P, Hkv, D) f32;
+    q (B, H, D); pool_kq/vq (P, ps_packed, Hkv, D) in ``kv_dtype`` storage
+    (int8 / fp8_e4m3 / int4-packed, where int4 packs two tokens per byte so
+    ps_packed = ps // 2 — DESIGN.md §9); pool_ks/vs (P, Hkv, D) f32;
     page_table (B, NT) int32; lengths (B,) int32 — per-row valid tokens
     (pass the flushed prefix count; the residual tail merges separately).
     Lengths also bound each row's page walk: the kernel never streams pages
@@ -116,27 +132,36 @@ def paged_attention_decode_partials(q, pool_kq, pool_ks, pool_vq, pool_vs,
         from repro.core.paging import gather_pages
         k_q, k_s, v_q, v_s = gather_pages(
             pool_kq, pool_ks, pool_vq, pool_vs, page_table)
+        if kv_dtype == "int4":
+            # gathered packed bytes concatenate page-contiguously, so one
+            # unpack of the token axis restores logical token order
+            k_q = _unpack_int4_axis(k_q, -2)
+            v_q = _unpack_int4_axis(v_q, -2)
         return _decode_partials_xla(q, k_q, k_s, v_q, v_s, lengths, None)
     return _qa.paged_attention_decode_partials(
         q, pool_kq, pool_ks, pool_vq, pool_vs, page_table, lengths,
-        interpret=impl == "pallas_interpret")
+        kv_dtype=kv_dtype, interpret=impl == "pallas_interpret")
 
 
 def paged_attention_decode(q, pool_kq, pool_ks, pool_vq, pool_vs, page_table,
-                           lengths, *, impl: Impl = "auto"):
+                           lengths, *, kv_dtype: str = "int8",
+                           impl: Impl = "auto"):
     """Normalized paged decode attention: (B, H, D) f32."""
     o, m, l = paged_attention_decode_partials(
-        q, pool_kq, pool_ks, pool_vq, pool_vs, page_table, lengths, impl=impl)
+        q, pool_kq, pool_ks, pool_vq, pool_vs, page_table, lengths,
+        kv_dtype=kv_dtype, impl=impl)
     return o / jnp.maximum(l, 1e-30)
 
 
 def paged_attention_prefill(q, k, v, pool_kq, pool_ks, pool_vq, pool_vs,
                             page_table, hist_len, valid=None, *,
-                            hist_blocks: int, impl: Impl = "auto"):
-    """Fused varlen chunk-prefill attention over the INT8 page pool.
+                            hist_blocks: int, kv_dtype: str = "int8",
+                            impl: Impl = "auto"):
+    """Fused varlen chunk-prefill attention over the quantized page pool.
 
     q (B, H, C, D) chunk queries; k/v (B, Hkv, C, D) the chunk's own fp
-    K/V; pool_kq/vq (P, ps, Hkv, D) int8; pool_ks/vs (P, Hkv, D) f32;
+    K/V; pool_kq/vq (P, ps_packed, Hkv, D) in ``kv_dtype`` storage
+    (int8 / fp8_e4m3 / int4-packed); pool_ks/vs (P, Hkv, D) f32;
     page_table (B, NT) int32; hist_len (B,) int32 per-row resident history
     (page-aligned); valid (B,) int32 per-row true chunk tokens (None = C).
     `hist_blocks` (static) bounds the history walk to the dispatch group's
@@ -154,14 +179,15 @@ def paged_attention_prefill(q, k, v, pool_kq, pool_ks, pool_vq, pool_vs,
     if impl == "xla":
         return _prefill_fused_xla(q, k, v, pool_kq, pool_ks, pool_vq,
                                   pool_vs, page_table, hist_len, valid,
-                                  hist_blocks)
+                                  hist_blocks, kv_dtype)
     return _qp.paged_attention_prefill(
         q, k, v, pool_kq, pool_ks, pool_vq, pool_vs, page_table, hist_len,
-        valid, hist_blocks=hist_blocks,
+        valid, hist_blocks=hist_blocks, kv_dtype=kv_dtype,
         interpret=impl == "pallas_interpret")
 
 
-def _hist_partials(qg, pool_kq, pool_ks, pool_vq, pool_vs, tbl, hist_len):
+def _hist_partials(qg, pool_kq, pool_ks, pool_vq, pool_vs, kv_dtype, tbl,
+                   hist_len):
     """Flash partials (o, s, m) of chunk queries over `tbl`'s history pages.
 
     Pages keep their native (nb, ps, Hkv, D) layout — dequant multiplies
@@ -172,9 +198,13 @@ def _hist_partials(qg, pool_kq, pool_ks, pool_vq, pool_vs, tbl, hist_len):
     has any live position (m finite), and a fully-masked row (cursor 0
     inside a deep-history dispatch) keeps m == -1e30 so the caller's merge
     weight exp(m - mx) zeroes its entire contribution."""
-    kh = pool_kq[tbl].astype(jnp.float32) * \
+    kq, vq = pool_kq[tbl], pool_vq[tbl]                # (B, nb, ps_eff, Hkv, D)
+    if kv_dtype == "int4":
+        kq = _unpack_int4_axis(kq, 2)                  # token axis is 2 here
+        vq = _unpack_int4_axis(vq, 2)
+    kh = kq.astype(jnp.float32) * \
         pool_ks[tbl][:, :, None].astype(jnp.float32)   # (B, nb, ps, Hkv, D)
-    vh = pool_vq[tbl].astype(jnp.float32) * \
+    vh = vq.astype(jnp.float32) * \
         pool_vs[tbl][:, :, None].astype(jnp.float32)
     nb, ps = kh.shape[1], kh.shape[2]
     lh = jnp.einsum("bhgcd,bnphd->bhgcnp", qg, kh)
@@ -191,7 +221,8 @@ def _hist_partials(qg, pool_kq, pool_ks, pool_vq, pool_vs, tbl, hist_len):
 
 
 def _prefill_fused_xla(q, k, v, pool_kq, pool_ks, pool_vq, pool_vs,
-                       page_table, hist_len, valid, hist_blocks):
+                       page_table, hist_len, valid, hist_blocks,
+                       kv_dtype="int8"):
     """XLA twin of the fused prefill kernel: f32 split history/chunk flash
     partials merged once — no (HT+C)-wide concat softmax, no transposes of
     the gathered pages, and the Pallas kernel's dead-block DMA skip
@@ -225,7 +256,7 @@ def _prefill_fused_xla(q, k, v, pool_kq, pool_ks, pool_vq, pool_vs,
     if hist_blocks == 0:
         out = oc / jnp.maximum(sc, 1e-30)
         return out.reshape(B, H, C, D)
-    ps = pool_kq.shape[1]
+    ps = pool_kq.shape[1] * (2 if kv_dtype == "int4" else 1)  # logical tokens
     hist_len = jnp.asarray(hist_len, jnp.int32)
     # dead-block skip, XLA edition: pick the smallest ladder rung covering
     # ceil(max(hist_len) / ps) and run the history partials at that static
@@ -234,7 +265,8 @@ def _prefill_fused_xla(q, k, v, pool_kq, pool_ks, pool_vq, pool_vs,
     # in the serving default), so uniform-cursor dispatches — the steady
     # state — run zero dead blocks.
     rungs = sorted(set(range(4, hist_blocks, 4)) | {hist_blocks})
-    hist = partial(_hist_partials, qg, pool_kq, pool_ks, pool_vq, pool_vs)
+    hist = partial(_hist_partials, qg, pool_kq, pool_ks, pool_vq, pool_vs,
+                   kv_dtype)
     if len(rungs) == 1:
         oh, sh, mxh = hist(page_table[:, :hist_blocks], hist_len)
     else:

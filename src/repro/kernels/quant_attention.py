@@ -377,9 +377,26 @@ def quant_attention_decode_partials_vmap(q, k_q, k_s, v_q, v_s, length, *,
 # stream the page-table tail (nor the sentinel page).
 # ---------------------------------------------------------------------------
 
+def page_dequant(q_tile, scale_row, kv_dtype: str, page_size: int):
+    """Dequantize one streamed page tile inside a kernel (DESIGN.md §9):
+    ``q_tile`` (ps_packed, D) in the pool's storage dtype, ``scale_row``
+    (1, D) f32. int8/fp8 cast straight to f32; int4 sign-extends both
+    nibbles via arithmetic shifts and interleaves them back to token order
+    (token 2i = low nibble of byte i, 2i+1 = high). Returns (page_size, D)
+    f32. Plain jnp ops, so the same code serves Pallas kernel bodies and
+    the XLA twins."""
+    if kv_dtype == "int4":
+        lo = (q_tile << 4) >> 4          # sign-extend low nibble (arith shift)
+        hi = q_tile >> 4                 # arithmetic shift keeps sign
+        q_tile = jnp.stack([lo, hi], axis=1).reshape(page_size,
+                                                     q_tile.shape[-1])
+    return q_tile.astype(jnp.float32) * scale_row.astype(jnp.float32)
+
+
 def _paged_decode_kernel(pt_ref, len_ref, q_ref, kq_ref, ks_ref, vq_ref,
                          vs_ref, o_ref, m_ref, l_ref,
-                         m_scr, l_scr, acc_scr, *, page_size: int):
+                         m_scr, l_scr, acc_scr, *, page_size: int,
+                         kv_dtype: str):
     b = pl.program_id(0)
     t = pl.program_id(2)
     nt = pl.num_programs(2)
@@ -395,10 +412,8 @@ def _paged_decode_kernel(pt_ref, len_ref, q_ref, kq_ref, ks_ref, vq_ref,
 
     @pl.when(t * page_size < length)     # dead page: DMA clamped + no compute
     def _step():
-        k = kq_ref[0, :, 0, :].astype(jnp.float32) * \
-            ks_ref[0].astype(jnp.float32)    # (ps, D) * (1, D)
-        v = vq_ref[0, :, 0, :].astype(jnp.float32) * \
-            vs_ref[0].astype(jnp.float32)
+        k = page_dequant(kq_ref[0, :, 0, :], ks_ref[0], kv_dtype, page_size)
+        v = page_dequant(vq_ref[0, :, 0, :], vs_ref[0], kv_dtype, page_size)
         _attn_update(q_ref[0, 0].astype(jnp.float32), k, v, t * page_size,
                      length, length, max_len, max_len, m_scr, l_scr, acc_scr)
 
@@ -409,14 +424,18 @@ def _paged_decode_kernel(pt_ref, len_ref, q_ref, kq_ref, ks_ref, vq_ref,
         l_ref[0, 0] = l_scr[...]
 
 
-@functools.partial(jax.jit, static_argnames=("skip_dead", "interpret"))
+@functools.partial(jax.jit, static_argnames=("skip_dead", "interpret",
+                                             "kv_dtype"))
 def _paged_decode(qg, pool_kq, pool_ks, pool_vq, pool_vs, page_table,
-                  lengths, *, skip_dead: bool = True, interpret: bool = True):
-    """qg (B, Hkv, Gp, D); pool_* (P, ps, Hkv, D) int8 / (P, Hkv, D) f32;
-    page_table (B, NT) int32; lengths (B,) int32.
+                  lengths, *, skip_dead: bool = True, interpret: bool = True,
+                  kv_dtype: str = "int8"):
+    """qg (B, Hkv, Gp, D); pool_* (P, ps_packed, Hkv, D) in the pool's
+    storage dtype (int8 / fp8_e4m3 / int4-packed: ps_packed = ps // 2) /
+    (P, Hkv, D) f32 scales; page_table (B, NT) int32; lengths (B,) int32.
     Returns (o (B, Hkv, Gp, D), m (B, Hkv, Gp, 1), l (B, Hkv, Gp, 1))."""
     B, Hkv, Gp, D = qg.shape
-    _, ps, _, _ = pool_kq.shape
+    _, ps_eff, _, _ = pool_kq.shape      # packed token rows per page
+    ps = 2 * ps_eff if kv_dtype == "int4" else ps_eff   # logical tokens
     NT = page_table.shape[1]
     if skip_dead:
         # bound the logical-block walk by the row's live page count: the
@@ -425,20 +444,21 @@ def _paged_decode(qg, pool_kq, pool_ks, pool_vq, pool_vs, page_table,
         t_idx = lambda t, ln: _dead_clamp(t, ln, ps, NT * ps)
     else:
         t_idx = lambda t, ln: t
-    kernel = functools.partial(_paged_decode_kernel, page_size=ps)
+    kernel = functools.partial(_paged_decode_kernel, page_size=ps,
+                               kv_dtype=kv_dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,               # page table + lengths in SMEM
         grid=(B, Hkv, NT),
         in_specs=[
             pl.BlockSpec((1, 1, Gp, D), lambda b, h, t, pt, ln: (b, h, 0, 0)),
             # physical page gather: logical block t of row b -> pt[b, t]
-            pl.BlockSpec((1, ps, 1, D),
+            pl.BlockSpec((1, ps_eff, 1, D),
                          lambda b, h, t, pt, ln:
                          (pt[b, t_idx(t, ln[b])], 0, h, 0)),
             pl.BlockSpec((1, 1, D),
                          lambda b, h, t, pt, ln:
                          (pt[b, t_idx(t, ln[b])], h, 0)),
-            pl.BlockSpec((1, ps, 1, D),
+            pl.BlockSpec((1, ps_eff, 1, D),
                          lambda b, h, t, pt, ln:
                          (pt[b, t_idx(t, ln[b])], 0, h, 0)),
             pl.BlockSpec((1, 1, D),
@@ -470,19 +490,21 @@ def _paged_decode(qg, pool_kq, pool_ks, pool_vq, pool_vs, page_table,
 def paged_attention_decode_partials(q, pool_kq, pool_ks, pool_vq, pool_vs,
                                     page_table, lengths, *,
                                     skip_dead: bool = True,
-                                    interpret: bool = True):
-    """Batched paged decode partials: q (B, H, D) over an INT8 page pool
-    (P, ps, Hkv, D) through per-row page tables (B, NT). `lengths` (B,) masks
-    each row independently (pass the *flushed* prefix count; the fp residual
-    tail is merged by the caller) and bounds each row's page walk
-    (`skip_dead`). Returns (o_unnormalized (B, H, D), m (B, H, 1),
-    l (B, H, 1))."""
+                                    interpret: bool = True,
+                                    kv_dtype: str = "int8"):
+    """Batched paged decode partials: q (B, H, D) over a page pool
+    (P, ps_packed, Hkv, D) in ``kv_dtype`` storage (int8 / fp8_e4m3 /
+    int4-packed — DESIGN.md §9) through per-row page tables (B, NT).
+    `lengths` (B,) masks each row independently (pass the *flushed* prefix
+    count; the fp residual tail is merged by the caller) and bounds each
+    row's page walk (`skip_dead`). Returns (o_unnormalized (B, H, D),
+    m (B, H, 1), l (B, H, 1))."""
     B, H, D = q.shape
     Hkv = pool_kq.shape[2]
     qg, G = _group_queries(q, Hkv)
     lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
     o, m, l = _paged_decode(qg, pool_kq, pool_ks, pool_vq, pool_vs,
                             page_table, lengths, skip_dead=skip_dead,
-                            interpret=interpret)
+                            interpret=interpret, kv_dtype=kv_dtype)
     trim = lambda a: a[:, :, :G].reshape(B, H, a.shape[-1])
     return trim(o), trim(m), trim(l)

@@ -42,7 +42,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.quant_attention import _dead_clamp
+from repro.kernels.quant_attention import _dead_clamp, page_dequant
 
 _NEG_INF = -1e30
 
@@ -62,7 +62,8 @@ def _update(logits, mask, v, m_scr, l_scr, acc_scr):
 
 def _prefill_kernel(pt_ref, hl_ref, vd_ref, q_ref, kc_ref, vc_ref,
                     kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
-                    m_scr, l_scr, acc_scr, *, page_size: int, chunk: int):
+                    m_scr, l_scr, acc_scr, *, page_size: int, chunk: int,
+                    kv_dtype: str):
     b = pl.program_id(0)
     t = pl.program_id(2)
     nt = pl.num_programs(2)          # NT history steps + 1 chunk step
@@ -76,13 +77,12 @@ def _prefill_kernel(pt_ref, hl_ref, vd_ref, q_ref, kc_ref, vc_ref,
     hist_len = hl_ref[b]             # this row's resident history tokens
     valid = vd_ref[b]                # this row's true tokens in the chunk
 
-    # -- history step: one INT8 page, dequantized in VMEM ------------------
+    # -- history step: one quantized page, dequantized in VMEM -------------
+    # (int8 / fp8 cast, int4 nibble-unpack — DESIGN.md §9)
     @pl.when(jnp.logical_and(t < nt - 1, t * page_size < hist_len))
     def _hist():                     # dead page: DMA clamped + no compute
-        k = kq_ref[0, :, 0, :].astype(jnp.float32) * \
-            ks_ref[0].astype(jnp.float32)        # (ps, D) * (1, D)
-        v = vq_ref[0, :, 0, :].astype(jnp.float32) * \
-            vs_ref[0].astype(jnp.float32)
+        k = page_dequant(kq_ref[0, :, 0, :], ks_ref[0], kv_dtype, page_size)
+        v = page_dequant(vq_ref[0, :, 0, :], vs_ref[0], kv_dtype, page_size)
         logits = jax.lax.dot_general(            # (GC, ps)
             q_ref[0, 0], k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -109,17 +109,20 @@ def _prefill_kernel(pt_ref, hl_ref, vd_ref, q_ref, kc_ref, vc_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("hist_blocks", "skip_dead",
-                                             "interpret"))
+                                             "interpret", "kv_dtype"))
 def _paged_prefill(qg, kc, vc, pool_kq, pool_ks, pool_vq, pool_vs,
                    page_table, hist_len, valid, *, hist_blocks: int,
-                   skip_dead: bool = True, interpret: bool = True):
+                   skip_dead: bool = True, interpret: bool = True,
+                   kv_dtype: str = "int8"):
     """qg (B, Hkv, G*C, D) f32 pre-scaled queries; kc/vc (B, Hkv, C, D) f32
-    chunk K/V; pool_* (P, ps, Hkv, D) int8 / (P, Hkv, D) f32; page_table
+    chunk K/V; pool_* (P, ps_packed, Hkv, D) in ``kv_dtype`` storage
+    (int4: ps_packed = ps // 2) / (P, Hkv, D) f32 scales; page_table
     (B, >=max(hist_blocks, 1)) int32; hist_len/valid (B,) int32.
     Returns normalized (B, Hkv, G*C, D) f32."""
     B, Hkv, GC, D = qg.shape
     C = kc.shape[2]
-    _, ps, _, _ = pool_kq.shape
+    _, ps_eff, _, _ = pool_kq.shape      # packed token rows per page
+    ps = 2 * ps_eff if kv_dtype == "int4" else ps_eff   # logical tokens
     NT = hist_blocks
     pt = page_table[:, :max(NT, 1)]
     if skip_dead:
@@ -130,7 +133,8 @@ def _paged_prefill(qg, kc, vc, pool_kq, pool_ks, pool_vq, pool_vs,
     # pipeline issues no DMA for the unused pool tiles on the final step
     p_idx = lambda t, ln: t_idx(jnp.minimum(t, max(NT - 1, 0)), ln)
 
-    kernel = functools.partial(_prefill_kernel, page_size=ps, chunk=C)
+    kernel = functools.partial(_prefill_kernel, page_size=ps, chunk=C,
+                               kv_dtype=kv_dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,       # page table + hist lens + valids (SMEM)
         grid=(B, Hkv, NT + 1),
@@ -142,13 +146,13 @@ def _paged_prefill(qg, kc, vc, pool_kq, pool_ks, pool_vq, pool_vs,
             pl.BlockSpec((1, 1, C, D),
                          lambda b, h, t, pt, hl, vd: (b, h, 0, 0)),
             # physical page gather: logical history block t -> pt[b, t]
-            pl.BlockSpec((1, ps, 1, D),
+            pl.BlockSpec((1, ps_eff, 1, D),
                          lambda b, h, t, pt, hl, vd:
                          (pt[b, p_idx(t, hl[b])], 0, h, 0)),
             pl.BlockSpec((1, 1, D),
                          lambda b, h, t, pt, hl, vd:
                          (pt[b, p_idx(t, hl[b])], h, 0)),
-            pl.BlockSpec((1, ps, 1, D),
+            pl.BlockSpec((1, ps_eff, 1, D),
                          lambda b, h, t, pt, hl, vd:
                          (pt[b, p_idx(t, hl[b])], 0, h, 0)),
             pl.BlockSpec((1, 1, D),
@@ -176,17 +180,18 @@ def _paged_prefill(qg, kc, vc, pool_kq, pool_ks, pool_vq, pool_vs,
 def paged_attention_prefill(q, k, v, pool_kq, pool_ks, pool_vq, pool_vs,
                             page_table, hist_len, valid=None, *,
                             hist_blocks: int, skip_dead: bool = True,
-                            interpret: bool = True):
-    """Fused varlen chunk-prefill attention over an INT8 page pool.
+                            interpret: bool = True, kv_dtype: str = "int8"):
+    """Fused varlen chunk-prefill attention over a quantized page pool.
 
     q (B, H, C, D) chunk queries; k/v (B, Hkv, C, D) the chunk's own fp
-    K/V; pool_* (P, ps, Hkv, D) int8 / (P, Hkv, D) f32; page_table (B, NT)
-    int32; hist_len (B,) int32 resident history tokens per row
-    (page-aligned); valid (B,) int32 true chunk tokens per row (None = C).
-    `hist_blocks` (static) bounds the history walk — ONE pallas_call over
-    a (B, Hkv, hist_blocks + 1) grid serves the whole dispatch.
-    Returns normalized (B, H, C, D) f32; outputs at query positions past
-    `valid` are garbage the caller discards."""
+    K/V; pool_* (P, ps_packed, Hkv, D) in ``kv_dtype`` storage (int8 /
+    fp8_e4m3 / int4-packed — DESIGN.md §9) / (P, Hkv, D) f32 scales;
+    page_table (B, NT) int32; hist_len (B,) int32 resident history tokens
+    per row (page-aligned); valid (B,) int32 true chunk tokens per row
+    (None = C). `hist_blocks` (static) bounds the history walk — ONE
+    pallas_call over a (B, Hkv, hist_blocks + 1) grid serves the whole
+    dispatch. Returns normalized (B, H, C, D) f32; outputs at query
+    positions past `valid` are garbage the caller discards."""
     B, H, C, D = q.shape
     Hkv = k.shape[1]
     G = H // Hkv
@@ -199,7 +204,8 @@ def paged_attention_prefill(q, k, v, pool_kq, pool_ks, pool_vq, pool_vs,
     out = _paged_prefill(qg, k.astype(jnp.float32), v.astype(jnp.float32),
                          pool_kq, pool_ks, pool_vq, pool_vs, page_table,
                          hist_len, valid, hist_blocks=hist_blocks,
-                         skip_dead=skip_dead, interpret=interpret)
+                         skip_dead=skip_dead, interpret=interpret,
+                         kv_dtype=kv_dtype)
     return out.reshape(B, H, C, D)
 
 

@@ -45,6 +45,14 @@ def main(argv=None):
                          "long prompts interleave with decode ticks and "
                          "the final partial chunk carries a per-row valid "
                          "length (implies --paged)")
+    ap.add_argument("--kv-cache-dtype", default="int8",
+                    choices=["int8", "fp8_e4m3", "int4"],
+                    help="page-pool storage format (DESIGN.md §9): int8 "
+                         "(the paper's format, default), fp8_e4m3, or "
+                         "int4 (two tokens per byte — ~1.9x pages per "
+                         "pool at equal HBM). Per-page f32 scales stream "
+                         "identically for every format; non-int8 implies "
+                         "--paged")
     ap.add_argument("--watermark", type=int, default=None,
                     help="optimistic admission: reserve only the prompt's "
                          "pages plus this many pages of decode headroom "
@@ -79,7 +87,8 @@ def main(argv=None):
                          "tokenizer configured, token id T renders as "
                          "'<T>'")
     args = ap.parse_args(argv)
-    if args.prefix_cache or args.prefill_chunk or args.watermark is not None:
+    if (args.prefix_cache or args.prefill_chunk
+            or args.watermark is not None or args.kv_cache_dtype != "int8"):
         args.paged = True
 
     import jax
@@ -101,7 +110,8 @@ def main(argv=None):
         batch=args.batch, max_len=args.max_len, paged=args.paged,
         n_pages=args.pages, chunk=args.chunk,
         prefix_cache=args.prefix_cache, prefill_chunk=args.prefill_chunk,
-        watermark=args.watermark, aging_ticks=args.aging_ticks))
+        watermark=args.watermark, aging_ticks=args.aging_ticks,
+        kv_cache_dtype=args.kv_cache_dtype))
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab,
                            (args.prompt_len,)).astype(np.int32)
@@ -129,8 +139,10 @@ def main(argv=None):
           f"TTFT p50/p90/p99 = {rep['ttft_s_p50']*1e3:.0f}/"
           f"{rep['ttft_s_p90']*1e3:.0f}/{rep['ttft_s_p99']*1e3:.0f} ms")
     if args.paged:
-        print(f"[serve] page pool: {rep['pages_total']} pages, "
-              f"{rep['pages_free']} free after drain, "
+        print(f"[serve] page pool: {rep['pages_total']} pages "
+              f"({rep['kv_cache_dtype']}, "
+              f"{rep['pages_vs_int8_equal_hbm']:.2f}x pages vs int8 at "
+              f"equal HBM), {rep['pages_free']} free after drain, "
               f"{rep['pages_cached']} cached")
         if args.watermark is not None:
             resumes = (rep['preempt_fast_resumes']

@@ -228,7 +228,7 @@ def prefill_chunk(p, x, cfg: ModelConfig, positions, cache, *, row_mask=None,
         out = ops.paged_attention_prefill(
             q, k, v, cache.pool.k_q, cache.pool.k_s, cache.pool.v_q,
             cache.pool.v_s, cache.page_table, hist_len, valid,
-            hist_blocks=nb, impl=impl)
+            hist_blocks=nb, kv_dtype=cache.pool.kv_dtype, impl=impl)
     else:
         hk = hv = None
         if nb:
@@ -345,7 +345,7 @@ def _decode_paged(q, cache: PG.PagedQuantizedKVCache, *, impl="auto"):
     n_tail = cache.length % ps
     o1, m1, l1 = ops.paged_attention_decode_partials(
         q, cache.pool.k_q, cache.pool.k_s, cache.pool.v_q, cache.pool.v_s,
-        cache.page_table, flushed, impl=impl)
+        cache.page_table, flushed, kv_dtype=cache.pool.kv_dtype, impl=impl)
     m2, l2, o2 = _decode_partials_fp(q, cache.resid_k, cache.resid_v, n_tail)
     return _merge_partials(o1, m1, l1, o2, m2, l2)
 

@@ -198,7 +198,8 @@ def _head(params, x, cfg: ModelConfig):
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
                       state_quant: bool = True, *, paged: bool = False,
-                      n_pages: int | None = None):
+                      n_pages: int | None = None,
+                      kv_cache_dtype: str = "int8"):
     """Stacked caches: state["p{i}"] has leading dim n_groups; state["tail"]
     is a list of unstacked caches.
 
@@ -208,6 +209,10 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
     restricted to pure-attention stacks without sliding windows.
     """
     period, n_groups, tail = _pattern_layout(cfg)
+    if kv_cache_dtype != "int8" and not paged:
+        raise ValueError(
+            f"kv_cache_dtype={kv_cache_dtype!r} requires the paged cache "
+            f"(the contiguous backends are int8-only)")
     if paged:
         bad = [k for k in cfg.block_pattern if k not in ("attn", "moe")]
         if bad or cfg.sliding_window:
@@ -223,7 +228,7 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
             if paged:
                 return PG.PagedQuantizedKVCache.init(
                     batch, cfg.n_kv_heads, max_len, cfg.head_dim, cfg.quant,
-                    n_pages=n_pages)
+                    n_pages=n_pages, kv_dtype=kv_cache_dtype)
             eff = max_len
             if cfg.sliding_window:   # SWA (mixtral) / local attn (griffin)
                 eff = min(max_len, _round_block(cfg.sliding_window, cfg))

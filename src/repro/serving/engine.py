@@ -34,17 +34,22 @@ from repro.models import encdec, transformer
 
 
 def make_serve_fns(cfg: ModelConfig, *, max_len: int, paged: bool = False,
-                   n_pages: int | None = None):
+                   n_pages: int | None = None,
+                   kv_cache_dtype: str = "int8"):
     """Returns (init_state, prefill, decode_step) closed over cfg.
 
     ``paged=True`` backs the decode state with page pools of `n_pages` pages
     per layer; `prefill(params, inputs, state, row_mask)` then restricts
-    cache writes to the masked rows."""
+    cache writes to the masked rows. ``kv_cache_dtype`` picks the pool's
+    storage format (int8 / fp8_e4m3 / int4 — DESIGN.md §9); non-int8
+    requires ``paged=True``."""
 
     if cfg.family == "encdec":
         if paged:
             raise ValueError("paged serving is decoder-only (whisper's "
                              "cross-attention cache is write-once)")
+        if kv_cache_dtype != "int8":
+            raise ValueError("kv_cache_dtype is a paged-backend feature")
 
         def init_state(batch):
             return encdec.init_decode_state(cfg, batch, max_len)
@@ -57,8 +62,9 @@ def make_serve_fns(cfg: ModelConfig, *, max_len: int, paged: bool = False,
             return encdec.decode_step(params, token, cfg, state, pos)
     else:
         def init_state(batch):
-            return transformer.init_decode_state(cfg, batch, max_len,
-                                                 paged=paged, n_pages=n_pages)
+            return transformer.init_decode_state(
+                cfg, batch, max_len, paged=paged, n_pages=n_pages,
+                kv_cache_dtype=kv_cache_dtype)
 
         def prefill_fn(params, batch_inputs, state, row_mask=None):
             return transformer.prefill(params, batch_inputs["tokens"], cfg,
@@ -72,7 +78,8 @@ def make_serve_fns(cfg: ModelConfig, *, max_len: int, paged: bool = False,
 
 
 def make_chunk_prefill_fn(cfg: ModelConfig, *, hist_blocks: int | None = None,
-                          use_fused: bool = True):
+                          use_fused: bool = True,
+                          kv_cache_dtype: str = "int8"):
     """Chunk-prefill step for varlen chunked admission (DESIGN.md §7),
     closed over cfg: ``chunk_prefill(params, tokens, state, start, valid,
     row_mask)`` with tokens (B, C) int32 (C a page multiple — the dispatch
@@ -85,7 +92,13 @@ def make_chunk_prefill_fn(cfg: ModelConfig, *, hist_blocks: int | None = None,
     ``use_fused`` picks fused paged prefill attention vs the
     dequantize-gather oracle (`attention.prefill_chunk`); it is part of
     the closure identity, so the scheduler's trace cache must key on it.
-    Paged decoder-only stacks only."""
+    ``kv_cache_dtype`` declares the pool format this closure serves
+    (DESIGN.md §9) — the attention code reads the authoritative dtype off
+    the cache pytree's meta field, but the declaration is part of the
+    closure identity too (the scheduler keys its trace cache on it) and
+    is checked against the state at trace time so a stale closure fails
+    loudly instead of silently re-tracing. Paged decoder-only stacks
+    only."""
     if cfg.family == "encdec":
         raise ValueError("chunked prefill is decoder-only")
     # same precondition init_decode_state(paged=True) enforces, restated
@@ -99,6 +112,14 @@ def make_chunk_prefill_fn(cfg: ModelConfig, *, hist_blocks: int | None = None,
             f"sliding_window={cfg.sliding_window})")
 
     def chunk_prefill(params, tokens, state, start, valid, row_mask):
+        for c in list(state.values()) + list(state.get("tail", ())):
+            pool = getattr(c, "pool", None)
+            if pool is not None and pool.kv_dtype != kv_cache_dtype:
+                raise ValueError(
+                    f"chunk-prefill closure built for "
+                    f"kv_cache_dtype={kv_cache_dtype!r} got a "
+                    f"{pool.kv_dtype!r} pool — the scheduler's trace "
+                    f"cache key is stale")
         return transformer.prefill_chunk(params, tokens, cfg, state,
                                          start=start, valid=valid,
                                          row_mask=row_mask,
@@ -240,6 +261,7 @@ def kv_cache_memory_report(cfg: ModelConfig, batch: int, seq: int,
                                         pool.v_s)) // max(lead, 1) // n_pages
         allocated = capacity - n_free
         rep.update({
+            "kv_cache_dtype": pool.kv_dtype,
             "pool_pages_total": capacity,
             "pool_pages_allocated": allocated,
             "pool_pages_live": live,

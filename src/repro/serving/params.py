@@ -49,6 +49,8 @@ class SamplingParams:
     stop: tuple[str, ...] = ()           # stop strings (host-side)
     max_new_tokens: int = 16
     priority: int = 0                    # higher = served/kept first (§8)
+    kv_cache_dtype: str | None = None    # None = engine default; else must
+    #                                      match the pool backend (§9)
 
     def __post_init__(self):
         if self.temperature < 0:
@@ -63,6 +65,12 @@ class SamplingParams:
         if not isinstance(self.priority, int):
             raise ValueError(f"priority must be an int "
                              f"(got {self.priority!r})")
+        if self.kv_cache_dtype is not None:
+            from repro.core.quantization import KV_DTYPES
+            if self.kv_cache_dtype not in KV_DTYPES:
+                raise ValueError(
+                    f"kv_cache_dtype must be one of {KV_DTYPES} or None "
+                    f"(got {self.kv_cache_dtype!r})")
         # normalize list inputs so the dataclass stays hashable
         object.__setattr__(self, "stop_token_ids",
                            tuple(int(t) for t in self.stop_token_ids))
@@ -154,6 +162,12 @@ class EngineConfig:
     dequantize-gather oracle path — parity-equal, slower, kept for
     debugging and A/B benchmarks. Read per dispatch, so flipping it on a
     live scheduler recompiles rather than serving a stale trace.
+    `kv_cache_dtype` selects the page-pool storage format
+    (``int8`` default / ``fp8_e4m3`` / ``int4`` — DESIGN.md §9); non-int8
+    requires `paged=True`. Read per dispatch like `use_fused_prefill`:
+    the chunk/decode fn caches are keyed on the dtype, and flipping it on
+    an idle scheduler rebuilds the pool and recompiles rather than
+    serving a stale trace (flipping with requests in flight raises).
 
     Overload controls (DESIGN.md §8, paged backend): `watermark` switches
     admission from the worst-case ``prompt + max_new`` page reservation to
@@ -178,8 +192,19 @@ class EngineConfig:
     prefill_chunk: int | None = None
     detokenize: Callable[[Sequence[int]], str] | None = None
     use_fused_prefill: bool = True
+    kv_cache_dtype: str = "int8"         # page-pool storage format (§9)
     watermark: int | None = None         # optimistic-admission headroom (§8)
     aging_ticks: int = 0                 # 0 = no anti-starvation aging
     preempt_loop_limit: int = 8
     stall_ticks: int | None = 500
     fault_injector: object | None = None  # core.paging.PoolFaultInjector
+
+    def __post_init__(self):
+        from repro.core.quantization import KV_DTYPES
+        if self.kv_cache_dtype not in KV_DTYPES:
+            raise ValueError(f"kv_cache_dtype must be one of {KV_DTYPES} "
+                             f"(got {self.kv_cache_dtype!r})")
+        if self.kv_cache_dtype != "int8" and not self.paged:
+            raise ValueError(
+                f"kv_cache_dtype={self.kv_cache_dtype!r} requires "
+                f"paged=True (the contiguous backends are int8-only)")

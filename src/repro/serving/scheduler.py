@@ -236,9 +236,10 @@ class ContinuousBatcher:
         # completion boundary; 1 = per-token ticks (also forced for encdec,
         # which has no transformer decode_scan path)
         self.chunk = 1 if cfg.family == "encdec" else chunk
-        # steps -> jitted decode-scan chunk fn (one signature; jit's
-        # None-vs-pytree structure keying separates greedy/sampled traces)
-        self._chunk_fns: dict[int, Any] = {}
+        # (steps, kv dtype) -> jitted decode-scan chunk fn (one signature;
+        # jit's None-vs-pytree structure keying separates greedy/sampled
+        # traces; the dtype key makes the §9 stale-trace guarantee explicit)
+        self._chunk_fns: dict[tuple[int, str], Any] = {}
         # host-side sampling entry (first token after prefill, per-token
         # ticks): the SAME sample_at_step the scan body runs, jitted once
         from repro.models import sampling as _SMP
@@ -305,9 +306,10 @@ class ContinuousBatcher:
             pc = prefill_chunk or 4 * self.page_size
             self.prefill_chunk_tokens = -(-pc // self.page_size) * \
                 self.page_size
-            # one jitted chunk fn per (static history bound, fused-toggle);
-            # the bound set is pow2, the toggle read live from self.config
-            self._chunk_prefill_fns: dict[tuple[int, bool], Any] = {}
+            # one jitted chunk fn per (static history bound, fused-toggle,
+            # kv dtype); the bound set is pow2, the toggle and dtype read
+            # live from self.config per dispatch (DESIGN.md §9)
+            self._chunk_prefill_fns: dict[tuple[int, bool, str], Any] = {}
             # req.uid -> (toks, chain): computed once per request, not once
             # per tick while admission is blocked on pool pressure. Keyed by
             # uid, NOT id(request): CPython reuses a collected object's id,
@@ -322,8 +324,13 @@ class ContinuousBatcher:
             self.streams: list[np.ndarray | None] = [None] * batch
             self.row_chain: list[list[bytes] | None] = [None] * batch
             self._pf_rr = 0     # round-robin cursor over prefilling rows
+        # the pool's storage format; config.kv_cache_dtype is the *wanted*
+        # dtype — the two diverge only between a config flip and the next
+        # idle rebuild (_ensure_backend_dtype, DESIGN.md §9)
+        self.kv_cache_dtype = getattr(config, "kv_cache_dtype", "int8")
         init_state, prefill, decode = make_serve_fns(
-            cfg, max_len=max_len, paged=paged, n_pages=n_pages)
+            cfg, max_len=max_len, paged=paged, n_pages=n_pages,
+            kv_cache_dtype=self.kv_cache_dtype)
         self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode)
         self._init_state = init_state
@@ -360,6 +367,15 @@ class ContinuousBatcher:
             raise ValueError(f"request uid {req.uid} is already in flight "
                              f"(queued or running); uids are the lifecycle "
                              f"handle and must be unique until completion")
+        want_dtype = req.sampling.kv_cache_dtype
+        engine_dtype = getattr(self.config, "kv_cache_dtype", "int8")
+        if want_dtype is not None and want_dtype != engine_dtype:
+            raise ValueError(
+                f"request {req.uid}: kv_cache_dtype={want_dtype!r} does not "
+                f"match the engine's pool backend ({engine_dtype!r}); the "
+                f"pool carries ONE storage format — flip "
+                f"EngineConfig.kv_cache_dtype on an idle engine instead "
+                f"(DESIGN.md §9)")
         budget = (req.max_new_tokens if req.max_new_tokens is not None
                   else req.sampling.max_new_tokens)
         if self.paged:
@@ -558,6 +574,7 @@ class ContinuousBatcher:
         of a silent spin."""
         self.ticks += 1
         self._progressed = False
+        self._ensure_backend_dtype()
         done = self._step_paged() if self.paged else self._step_contiguous()
         if done:
             self._progressed = True
@@ -602,6 +619,59 @@ class ContinuousBatcher:
                         f"held={a.injector.hold_pages} "
                         f"deferred={len(a.deferred)}")
         return rep
+
+    def _ensure_backend_dtype(self):
+        """Honor a live flip of `EngineConfig.kv_cache_dtype` (DESIGN.md §9).
+
+        The pool's storage format is baked into every page, every allocator
+        index entry, and the device pytree's structure, so a flip cannot be
+        served in place: on the next tick with NO work in flight the serve
+        fns, decode state, and host allocator are rebuilt for the new dtype
+        (the jitted chunk/decode fn caches are keyed on dtype, so old
+        traces stay valid if the config flips back). A flip with pool
+        state in use (rows running, mid-prefill, or preempt snapshots
+        waiting) raises — silently re-quantizing resident pages through a
+        second lossy format would corrupt live streams; merely *queued*
+        requests hold no pages yet and ride the rebuild."""
+        want = getattr(self.config, "kv_cache_dtype", "int8")
+        if want == self.kv_cache_dtype:
+            return
+        if not self.paged:
+            raise RuntimeError(
+                f"kv_cache_dtype={want!r} requires the paged backend")
+        if (any(r is not None for r in self.rows) or self.prefilling
+                or self._suspended):
+            raise RuntimeError(
+                f"cannot flip kv_cache_dtype to {want!r} with rows "
+                f"resident in the pool; drain the engine first "
+                f"(DESIGN.md §9)")
+        from repro.serving.engine import make_serve_fns
+        from repro.core.quantization import KV_DTYPES
+        if want not in KV_DTYPES:
+            raise ValueError(f"kv_cache_dtype must be one of {KV_DTYPES} "
+                             f"(got {want!r})")
+        self.kv_cache_dtype = want
+        init_state, prefill, decode = make_serve_fns(
+            self.cfg, max_len=self.max_len, paged=True,
+            n_pages=self.n_pages, kv_cache_dtype=want)
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+        self._init_state = init_state
+        self.state = None                      # rebuilt lazily next tick
+        # indexed/cached pages hold bytes in the OLD format — a fresh
+        # allocator drops them (chain hashes are token-content keyed, so a
+        # stale hit would alias wrong-format pages into a new row's table)
+        self.allocator = PG.HostPageAllocator(
+            self.n_pages, prefix_cache=self.prefix_cache,
+            injector=self.config.fault_injector)
+        self.tables[:] = 0
+        self.row_pages = [[] for _ in range(self.batch)]
+        self.streams = [None] * self.batch
+        self.row_chain = [None] * self.batch
+        self.gen_base = [0] * self.batch
+        self._suspended.clear()
+        self._admit_memo.clear()
+        self._resume_tok.clear()
 
     def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
         """Drain the queue; returns naturally finished requests (aborted
@@ -682,8 +752,13 @@ class ContinuousBatcher:
         None-vs-pytree structure change, so greedy and sampled chunks
         still get their own compiled variants). Threading the sampling
         arrays into the SAME scan is what keeps mixed per-row params at
-        one dispatch per chunk (DESIGN.md §6)."""
-        fn = self._chunk_fns.get(n)
+        one dispatch per chunk (DESIGN.md §6). Keyed on (n, kv dtype):
+        the pool dtype is a pytree meta field, so jit would re-trace
+        anyway — the explicit key makes the stale-trace guarantee
+        inspectable (DESIGN.md §9) and keeps old traces when the config
+        flips back."""
+        key = (n, self.kv_cache_dtype)
+        fn = self._chunk_fns.get(key)
         if fn is None:
             from repro.models import transformer as T
             cfg = self.cfg
@@ -691,7 +766,7 @@ class ContinuousBatcher:
             def run(params, tok, state, pos, row_mask, sampling):
                 return T.decode_scan(params, tok, cfg, state, pos, steps=n,
                                      row_mask=row_mask, sampling=sampling)
-            fn = self._chunk_fns[n] = jax.jit(run)
+            fn = self._chunk_fns[key] = jax.jit(run)
         return fn
 
     def _finish_chunk(self, active: list[int], toks: np.ndarray,
@@ -1088,14 +1163,15 @@ class ContinuousBatcher:
         O(log max_blocks); masking trims the over-approximation), so a
         chunk never materializes max_len of history (DESIGN.md §7).
 
-        Keyed on (bound, use_fused_prefill) — the toggle is read from the
-        live config at every dispatch, so flipping it mid-process compiles
-        the other attention path instead of serving a stale trace."""
+        Keyed on (bound, use_fused_prefill, kv_cache_dtype) — the toggle
+        and dtype are read from the live config at every dispatch, so
+        flipping either mid-process compiles the other attention path /
+        pool format instead of serving a stale trace (DESIGN.md §9)."""
         blocks = -(-max_start // self.page_size)
         hb = 0 if blocks == 0 else min(1 << (blocks - 1).bit_length(),
                                        self.max_blocks)
         fused = bool(getattr(self.config, "use_fused_prefill", True))
-        key = (hb, fused)
+        key = (hb, fused, self.kv_cache_dtype)
         fn = self._chunk_prefill_fns.get(key)
         if fn is None:
             from repro.serving.engine import make_chunk_prefill_fn
@@ -1103,10 +1179,11 @@ class ContinuousBatcher:
             # self.state with the result, and donation lets XLA update the
             # page pool in place instead of copying every pool buffer per
             # chunk dispatch (the scatter in prefill_at would otherwise
-            # clone ~MBs of int8 pages each tick)
+            # clone ~MBs of quantized pages each tick)
             fn = self._chunk_prefill_fns[key] = jax.jit(
                 make_chunk_prefill_fn(self.cfg, hist_blocks=hb,
-                                      use_fused=fused),
+                                      use_fused=fused,
+                                      kv_cache_dtype=self.kv_cache_dtype),
                 donate_argnums=(2,))
         return fn
 
@@ -1453,7 +1530,17 @@ class ContinuousBatcher:
         a = self.allocator
         allocated = (self.n_pages - 1) - a.n_free - a.n_cached \
             - len(a.deferred)
-        rep = {"pages_total": self.n_pages - 1,
+        # memory/accuracy curve metric (DESIGN.md §9): how many pages this
+        # dtype fits into the HBM an int8 pool of the same geometry takes —
+        # int4 packs two tokens per byte, so ~2x minus the unshrunk f32
+        # scale rows (1.94x at page_size 128)
+        pb = lambda dt: PG.page_bytes_for(self.page_size,
+                                          self.cfg.n_kv_heads,
+                                          self.cfg.head_dim, dt)
+        rep = {"kv_cache_dtype": self.kv_cache_dtype,
+               "pages_vs_int8_equal_hbm":
+                   pb("int8") / pb(self.kv_cache_dtype),
+               "pages_total": self.n_pages - 1,
                "pages_free": a.n_free,
                "pages_cached": a.n_cached,
                "pages_allocated": allocated,

@@ -12,9 +12,11 @@ import pytest
 ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT))
 
-from benchmarks.check_regression import (collect, compare, decode_metrics,
-                                         overload_metrics, prefix_metrics,
-                                         main)
+from benchmarks.check_regression import (INT4_PPL_DELTA_CEILING_PCT,
+                                         accuracy_absolute_violations,
+                                         accuracy_metrics, collect, compare,
+                                         decode_metrics, overload_metrics,
+                                         prefix_metrics, main)
 
 
 def _decode(tokens_s=1000.0, us_per_step=500.0, seed_tokens_s=500.0,
@@ -39,6 +41,19 @@ def _overload(goodput=0.8, fast_frac=0.5):
                       "resume_fast_frac": 0.1}]}
 
 
+def _accuracy(int4_ppl=75.0, int4_delta=2.0, int4_err=0.14,
+              int4_bound=0.15):
+    return {"bitwidth": [{"config": "int8_uniform", "max_abs_err": 0.004,
+                          "err_bound": 0.008},
+                         {"config": "int4_packed_uniform",
+                          "max_abs_err": int4_err,
+                          "err_bound": int4_bound}],
+            "perplexity": [{"config": "fp_forward", "ppl": 65.0,
+                            "delta_pct": 0.0},
+                           {"config": "paged_int4", "ppl": int4_ppl,
+                            "delta_pct": int4_delta}]}
+
+
 def test_gate_fails_on_synthetic_regressions():
     base = collect(_decode(), _prefix())
     # >15% tokens/s drop (seed measurement unchanged -> real regression)
@@ -55,6 +70,28 @@ def test_gate_fails_on_synthetic_regressions():
                                    _overload(goodput=0.5)))
     assert compare(base_o, collect(_decode(), _prefix(),
                                    _overload(fast_frac=0.2)))
+
+
+def test_accuracy_gate_relative_and_outright():
+    """The multi-precision accuracy gate (DESIGN.md §9): perplexity arms
+    gate relatively (lower is better), while the analytic error bound and
+    the int4 ppl-delta ceiling gate OUTRIGHT — they fail with no baseline
+    at all, because deterministic seeds make them hardware-independent."""
+    base = collect(_decode(), _prefix(), accuracy=_accuracy())
+    assert "accuracy.ppl.paged_int4" in base
+    assert base["accuracy.ppl.paged_int4"][1] is False    # lower is better
+    # >15% ppl blowup on any arm trips the relative gate
+    worse = collect(_decode(), _prefix(), accuracy=_accuracy(int4_ppl=95.0))
+    assert compare(base, worse)
+    assert compare(base, base) == []
+    # outright: reconstruction error past the analytic bound
+    assert accuracy_absolute_violations(_accuracy()) == []
+    bad = accuracy_absolute_violations(_accuracy(int4_err=0.2))
+    assert bad and "analytic bound" in bad[0]
+    # outright: int4 ppl delta past the ceiling, with no baseline involved
+    bad = accuracy_absolute_violations(
+        _accuracy(int4_delta=INT4_PPL_DELTA_CEILING_PCT + 5))
+    assert bad and "ceiling" in bad[0]
 
 
 def test_gate_passes_within_threshold_and_on_improvement():
@@ -96,12 +133,18 @@ def test_committed_artifacts_yield_metrics():
     decode = json.loads((ROOT / "BENCH_decode.json").read_text())
     prefix = json.loads((ROOT / "BENCH_prefix.json").read_text())
     overload = json.loads((ROOT / "BENCH_overload.json").read_text())
-    m = collect(decode, prefix, overload)
+    accuracy = json.loads((ROOT / "BENCH_accuracy.json").read_text())
+    m = collect(decode, prefix, overload, accuracy)
     assert any(k.endswith(".tokens_s_vs_seed") for k in m)
     assert any(k.endswith(".us_per_step_vs_seed") for k in m)
     assert "prefix.shared90.ttft_speedup" in m
     assert "overload.oversub2x.goodput_frac" in m
     assert "overload.oversub2x.resume_fast_frac" in m
+    # every paged multi-precision arm is tracked, and the committed
+    # artifact satisfies its own outright gates
+    for dt in ("int8", "fp8_e4m3", "int4"):
+        assert f"accuracy.ppl.paged_{dt}" in m
+    assert accuracy_absolute_violations(accuracy) == []
     # the overload artifact must certify a deadlock-free oversubscribed run
     assert all(r["deadlocks"] == 0 and r["completed"] == r["requests"]
                for r in overload["rows"])
@@ -119,6 +162,7 @@ def test_gate_cli_detects_regression(tmp_path):
         (d / "BENCH_decode.json").write_text(json.dumps(dec))
         (d / "BENCH_prefix.json").write_text(json.dumps(pre))
         (d / "BENCH_overload.json").write_text(json.dumps(_overload()))
+        (d / "BENCH_accuracy.json").write_text(json.dumps(_accuracy()))
     assert main(["--baseline-dir", str(bdir), "--current-dir",
                  str(cdir)]) == 1
     (cdir / "BENCH_decode.json").write_text(json.dumps(_decode()))
@@ -137,3 +181,5 @@ def test_metric_directions():
     assert o["overload.oversub2x.goodput_frac"][1] is True
     assert o["overload.oversub2x.resume_fast_frac"][1] is True
     assert not any(k.startswith("overload.oversub4x") for k in o)
+    a = accuracy_metrics(_accuracy())
+    assert a["accuracy.ppl.paged_int4"][1] is False        # lower better

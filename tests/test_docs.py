@@ -35,7 +35,7 @@ def test_design_sections_cover_docstring_references():
     """Every `DESIGN.md §N` reference in the source tree names an existing
     DESIGN.md section — stale references are how design docs rot."""
     sections = _design_sections()
-    assert sections >= {"1", "2", "3", "4", "5", "6", "7"}
+    assert sections >= {"1", "2", "3", "4", "5", "6", "7", "8", "9"}
     bad = []
     for py in (ROOT / "src").rglob("*.py"):
         for ref in re.findall(r"DESIGN\.md §(\w[\w-]*)", py.read_text()):
@@ -56,6 +56,44 @@ def test_readme_cites_current_bench_artifacts():
     by_cfg = {r["config"]: r for r in prefix["rows"]}
     assert by_cfg["shared90"]["ttft_speedup"] >= 2.0, \
         "the README's headline >=2x TTFT claim no longer holds"
+
+
+def test_design_owns_multi_precision_section():
+    """DESIGN.md §9 owns the multi-precision page layout, and the code
+    that implements it says so — both the quantizer registry and the page
+    byte accounting must cite §9 (the section that documents the nibble
+    interleave and the per-dtype error model)."""
+    text = (ROOT / "DESIGN.md").read_text()
+    m = re.search(r"^## §9\b.*$", text, flags=re.M)
+    assert m and "Multi-precision" in m.group(0), \
+        "DESIGN.md §9 must be the multi-precision page layout section"
+    for src in ("src/repro/core/quantization.py", "src/repro/core/paging.py",
+                "src/repro/kernels/quant_attention.py"):
+        assert "DESIGN.md §9" in (ROOT / src).read_text(), \
+            f"{src} no longer cites its DESIGN.md §9 owner"
+
+
+def test_readme_cites_accuracy_artifact():
+    """The README's memory/accuracy table is backed by BENCH_accuracy.json
+    and the claims it prints still hold in the committed artifact: every
+    bitwidth row within its analytic bound, all three paged perplexity
+    arms present, and the 1.94x int4 page-capacity figure derivable from
+    the page byte accounting."""
+    import json
+
+    from repro.core.paging import page_bytes_for
+    readme = (ROOT / "README.md").read_text()
+    assert "BENCH_accuracy.json" in readme
+    assert "--kv-cache-dtype" in readme, \
+        "README must document the serve CLI's --kv-cache-dtype flag"
+    data = json.loads((ROOT / "BENCH_accuracy.json").read_text())
+    for row in data["bitwidth"]:
+        assert row["max_abs_err"] <= row["err_bound"], row["config"]
+    arms = {r["config"] for r in data["perplexity"]}
+    assert {"paged_int8", "paged_fp8_e4m3", "paged_int4"} <= arms
+    ratio = page_bytes_for(128, 8, 128, "int8") / page_bytes_for(
+        128, 8, 128, "int4")
+    assert ratio >= 1.9, "the README's 1.94x int4 capacity claim broke"
 
 
 def test_public_api_docstrings_name_their_design_section():

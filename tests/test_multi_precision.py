@@ -1,0 +1,469 @@
+"""Multi-precision KV backends (DESIGN.md §9): the cross-dtype kernel
+parity matrix, serving-dtype threading, and the int4 pool-capacity claim.
+
+The matrix pins every {kv_cache_dtype × ragged edge × impl} cell of both
+fused kernels against the dequantize-concat oracle: the oracle reads the
+SAME stored pages through `dequantize_pages`, so a cell failure isolates
+kernel math (unpack order, scale row alignment, masking) from
+quantization error. Serving tests pin the stale-trace guarantee (flipping
+`EngineConfig.kv_cache_dtype` recompiles instead of serving a stale
+trace), the default-int8 bitwise guarantee, bitwise hit==miss
+prefix-cache parity on the fp8/int4 backends, and the ≥1.9x
+pages-per-pool claim for int4 at equal HBM. A hypothesis property test
+drives arbitrary chunk/append/fork/CoW interleavings on every backend
+against an fp shadow."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.paging as PG
+import repro.core.quantization as Q
+from hypothesis_compat import given, settings, st
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, HKV, G, D = 4, 2, 3, 32
+H = HKV * G
+PS, NB = 8, 4
+T = NB * PS
+C = 16                                   # prefill chunk width
+
+DTYPES = list(Q.KV_DTYPES)
+IMPLS = ["xla", "pallas_interpret"]
+# decode ragged edges: empty row, single token, partial-cursor, pow2
+# page boundary, bt-1 (one short of the full table)
+DECODE_LENS = [0, 1, PS + 3, 2 * PS, T - 1]
+# prefill ragged edges: history {none, 1 page, pow2 boundary, full table}
+# crossed with chunk-valid {full, 1, bt-1, full}
+HIST_LEN = [0, PS, 2 * PS, NB * PS]
+VALID = [C, 1, C - 1, C]
+
+
+def _pool_fixture(kv_dtype, *, batch, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    k = jax.random.normal(ks[0], (batch, HKV, T, D), jnp.float32)
+    v = jax.random.normal(ks[1], (batch, HKV, T, D), jnp.float32)
+    k_q, k_s = Q.quantize_pages(k, PS, kv_dtype)
+    v_q, v_s = Q.quantize_pages(v, PS, kv_dtype)
+    pools = PG.scatter_to_pool(k_q, k_s, v_q, v_s)
+    kd = Q.dequantize_pages(k_q, k_s, kv_dtype)
+    vd = Q.dequantize_pages(v_q, v_s, kv_dtype)
+    return pools, (kd, vd)
+
+
+def _oracle_decode(q, kd, vd, lengths):
+    """Softmax attention over the dequantized history — same stored values
+    the kernel reads, so parity tests kernel math, not quant error."""
+    batch = q.shape[0]
+    qg = q.reshape(batch, HKV, G, D)
+    logits = jnp.einsum("bkgd,bktd->bkgt", qg, kd) / np.sqrt(D)
+    mask = jnp.arange(T)[None, None, None, :] < lengths[:, None, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jnp.where(mask, jax.nn.softmax(logits, axis=-1), 0.0)
+    return jnp.einsum("bkgt,bktd->bkgd", p, vd).reshape(batch, H, D)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("kv_dtype", DTYPES)
+def test_parity_matrix_decode(kv_dtype, impl):
+    from repro.kernels import ops
+    batch = len(DECODE_LENS)
+    pools, (kd, vd) = _pool_fixture(kv_dtype, batch=batch)
+    q = jax.random.normal(jax.random.PRNGKey(7), (batch, H, D), jnp.float32)
+    lengths = jnp.asarray(DECODE_LENS, jnp.int32)
+    ref = _oracle_decode(q, kd, vd, lengths)
+    out = ops.paged_attention_decode(q, *pools, lengths,
+                                     kv_dtype=kv_dtype, impl=impl)
+    live = np.asarray(lengths) > 0       # len-0 rows are garbage by contract
+    # the XLA decode twin dequantizes to bf16 by design (§2); the Pallas
+    # path accumulates in f32 throughout
+    tol = 2e-2 if impl == "xla" else 2e-5
+    err = float(jnp.max(jnp.abs(out - ref)[live]))
+    assert err < tol, f"{kv_dtype}/{impl}: max err {err:.2e} over {tol}"
+    assert bool(jnp.all(jnp.isfinite(out))), "len-0 rows must stay finite"
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("kv_dtype", DTYPES)
+def test_parity_matrix_prefill(kv_dtype, impl):
+    from repro.kernels import ops
+    batch = len(HIST_LEN)
+    pools, (kd, vd) = _pool_fixture(kv_dtype, batch=batch)
+    pool_kq, pool_ks, pool_vq, pool_vs, tbl = pools
+    kc = jax.random.normal(jax.random.PRNGKey(11), (batch, HKV, C, D))
+    vc = jax.random.normal(jax.random.PRNGKey(12), (batch, HKV, C, D))
+    qc = jax.random.normal(jax.random.PRNGKey(13), (batch, H, C, D))
+    hist_len = jnp.asarray(HIST_LEN, jnp.int32)
+    valid = jnp.asarray(VALID, jnp.int32)
+    # dequantize-concat oracle: one softmax over (history ‖ chunk)
+    refs = []
+    for b in range(batch):
+        hl = HIST_LEN[b]
+        kh = jnp.concatenate([kd[b, :, :hl], kc[b]], axis=1)
+        vh = jnp.concatenate([vd[b, :, :hl], vc[b]], axis=1)
+        qg = qc[b].reshape(HKV, G, C, D)
+        logits = jnp.einsum("kgcd,ktd->kgct", qg, kh) / np.sqrt(D)
+        kpos = jnp.arange(hl + C)
+        qpos = hl + jnp.arange(C)
+        logits = jnp.where((kpos[None, :] <= qpos[:, None])[None, None],
+                           logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        refs.append(jnp.einsum("kgct,ktd->kgcd", p, vh).reshape(H, C, D))
+    ref = jnp.stack(refs)
+    out = ops.paged_attention_prefill(
+        qc, kc, vc, pool_kq, pool_ks, pool_vq, pool_vs, tbl, hist_len,
+        valid, hist_blocks=NB, kv_dtype=kv_dtype, impl=impl)
+    for b in range(batch):
+        vl = VALID[b]
+        err = float(jnp.max(jnp.abs(out[b, :, :vl] - ref[b, :, :vl])))
+        assert err < 2e-5, (f"{kv_dtype}/{impl} row {b} "
+                            f"(hist={HIST_LEN[b]}, valid={vl}): {err:.2e}")
+
+
+# -- paged cache roundtrip across every backend ------------------------------
+
+@pytest.mark.parametrize("kv_dtype", DTYPES)
+def test_cache_roundtrip_within_dtype_bound(kv_dtype):
+    """prefill + append through the paged cache reconstruct the fp history
+    within the per-dtype error model (§9): absmax/qmax-shaped."""
+    qcfg = Q.QuantConfig(granularity="per_block", block_size=PS)
+    cache = PG.PagedQuantizedKVCache.init(2, HKV, T, D, qcfg,
+                                          n_pages=2 * NB + 1,
+                                          kv_dtype=kv_dtype)
+    ids = np.arange(1, 2 * NB + 1, dtype=np.int32).reshape(2, NB)
+    cache = dataclasses.replace(cache, page_table=jnp.asarray(ids))
+    k = jax.random.normal(jax.random.PRNGKey(0), (2, HKV, 2 * PS, D))
+    v = jax.random.normal(jax.random.PRNGKey(1), (2, HKV, 2 * PS, D))
+    cache = cache.prefill(k, v)
+    extra_k, extra_v = [], []
+    for t in range(PS + 3):              # crosses one flush boundary
+        kt = jax.random.normal(jax.random.PRNGKey(100 + t), (2, HKV, 1, D))
+        vt = jax.random.normal(jax.random.PRNGKey(200 + t), (2, HKV, 1, D))
+        cache = cache.append(kt, vt)
+        extra_k.append(kt)
+        extra_v.append(vt)
+    full_k = jnp.concatenate([k] + extra_k, axis=2)
+    full_v = jnp.concatenate([v] + extra_v, axis=2)
+    n = 3 * PS + 3
+    assert np.asarray(cache.length).tolist() == [n, n]
+    kd, vd = cache.dequantized()
+    gmax = float(jnp.max(jnp.abs(jnp.stack([full_k, full_v]))))
+    bound = gmax / {"int8": 127, "fp8_e4m3": 8, "int4": 7}[kv_dtype]
+    for got, want in ((kd, full_k), (vd, full_v)):
+        err = float(jnp.max(jnp.abs(got[:, :, :n] - want)))
+        assert err <= bound, f"{kv_dtype}: {err:.3g} > bound {bound:.3g}"
+
+
+# -- hypothesis property: interleavings preserve nibble order + scales -------
+
+@settings(max_examples=10, deadline=None)
+@given(ops_seed=st.integers(min_value=0, max_value=2**16),
+       kv_dtype=st.sampled_from(Q.KV_DTYPES))
+def test_interleaved_ops_match_fp_shadow(ops_seed, kv_dtype):
+    """Arbitrary chunk-prefill / append / fork+CoW interleavings preserve
+    nibble order and scale-row alignment: every row's dequantized history
+    equals a host fp shadow within the per-dtype bound, and fully-flushed
+    pages are BITWISE reproducible from the shadow: prefill_at full pages
+    through `quantize_pages` on the fp32 chunk, append-flushed pages
+    through `quantize_page_matrix` on the ref_dtype(bf16) residual copy —
+    the two paths share one scale formula per dtype (DESIGN.md §9). A
+    block is homogeneous by construction: chunk dispatches land on
+    page-aligned cursors, so a partial block is only ever completed
+    through the residual."""
+    rng = np.random.RandomState(ops_seed)
+    rows, max_blocks = 3, 4
+    max_len = max_blocks * PS
+    n_pages = 64
+    qcfg = Q.QuantConfig(granularity="per_block", block_size=PS)
+    cache = PG.PagedQuantizedKVCache.init(rows, HKV, max_len, D, qcfg,
+                                          n_pages=n_pages,
+                                          kv_dtype=kv_dtype)
+    tables = np.zeros((rows, max_blocks), np.int64)
+    refcount: dict[int, int] = {}
+    next_free = [1]                       # page 0 is the sentinel
+
+    def alloc():
+        pid = next_free[0]
+        next_free[0] += 1
+        assert pid < n_pages
+        refcount[pid] = 1
+        return pid
+
+    def sync_tables(c):
+        return dataclasses.replace(c, page_table=jnp.asarray(
+            tables, jnp.int32))
+
+    # per row: list of (k, v, via_residual) tokens — full prefill pages
+    # quantize from fp32, residual-flushed pages from the bf16 copy
+    shadow = [[] for _ in range(rows)]
+
+    def tok(n):
+        return (rng.randn(HKV, n, D).astype(np.float32),
+                rng.randn(HKV, n, D).astype(np.float32))
+
+    for _ in range(12):
+        op = rng.choice(["chunk", "append", "fork"])
+        r = rng.randint(rows)
+        ln = len(shadow[r])
+        if op == "chunk" and ln % PS == 0 and ln + 1 < max_len:
+            n_new = int(rng.randint(1, min(2 * PS, max_len - ln) + 1))
+            width = -(-n_new // PS) * PS
+            blk0 = ln // PS
+            for j in range(width // PS):  # map the dispatch's blocks
+                tables[r, blk0 + j] = alloc()
+            cache = sync_tables(cache)
+            kc, vc = tok(width)
+            kb = np.zeros((rows, HKV, width, D), np.float32)
+            vb = np.zeros((rows, HKV, width, D), np.float32)
+            kb[r], vb[r] = kc, vc
+            mask = np.zeros((rows,), bool)
+            mask[r] = True
+            valid = np.zeros((rows,), np.int32)
+            valid[r] = n_new
+            cache = cache.prefill_at(jnp.asarray(kb), jnp.asarray(vb),
+                                     jnp.full((rows,), blk0, jnp.int32),
+                                     row_mask=jnp.asarray(mask),
+                                     valid=jnp.asarray(valid))
+            nfull = (n_new // PS) * PS
+            shadow[r].extend(
+                (kc[:, t], vc[:, t], t >= nfull) for t in range(n_new))
+        elif op == "append" and 0 < ln < max_len:
+            blk = ln // PS
+            if tables[r, blk] == 0:
+                tables[r, blk] = alloc()
+                cache = sync_tables(cache)
+            elif refcount.get(int(tables[r, blk]), 1) > 1:
+                # CoW: the block this row will flush into is still shared —
+                # retarget to a private page (the fork's residual copy IS
+                # the private content, DESIGN.md §7)
+                refcount[int(tables[r, blk])] -= 1
+                tables[r, blk] = alloc()
+                cache = sync_tables(cache)
+            kt, vt = tok(1)
+            kb = np.zeros((rows, HKV, 1, D), np.float32)
+            vb = np.zeros((rows, HKV, 1, D), np.float32)
+            kb[r], vb[r] = kt, vt
+            mask = np.zeros((rows,), bool)
+            mask[r] = True
+            cache = cache.append(jnp.asarray(kb), jnp.asarray(vb),
+                                 row_mask=jnp.asarray(mask))
+            shadow[r].append((kt[:, 0], vt[:, 0], True))
+        elif op == "fork" and ln > 0:
+            empties = [i for i in range(rows) if not shadow[i]]
+            if not empties:
+                continue
+            dst = empties[0]
+            cache = cache.fork_row(r, dst)
+            tables[dst] = tables[r]
+            for pid in tables[r][tables[r] > 0]:
+                refcount[int(pid)] = refcount.get(int(pid), 1) + 1
+            shadow[dst] = list(shadow[r])
+
+    kd, vd = cache.dequantized()
+    for r in range(rows):
+        n = len(shadow[r])
+        assert int(np.asarray(cache.length)[r]) == n
+        if n == 0:
+            continue
+        sk = jnp.asarray(np.stack([t[0] for t in shadow[r]], axis=1))
+        sv = jnp.asarray(np.stack([t[1] for t in shadow[r]], axis=1))
+        gmax = float(jnp.max(jnp.abs(jnp.concatenate([sk, sv]))))
+        bound = gmax / {"int8": 127, "fp8_e4m3": 8, "int4": 7}[kv_dtype]
+        assert float(jnp.max(jnp.abs(kd[r, :, :n] - sk))) <= bound
+        assert float(jnp.max(jnp.abs(vd[r, :, :n] - sv))) <= bound
+        # flushed pages are bitwise reproducible per provenance
+        for b in range(n // PS):
+            toks = shadow[r][b * PS:(b + 1) * PS]
+            flags = {t[2] for t in toks}
+            assert len(flags) == 1, f"row {r} block {b}: mixed provenance"
+            for side, deq in ((0, kd), (1, vd)):
+                blk = jnp.asarray(np.stack([t[side] for t in toks], axis=1))
+                if flags == {False}:      # prefill_at full-page scatter
+                    eq, es = Q.quantize_pages(blk, PS, kv_dtype)
+                else:                     # append flush of the bf16 residual
+                    eq, es = Q.quantize_page_matrix(
+                        blk.astype(jnp.bfloat16), kv_dtype)
+                    es = es[:, None, :]
+                want = Q.dequantize_pages(eq, es, kv_dtype)
+                got = deq[r, :, b * PS:(b + 1) * PS]
+                assert bool(jnp.array_equal(got, want)), \
+                    (f"row {r} block {b} side {side} ({kv_dtype}): "
+                     f"flushed page diverges bitwise")
+
+
+# -- serving: dtype threading, stale traces, bitwise pins --------------------
+
+@pytest.fixture(scope="module")
+def serving_model():
+    from repro.configs import get_config
+    from repro.models import transformer as Tm
+    cfg = get_config("internlm2_1_8b", smoke=True)
+    return cfg, Tm.init_params(cfg, jax.random.PRNGKey(2))
+
+
+def _run_requests(b, prompts, uid0=0, max_new=5):
+    from repro.serving import Request, SamplingParams
+    for i, p in enumerate(prompts):
+        b.submit(Request(uid=uid0 + i, prompt=np.asarray(p, np.int32),
+                         sampling=SamplingParams.greedy(
+                             max_new_tokens=max_new)))
+    done = b.run_to_completion(max_ticks=400)
+    assert len(done) == len(prompts)
+    return {r.uid - uid0: r.generated for r in done}
+
+
+def _prompts(cfg, n=2, seed=3):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab, (11,)).astype(np.int32)
+            for _ in range(n)]
+
+
+def test_dtype_toggle_no_stale_trace(serving_model):
+    """Mirror of PR 6's fused-toggle test for `kv_cache_dtype`: flipping
+    the dtype on an idle scheduler rebuilds the pool and compiles fresh
+    dtype-keyed traces (old keys survive for a flip back), and the
+    post-flip outputs are identical to a batcher BORN on the new dtype —
+    no stale trace, no stale pages."""
+    from repro.serving import ContinuousBatcher, EngineConfig
+    cfg, params = serving_model
+    prompts = _prompts(cfg)
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=2, max_len=64, paged=True, prefill_chunk=8))
+    assert EngineConfig().kv_cache_dtype == "int8"       # default unchanged
+    _run_requests(b, prompts, uid0=0)
+    keys0 = set(b._chunk_prefill_fns)
+    assert keys0 and all(dt == "int8" for _, _, dt in keys0)
+    assert all(dt == "int8" for _, dt in b._chunk_fns)
+    b.config.kv_cache_dtype = "fp8_e4m3"
+    got_flip = _run_requests(b, prompts, uid0=10)
+    new_keys = set(b._chunk_prefill_fns) - keys0
+    assert new_keys and all(dt == "fp8_e4m3" for _, _, dt in new_keys)
+    # same hist_blocks buckets re-traced under the new dtype, not reused
+    assert {hb for hb, _, _ in new_keys} <= {hb for hb, _, _ in keys0}
+    fresh = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=2, max_len=64, paged=True, prefill_chunk=8,
+        kv_cache_dtype="fp8_e4m3"))
+    assert got_flip == _run_requests(fresh, prompts, uid0=10)
+
+
+def test_dtype_flip_with_resident_rows_raises(serving_model):
+    from repro.serving import ContinuousBatcher, EngineConfig, Request
+    from repro.serving import SamplingParams
+    cfg, params = serving_model
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=2, max_len=64, paged=True, chunk=1))
+    b.submit(Request(uid=0, prompt=_prompts(cfg)[0],
+                     sampling=SamplingParams.greedy(max_new_tokens=8)))
+    b.step()
+    b.step()
+    assert any(r is not None for r in b.rows)
+    b.config.kv_cache_dtype = "int4"
+    with pytest.raises(RuntimeError, match="resident"):
+        b.step()
+    b.config.kv_cache_dtype = "int8"     # flip back: drains normally
+    b.run_to_completion(max_ticks=400)
+
+
+def test_sampling_params_dtype_mismatch_rejected(serving_model):
+    from repro.serving import (ContinuousBatcher, EngineConfig, Request,
+                               SamplingParams)
+    cfg, params = serving_model
+    b = ContinuousBatcher(params, cfg, EngineConfig(
+        batch=2, max_len=64, paged=True))
+    with pytest.raises(ValueError, match="kv_cache_dtype"):
+        b.submit(Request(uid=0, prompt=_prompts(cfg)[0],
+                         sampling=SamplingParams.greedy(
+                             max_new_tokens=4, kv_cache_dtype="int4")))
+    assert not b.queue                   # validation-before-mutation
+    # a matching declaration is accepted
+    b.submit(Request(uid=1, prompt=_prompts(cfg)[0],
+                     sampling=SamplingParams.greedy(
+                         max_new_tokens=4, kv_cache_dtype="int8")))
+    assert b.run_to_completion(max_ticks=400)
+
+
+def test_int8_default_bitwise_pin():
+    """Acceptance: `kv_cache_dtype=int8` (explicit or defaulted) generates
+    exactly what the INDEPENDENT contiguous-cache whole-prompt reference
+    (`greedy_generate`) does — the multi-precision layout left the
+    default backend bitwise-unchanged. Briefly-trained params so argmax
+    margins sit above quantization noise (the `_sharpened_params`
+    recipe)."""
+    from test_prefix_cache import _sharpened_params
+
+    from repro.configs import get_config
+    from repro.serving import (ContinuousBatcher, EngineConfig,
+                               greedy_generate)
+    cfg = get_config("internlm2_1_8b", smoke=True)
+    params, _ = _sharpened_params(cfg)
+    prompts = _prompts(cfg)
+    whole = {i: list(np.asarray(greedy_generate(
+        params, cfg, jnp.asarray(p[None]), steps=5, max_len=64))[0])
+        for i, p in enumerate(prompts)}
+    for ecfg in (EngineConfig(batch=2, max_len=64, paged=True),
+                 EngineConfig(batch=2, max_len=64, paged=True,
+                              kv_cache_dtype="int8", prefill_chunk=8)):
+        b = ContinuousBatcher(params, cfg, ecfg)
+        got = _run_requests(b, prompts)
+        assert got == whole, "int8 paged output diverged from the pin"
+
+
+@pytest.mark.parametrize("kv_dtype", ["fp8_e4m3", "int4"])
+def test_hit_equals_miss_parity(serving_model, kv_dtype):
+    """Acceptance: prefix-cache hit and miss stay BITWISE-equal on the
+    fp8/int4 backends — both paths read the same quantized pages
+    (DESIGN.md §9)."""
+    from repro.serving import ContinuousBatcher, EngineConfig
+    cfg, params = serving_model
+    ecfg = lambda: EngineConfig(batch=1, max_len=64, paged=True,
+                                prefix_cache=True, prefill_chunk=8,
+                                kv_cache_dtype=kv_dtype)
+    rng = np.random.RandomState(11)
+    shared = rng.randint(0, cfg.vocab, (16,)).astype(np.int32)
+    probe = np.concatenate([shared, rng.randint(0, cfg.vocab, (5,))]) \
+        .astype(np.int32)
+    warm = np.concatenate([shared, rng.randint(0, cfg.vocab, (3,))]) \
+        .astype(np.int32)
+    b_hit = ContinuousBatcher(params, cfg, ecfg())
+    _run_requests(b_hit, [warm], uid0=0)
+    h0 = b_hit.allocator.hits
+    got_hit = _run_requests(b_hit, [probe], uid0=1)
+    assert b_hit.allocator.hits > h0, "warm prompt produced no page hits"
+    b_miss = ContinuousBatcher(params, cfg, ecfg())
+    got_miss = _run_requests(b_miss, [probe], uid0=0)
+    assert got_hit == got_miss, f"{kv_dtype}: hit != miss"
+
+
+# -- capacity: int4 pages per pool at equal HBM ------------------------------
+
+def test_int4_page_capacity_ratio():
+    """Acceptance: at serving page sizes (>=128 tokens) an int4 pool fits
+    >=1.9x the pages of an int8 pool in the same HBM — the scale rows
+    don't shrink, so the ratio is (ps+4)/(ps/2+4), not 2.0."""
+    for hkv, d in ((2, 32), (8, 128)):
+        ratio = (PG.page_bytes_for(128, hkv, d, "int8")
+                 / PG.page_bytes_for(128, hkv, d, "int4"))
+        assert ratio >= 1.9, f"ratio {ratio:.3f} at Hkv={hkv} D={d}"
+    # fp8 matches int8 bytes exactly (payload is 1 byte either way)
+    assert PG.page_bytes_for(128, 2, 32, "fp8_e4m3") == \
+        PG.page_bytes_for(128, 2, 32, "int8")
+
+
+def test_pool_report_carries_capacity_ratio(serving_model):
+    """`pool_report()` surfaces the dtype and its pages-vs-int8-at-equal-
+    HBM ratio; at page_size>=128 the int4 ratio meets the >=1.9x claim."""
+    from repro.serving import ContinuousBatcher, EngineConfig
+    cfg, _ = serving_model
+    big = dataclasses.replace(
+        cfg, quant=dataclasses.replace(cfg.quant, block_size=128))
+    b = ContinuousBatcher(None, big, EngineConfig(
+        batch=2, max_len=256, paged=True, kv_cache_dtype="int4"))
+    rep = b.pool_report()
+    assert rep["kv_cache_dtype"] == "int4"
+    assert rep["pages_vs_int8_equal_hbm"] >= 1.9
+    b8 = ContinuousBatcher(None, big, EngineConfig(
+        batch=2, max_len=256, paged=True))
+    assert b8.pool_report()["pages_vs_int8_equal_hbm"] == 1.0

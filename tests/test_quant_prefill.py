@@ -221,13 +221,14 @@ def test_fused_toggle_no_stale_trace():
     prompt = rng.randint(0, cfg.vocab, (29,)).astype(np.int32)
     got_fused = _run_one(b, prompt, 0)
     fused_keys = set(b._chunk_prefill_fns)
-    assert fused_keys and all(f is True for _, f in fused_keys)
+    assert fused_keys and all(f is True for _, f, _dt in fused_keys)
     b.config.use_fused_prefill = False
     got_oracle = _run_one(b, prompt, 1)
     oracle_keys = set(b._chunk_prefill_fns) - fused_keys
-    assert oracle_keys and all(f is False for _, f in oracle_keys)
+    assert oracle_keys and all(f is False for _, f, _dt in oracle_keys)
     # same hist_blocks buckets were re-traced, not reused
-    assert {hb for hb, _ in oracle_keys} <= {hb for hb, _ in fused_keys}
+    assert {hb for hb, _, _ in oracle_keys} <= \
+        {hb for hb, _, _ in fused_keys}
     assert got_fused == got_oracle
 
 
