@@ -25,6 +25,11 @@ regresses by more than the threshold:
     under its analytic ``err_bound``, and the paged-int4 backend's
     perplexity delta vs the position-matched fp reference must stay under
     ``INT4_PPL_DELTA_CEILING_PCT``
+  * the mixed-plan arm (DESIGN.md §10): the profiled plan's ``ppl`` and
+    ``pages_saved_vs_int8_frac`` ride the relative band (so the planner
+    cannot silently collapse to uniform int8), and its measured
+    ``delta_pct`` must stay within the plan's own ``ppl_budget_pct``
+    outright — the profiler's stated contract, gated with no baseline
 
 This turns the CI bench steps from smoke tests into a regression gate: a
 PR that silently halves decode throughput or loses the prefix-cache TTFT
@@ -168,6 +173,18 @@ def accuracy_metrics(data: dict) -> dict[str, tuple[float, bool]]:
         if "ppl" in row:
             out[f"accuracy.ppl.{row.get('config')}"] = (
                 float(row["ppl"]), False)
+    # mixed-plan arm (DESIGN.md §10): the plan's perplexity rides the same
+    # relative band as the uniform arms; the pages-saved fraction is a
+    # pure page-geometry ratio (hardware-independent), gated relatively so
+    # a planner change that quietly collapses the plan back to (near-)
+    # uniform int8 fails instead of shipping a no-op "mixed" artifact
+    mp = data.get("mixed_plan")
+    if mp:
+        if "ppl" in mp:
+            out["accuracy.mixed_plan.ppl"] = (float(mp["ppl"]), False)
+        if "pages_saved_vs_int8_frac" in mp:
+            out["accuracy.mixed_plan.pages_saved_vs_int8_frac"] = (
+                float(mp["pages_saved_vs_int8_frac"]), True)
     return out
 
 
@@ -195,6 +212,16 @@ def accuracy_absolute_violations(data: dict) -> list[str]:
                            f"{row['delta_pct']:+.2f}% over the fp reference "
                            f"exceeds the outright ceiling "
                            f"{INT4_PPL_DELTA_CEILING_PCT:.0f}%")
+    # mixed-plan outright gate (DESIGN.md §10): the plan JSON states the
+    # accuracy budget it was selected under; the measured mixed-stack
+    # delta must honor it — this is the profiler's own contract, so no
+    # baseline (and no extra tunable ceiling) is involved
+    mp = data.get("mixed_plan")
+    if mp and "delta_pct" in mp and "ppl_budget_pct" in mp:
+        if abs(float(mp["delta_pct"])) > float(mp["ppl_budget_pct"]):
+            bad.append(f"accuracy.mixed_plan: measured delta "
+                       f"{mp['delta_pct']:+.3f}% breaks the plan's own "
+                       f"--ppl-budget of {mp['ppl_budget_pct']:g}%")
     return bad
 
 

@@ -9,7 +9,7 @@ import sys
 from benchmarks import (attention_error, bitwidth_ablation, e2e_decode,
                         error_bench, kernel_bench, kernel_variants,
                         memory_table, overload, paged_vs_contiguous,
-                        perplexity_delta, prefix_cache)
+                        perplexity_delta, prefix_cache, sensitivity)
 
 SUITES = [
     ("table1_memory", memory_table),
@@ -35,10 +35,15 @@ def main() -> None:
                     help="write the decode benchmark to BENCH_decode.json")
     ap.add_argument("--json-path", default="BENCH_decode.json")
     ap.add_argument("--accuracy-json", action="store_true",
-                    help="run the bitwidth ablation + perplexity delta and "
-                         "write BENCH_accuracy.json (multi-precision "
-                         "accuracy gate inputs — DESIGN.md §9)")
+                    help="run the bitwidth ablation + perplexity delta + "
+                         "per-layer sensitivity profiler and write "
+                         "BENCH_accuracy.json (multi-precision accuracy "
+                         "gate inputs — DESIGN.md §9/§10); the profiler's "
+                         "plan is also written to --plan-json-path")
     ap.add_argument("--accuracy-json-path", default="BENCH_accuracy.json")
+    ap.add_argument("--plan-json-path", default="PLAN_kv_mixed.json",
+                    help="where --accuracy-json writes the profiler's "
+                         "PrecisionPlan (DESIGN.md §10)")
     args = ap.parse_args()
     failures = 0
     for name, mod in SUITES:
@@ -69,15 +74,20 @@ def main() -> None:
             print(f"{args.json_path},FAILED,{type(e).__name__}: {e}")
     if args.accuracy_json:
         try:
+            profile = sensitivity.run()
             data = {
                 "bitwidth": bitwidth_ablation.run(),
                 "perplexity": [{k: v for k, v in r.items()
                                 if not k.startswith("_")}
                                for r in perplexity_delta.run()],
+                "mixed_plan": profile["summary"],
             }
             with open(args.accuracy_json_path, "w") as f:
                 json.dump(data, f, indent=2)
             print(f"# wrote {args.accuracy_json_path}")
+            with open(args.plan_json_path, "w") as f:
+                json.dump(profile["plan"], f, indent=2)
+            print(f"# wrote {args.plan_json_path}")
         except Exception as e:                        # pragma: no cover
             failures += 1
             print(f"{args.accuracy_json_path},FAILED,"

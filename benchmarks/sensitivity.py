@@ -1,0 +1,216 @@
+"""Per-layer KV-precision sensitivity profiler (DESIGN.md §10).
+
+The adaptive half of the memory/accuracy curve: uniform backends (§9)
+spend the same bits on every layer, but layers are not equally sensitive
+to KV quantization (NQKV's distribution-aware observation; "Cache Me If
+You Must" — PAPERS.md). This profiler measures each layer's actual cost:
+it runs the perplexity-delta harness (benchmarks/perplexity_delta.py)
+with ONE layer at a time dropped from int8 to a candidate dtype, then a
+greedy planner flips layers cheapest-first until the *measured* mixed
+perplexity delta vs the fp reference would leave the ``--ppl-budget``,
+always keeping the ``--min-int8-layers`` most sensitive layers at int8
+as an outlier-safety margin. The result is a ``PrecisionPlan`` JSON
+(layer -> kv dtype, with the measured per-layer delta and the analytic
+per-choice error bound) that the engine consumes directly:
+
+    PYTHONPATH=src:. python benchmarks/sensitivity.py \
+        --ppl-budget 1.0 --out PLAN_kv_mixed.json
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \
+        --smoke --layers 4 --kv-cache-plan PLAN_kv_mixed.json
+
+The bench model is the smoke config deepened to ``--layers`` layers
+(default 4) so a mixed plan has room to be genuinely heterogeneous;
+page-bytes savings are reported at the serving page size (128), the
+geometry the README's capacity table uses. Deterministic seeds, CPU
+math — the emitted plan is reproducible and committed as
+PLAN_kv_mixed.json, with its summary gated from BENCH_accuracy.json
+(benchmarks/check_regression.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import quantization as Q
+from repro.core.paging import page_bytes_for
+from repro.core.quantization import QuantConfig
+from repro.models import transformer as T
+from repro.training.loss import next_token_loss
+
+from benchmarks.perplexity_delta import _ppl_via_decode, _train_small
+
+# one quantization step relative to the per-(page, channel) absmax — the
+# same analytic ceilings the bitwidth ablation gates (int8: absmax/127;
+# fp8_e4m3: absmax/8, the 3-bit-mantissa grid; int4: absmax/7)
+_ERR_BOUND_REL = {"int8": 1 / 127.0, "fp8_e4m3": 1 / 8.0, "int4": 1 / 7.0}
+
+# pages-saved accounting runs at the serving page size — the geometry of
+# the README capacity table (1.94x int4 at ps=128) — not the tiny bench
+# page size, so the committed number describes the production layout
+_SERVE_PAGE_SIZE = 128
+
+
+def _stack_page_bytes(cfg, layer_dtypes, page_size=_SERVE_PAGE_SIZE):
+    return sum(page_bytes_for(page_size, cfg.n_kv_heads, cfg.head_dim, dt)
+               for dt in layer_dtypes)
+
+
+def pages_saved_frac(cfg, layer_dtypes,
+                     page_size: int = _SERVE_PAGE_SIZE) -> float:
+    """Fraction of KV page bytes a per-layer plan saves vs uniform int8
+    at equal token capacity (page-bytes-weighted over the stack,
+    DESIGN.md §10)."""
+    mixed = _stack_page_bytes(cfg, layer_dtypes, page_size)
+    int8 = _stack_page_bytes(cfg, ["int8"] * len(layer_dtypes), page_size)
+    return 1.0 - mixed / int8
+
+
+def run(ppl_budget_pct: float = 1.0, n_layers: int = 4,
+        candidate: str = "int4", min_int8_layers: int = 1) -> dict:
+    """Profile per-layer sensitivity and emit the greedy plan.
+
+    Returns ``{"plan": <PrecisionPlan JSON + profile metadata>,
+    "summary": <the BENCH_accuracy.json 'mixed_plan' row>}``. The plan's
+    per-layer rows carry the measured solo-drop perplexity delta
+    (that layer alone at ``candidate``, all others int8) and the analytic
+    absmax-relative error bound of the chosen format (DESIGN.md §10)."""
+    base = get_config("internlm2_1_8b", smoke=True)
+    cfg = dataclasses.replace(
+        base, n_layers=n_layers,
+        quant=QuantConfig(granularity="per_block", block_size=8))
+    params, data = _train_small(cfg)
+    eval_toks = jnp.asarray(data.batch_at(999)["tokens"][:, :48])
+    prefix = 24
+
+    logits, _ = T.forward_train(params, eval_toks, cfg, remat=False)
+    lbl = jnp.where(jnp.arange(eval_toks.shape[1] - 1)[None] >= prefix - 1,
+                    eval_toks[:, 1:], -1)
+    fp_ref = float(jnp.exp(next_token_loss(logits[:, :-1], lbl, cfg.vocab)))
+
+    def measured_delta(layer_dtypes) -> tuple[float, float]:
+        spec = tuple(layer_dtypes)
+        ppl = _ppl_via_decode(params, cfg, eval_toks, prefix, paged=True,
+                              kv_cache_dtype=spec)
+        return ppl, 100.0 * (ppl - fp_ref) / fp_ref
+
+    base_ppl, base_delta = measured_delta(["int8"] * n_layers)
+
+    # solo drops: layer l alone at the candidate dtype, the rest int8;
+    # sensitivity = how much that single flip moves the delta
+    sens = []
+    for layer in range(n_layers):
+        dts = ["int8"] * n_layers
+        dts[layer] = candidate
+        _, delta = measured_delta(dts)
+        sens.append({"layer": layer, "solo_delta_pct": delta,
+                     "sensitivity_pct": delta - base_delta})
+
+    # greedy: flip cheapest-measured layers first, keep the top
+    # min_int8_layers most sensitive at int8 as the outlier-safety margin
+    order = sorted(range(n_layers),
+                   key=lambda l: (sens[l]["sensitivity_pct"], l))
+    chosen = ["int8"] * n_layers
+    flipped: list[int] = []
+    for layer in order:
+        if n_layers - len(flipped) <= min_int8_layers:
+            break
+        predicted = base_delta + sum(sens[f]["sensitivity_pct"]
+                                     for f in flipped + [layer])
+        if abs(predicted) > ppl_budget_pct:
+            continue
+        chosen[layer] = candidate
+        flipped.append(layer)
+
+    # certify the actual mixed stack, not the linear prediction; if the
+    # measured delta leaves the budget, unflip most-sensitive-first
+    plan_ppl, plan_delta = measured_delta(chosen)
+    while abs(plan_delta) > ppl_budget_pct and flipped:
+        worst = max(flipped, key=lambda l: sens[l]["sensitivity_pct"])
+        flipped.remove(worst)
+        chosen[worst] = "int8"
+        plan_ppl, plan_delta = measured_delta(chosen)
+
+    plan = Q.PrecisionPlan(tuple(chosen), ppl_budget_pct=ppl_budget_pct,
+                           measured_delta_pct=plan_delta)
+    saved = pages_saved_frac(cfg, chosen)
+    plan_json = plan.to_json()
+    for row in plan_json["layers"]:
+        layer = row["layer"]
+        row["solo_delta_pct"] = sens[layer]["solo_delta_pct"]
+        row["sensitivity_pct"] = sens[layer]["sensitivity_pct"]
+        row["err_bound_rel_absmax"] = _ERR_BOUND_REL[row["kv_dtype"]]
+    plan_json.update({
+        "profiler": "benchmarks/sensitivity.py",
+        "arch": "internlm2_1_8b_smoke",
+        "n_layers": n_layers,
+        "candidate": candidate,
+        "min_int8_layers": min_int8_layers,
+        "fp_ref_ppl": fp_ref,
+        "uniform_int8_ppl": base_ppl,
+        "uniform_int8_delta_pct": base_delta,
+        "measured_ppl": plan_ppl,
+        "pages_saved_vs_int8_frac": saved,
+        "pages_saved_page_size": _SERVE_PAGE_SIZE,
+    })
+    summary = {
+        "bench": "mixed_plan",
+        "config": f"budget{ppl_budget_pct:g}_{candidate}",
+        "layer_dtypes": list(chosen),
+        "ppl": plan_ppl,
+        "delta_pct": plan_delta,
+        "ppl_budget_pct": ppl_budget_pct,
+        "uniform_int8_ppl": base_ppl,
+        "uniform_int8_delta_pct": base_delta,
+        "pages_saved_vs_int8_frac": saved,
+    }
+    return {"plan": plan_json, "summary": summary}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Per-layer KV-precision sensitivity profiler "
+                    "(DESIGN.md §10): measures each layer's perplexity "
+                    "cost at a cheaper dtype and emits the greedy "
+                    "PrecisionPlan under --ppl-budget.")
+    ap.add_argument("--ppl-budget", type=float, default=1.0,
+                    help="max |perplexity delta| vs the fp reference the "
+                         "mixed plan may measure, in percent (default 1.0)")
+    ap.add_argument("--layers", type=int, default=4,
+                    help="bench model depth (smoke config deepened; "
+                         "default 4)")
+    ap.add_argument("--candidate", default="int4",
+                    choices=[d for d in Q.KV_DTYPES if d != "int8"],
+                    help="the cheaper dtype layers may drop to "
+                         "(default int4)")
+    ap.add_argument("--min-int8-layers", type=int, default=1,
+                    help="always keep this many most-sensitive layers at "
+                         "int8 (outlier-safety margin; default 1)")
+    ap.add_argument("--out", default=None, metavar="PLAN_JSON",
+                    help="write the PrecisionPlan JSON here")
+    args = ap.parse_args(argv)
+    res = run(ppl_budget_pct=args.ppl_budget, n_layers=args.layers,
+              candidate=args.candidate,
+              min_int8_layers=args.min_int8_layers)
+    s = res["summary"]
+    for row in res["plan"]["layers"]:
+        print(f"sensitivity_layer{row['layer']},"
+              f"{row['sensitivity_pct'] * 1000:+.0f},"
+              f"kv_dtype={row['kv_dtype']} "
+              f"solo_delta={row['solo_delta_pct']:+.3f}%")
+    print(f"mixed_plan_{s['config']},{s['ppl'] * 1000:.0f},"
+          f"ppl={s['ppl']:.4f} delta={s['delta_pct']:+.3f}% "
+          f"(budget {s['ppl_budget_pct']:g}%) "
+          f"plan={'/'.join(s['layer_dtypes'])} "
+          f"pages_saved={s['pages_saved_vs_int8_frac']:.1%}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res["plan"], f, indent=2)
+        print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

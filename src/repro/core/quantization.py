@@ -11,8 +11,10 @@ channel axis is always the LAST axis, token axis the SECOND-TO-LAST.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from functools import partial
-from typing import Literal
+from typing import Literal, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -378,3 +380,153 @@ def quantize_page_matrix(x: jax.Array,
         return quantize_int4(x)
     raise QuantizationError(f"unknown kv_cache_dtype {kv_dtype!r}; "
                             f"expected one of {KV_DTYPES}")
+
+# ---------------------------------------------------------------------------
+# Adaptive per-layer precision plans (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPlan:
+    """Per-layer KV-cache precision assignment (DESIGN.md §10).
+
+    ``layer_dtypes[l]`` names the KV storage format (one of ``KV_DTYPES``)
+    for transformer layer ``l``. Plans are produced by the sensitivity
+    profiler (``benchmarks/sensitivity.py``), which measures the perplexity
+    delta of dropping each layer to a cheaper dtype and greedily picks the
+    cheapest stack whose measured delta stays under ``--ppl-budget``; the
+    engine consumes them via ``EngineConfig(kv_cache_dtype=plan)`` (a
+    ``PrecisionPlan``, a plan dict, or a path to a plan JSON all work).
+
+    ``ppl_budget_pct`` / ``measured_delta_pct`` record the budget the plan
+    was selected under and the measured perplexity delta of the full mixed
+    stack vs the fp reference — carried along so the serving side can report
+    what accuracy contract a running plan was certified against.
+    """
+
+    layer_dtypes: tuple[str, ...]
+    ppl_budget_pct: float | None = None
+    measured_delta_pct: float | None = None
+
+    def __post_init__(self):
+        dts = tuple(self.layer_dtypes)
+        if not dts:
+            raise QuantizationError("PrecisionPlan needs at least one layer")
+        for i, dt in enumerate(dts):
+            if dt not in KV_DTYPES:
+                raise QuantizationError(
+                    f"PrecisionPlan layer {i}: unknown kv dtype {dt!r}; "
+                    f"expected one of {KV_DTYPES}")
+        object.__setattr__(self, "layer_dtypes", dts)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_dtypes)
+
+    @property
+    def is_uniform(self) -> bool:
+        """True when every layer shares one dtype (the plan collapses to a
+        plain dtype string and the engine keeps the stacked uniform path)."""
+        return len(set(self.layer_dtypes)) == 1
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "PrecisionPlan":
+        """Build a plan from its JSON dict form (DESIGN.md §10).
+
+        Accepts either the profiler's schema —
+        ``{"layers": [{"layer": 0, "kv_dtype": "int4", ...}, ...]}`` —
+        or the compact ``{"layer_dtypes": ["int8", "int4", ...]}`` form.
+        """
+        if not isinstance(obj, dict):
+            raise QuantizationError(
+                f"precision plan must be a dict, got {type(obj).__name__}")
+        if "layer_dtypes" in obj:
+            dts = tuple(obj["layer_dtypes"])
+        elif "layers" in obj:
+            rows = sorted(obj["layers"], key=lambda r: int(r["layer"]))
+            want = list(range(len(rows)))
+            got = [int(r["layer"]) for r in rows]
+            if got != want:
+                raise QuantizationError(
+                    f"precision plan layers must be 0..{len(rows) - 1} "
+                    f"exactly once, got {got}")
+            dts = tuple(r["kv_dtype"] for r in rows)
+        else:
+            raise QuantizationError(
+                "precision plan dict needs a 'layers' or 'layer_dtypes' key")
+        return cls(layer_dtypes=dts,
+                   ppl_budget_pct=obj.get("ppl_budget_pct"),
+                   measured_delta_pct=obj.get("measured_delta_pct"))
+
+    @classmethod
+    def load(cls, path: str) -> "PrecisionPlan":
+        """Load a plan JSON written by ``benchmarks/sensitivity.py``."""
+        if not os.path.exists(path):
+            raise QuantizationError(f"precision plan file not found: {path!r}")
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+    def to_json(self) -> dict:
+        """The canonical plan JSON (round-trips through ``from_json``)."""
+        out: dict = {
+            "version": 1,
+            "kind": "kv_precision_plan",
+            "layers": [{"layer": i, "kv_dtype": dt}
+                       for i, dt in enumerate(self.layer_dtypes)],
+        }
+        if self.ppl_budget_pct is not None:
+            out["ppl_budget_pct"] = self.ppl_budget_pct
+        if self.measured_delta_pct is not None:
+            out["measured_delta_pct"] = self.measured_delta_pct
+        return out
+
+
+def resolve_kv_dtype_spec(spec, n_layers: int | None = None):
+    """Normalize any accepted ``kv_cache_dtype`` form (DESIGN.md §10).
+
+    Inputs: a dtype string from ``KV_DTYPES``; a ``PrecisionPlan``; a plan
+    dict (``PrecisionPlan.from_json`` schema); a path to a plan JSON; or a
+    per-layer sequence of dtype strings. Returns the canonical spec the
+    engine keys traces on: a plain dtype ``str`` when every layer agrees
+    (uniform plans collapse, so an all-int8 plan is bitwise the default
+    engine), else a ``tuple`` of per-layer dtype strings. When ``n_layers``
+    is given the plan length must match it exactly.
+    """
+    if isinstance(spec, str):
+        if spec in KV_DTYPES:
+            return spec
+        if spec.endswith(".json") or os.sep in spec:
+            spec = PrecisionPlan.load(spec)
+        else:
+            raise QuantizationError(
+                f"unknown kv_cache_dtype {spec!r}; expected one of "
+                f"{KV_DTYPES}, a PrecisionPlan, a plan dict, or a path to a "
+                f"plan JSON (benchmarks/sensitivity.py emits one)")
+    if isinstance(spec, dict):
+        spec = PrecisionPlan.from_json(spec)
+    if isinstance(spec, (list, tuple)):
+        spec = PrecisionPlan(layer_dtypes=tuple(spec))
+    if not isinstance(spec, PrecisionPlan):
+        raise QuantizationError(
+            f"cannot interpret kv_cache_dtype spec of type "
+            f"{type(spec).__name__}; expected one of {KV_DTYPES}, a "
+            f"PrecisionPlan, a plan dict, a per-layer sequence, or a plan "
+            f"JSON path")
+    if n_layers is not None and spec.n_layers != n_layers:
+        raise QuantizationError(
+            f"precision plan covers {spec.n_layers} layers but the model "
+            f"has {n_layers}")
+    if spec.is_uniform:
+        return spec.layer_dtypes[0]
+    return spec.layer_dtypes
+
+
+def layer_kv_dtypes(spec, n_layers: int) -> tuple[str, ...]:
+    """Expand a resolved spec (str or per-layer tuple) to one dtype per
+    layer — the init-time form ``transformer.init_decode_state`` consumes
+    (DESIGN.md §10)."""
+    resolved = resolve_kv_dtype_spec(spec, n_layers=None if isinstance(
+        spec, str) and spec in KV_DTYPES else n_layers)
+    if isinstance(resolved, str):
+        return (resolved,) * n_layers
+    return resolved

@@ -12,9 +12,17 @@ import time
 
 
 def main(argv=None):
+    # the source of truth for valid dtypes — a typo must die in argparse
+    # with the real names, not as a KeyError deep in pool init
+    from repro.core.quantization import KV_DTYPES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="override the architecture's layer count (e.g. to "
+                         "match a precision plan profiled at a different "
+                         "depth)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
@@ -45,14 +53,23 @@ def main(argv=None):
                          "long prompts interleave with decode ticks and "
                          "the final partial chunk carries a per-row valid "
                          "length (implies --paged)")
-    ap.add_argument("--kv-cache-dtype", default="int8",
-                    choices=["int8", "fp8_e4m3", "int4"],
-                    help="page-pool storage format (DESIGN.md §9): int8 "
-                         "(the paper's format, default), fp8_e4m3, or "
-                         "int4 (two tokens per byte — ~1.9x pages per "
-                         "pool at equal HBM). Per-page f32 scales stream "
-                         "identically for every format; non-int8 implies "
-                         "--paged")
+    ap.add_argument("--kv-cache-dtype", default=None,
+                    choices=list(KV_DTYPES),
+                    help=f"uniform page-pool storage format (DESIGN.md "
+                         f"§9), one of {'/'.join(KV_DTYPES)}: int8 is the "
+                         f"paper's format and the default; int4 stores "
+                         f"two tokens per byte (~1.9x pages per pool at "
+                         f"equal HBM). Per-page f32 scales stream "
+                         f"identically for every format; non-int8 implies "
+                         f"--paged. Mutually exclusive with "
+                         f"--kv-cache-plan")
+    ap.add_argument("--kv-cache-plan", default=None, metavar="PLAN_JSON",
+                    help="per-layer mixed-precision plan (DESIGN.md §10): "
+                         "path to a plan JSON emitted by "
+                         "benchmarks/sensitivity.py (layer -> kv dtype "
+                         "chosen under a measured perplexity budget). "
+                         "Implies --paged; mutually exclusive with "
+                         "--kv-cache-dtype")
     ap.add_argument("--watermark", type=int, default=None,
                     help="optimistic admission: reserve only the prompt's "
                          "pages plus this many pages of decode headroom "
@@ -87,9 +104,17 @@ def main(argv=None):
                          "tokenizer configured, token id T renders as "
                          "'<T>'")
     args = ap.parse_args(argv)
+    if args.kv_cache_plan is not None and args.kv_cache_dtype is not None:
+        ap.error("--kv-cache-plan and --kv-cache-dtype are mutually "
+                 "exclusive: a plan assigns every layer's dtype itself "
+                 "(DESIGN.md §10)")
+    kv_spec = (args.kv_cache_plan if args.kv_cache_plan is not None
+               else args.kv_cache_dtype or "int8")
     if (args.prefix_cache or args.prefill_chunk
-            or args.watermark is not None or args.kv_cache_dtype != "int8"):
+            or args.watermark is not None or kv_spec != "int8"):
         args.paged = True
+
+    import dataclasses
 
     import jax
     import numpy as np
@@ -100,6 +125,8 @@ def main(argv=None):
                                kv_cache_memory_report)
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=args.layers)
     rep = kv_cache_memory_report(get_config(args.arch), 128, 32_768)
     print(f"[serve] {args.arch}: full-size cache at decode_32k "
           f"fp32={rep['fp32_bytes']/2**30:.0f}GiB "
@@ -111,7 +138,7 @@ def main(argv=None):
         n_pages=args.pages, chunk=args.chunk,
         prefix_cache=args.prefix_cache, prefill_chunk=args.prefill_chunk,
         watermark=args.watermark, aging_ticks=args.aging_ticks,
-        kv_cache_dtype=args.kv_cache_dtype))
+        kv_cache_dtype=kv_spec))
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab,
                            (args.prompt_len,)).astype(np.int32)
@@ -144,6 +171,11 @@ def main(argv=None):
               f"{rep['pages_vs_int8_equal_hbm']:.2f}x pages vs int8 at "
               f"equal HBM), {rep['pages_free']} free after drain, "
               f"{rep['pages_cached']} cached")
+        if "kv_cache_layer_dtypes" in rep:
+            print(f"[serve] precision plan: "
+                  f"{'/'.join(rep['kv_cache_layer_dtypes'])} "
+                  f"({rep['kv_page_bytes_saved_vs_int8_frac']:.0%} page "
+                  f"bytes saved vs uniform int8)")
         if args.watermark is not None:
             resumes = (rep['preempt_fast_resumes']
                        + rep['preempt_recompute_resumes'])

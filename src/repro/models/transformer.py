@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import kvcache as KV
 from repro.core import paging as PG
+from repro.core import quantization as Q
 from repro.models import attention, mlp, moe, rglru, sampling as SMP, xlstm
 from repro.models.common import (act_shard, embed_init, rmsnorm, rmsnorm_init,
                                  layernorm, layernorm_init, dense_init,
@@ -199,7 +200,7 @@ def _head(params, x, cfg: ModelConfig):
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
                       state_quant: bool = True, *, paged: bool = False,
                       n_pages: int | None = None,
-                      kv_cache_dtype: str = "int8"):
+                      kv_cache_dtype="int8"):
     """Stacked caches: state["p{i}"] has leading dim n_groups; state["tail"]
     is a list of unstacked caches.
 
@@ -207,11 +208,22 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
     over per-layer page pools of `n_pages` pages each (DESIGN.md §5). Paged
     serving needs every layer's state to honor row-masked prefill, so it is
     restricted to pure-attention stacks without sliding windows.
+
+    `kv_cache_dtype` accepts any spec `Q.resolve_kv_dtype_spec` understands
+    (a dtype string, a `PrecisionPlan`, a plan dict/path, or a per-layer
+    sequence — DESIGN.md §10). A uniform spec keeps the stacked layout
+    bitwise-unchanged; a *mixed* plan cannot stack (the pool dtype is a
+    pytree meta field, so heterogeneous caches have different treedefs) and
+    each state["p{i}"] becomes a plain list of n_groups per-layer caches
+    that `_serve` walks with an unrolled group loop.
     """
     period, n_groups, tail = _pattern_layout(cfg)
-    if kv_cache_dtype != "int8" and not paged:
+    spec = Q.resolve_kv_dtype_spec(kv_cache_dtype, n_layers=cfg.n_layers)
+    layer_dts = Q.layer_kv_dtypes(spec, cfg.n_layers)
+    mixed = not isinstance(spec, str)
+    if any(dt != "int8" for dt in layer_dts) and not paged:
         raise ValueError(
-            f"kv_cache_dtype={kv_cache_dtype!r} requires the paged cache "
+            f"kv_cache_dtype={spec!r} requires the paged cache "
             f"(the contiguous backends are int8-only)")
     if paged:
         bad = [k for k in cfg.block_pattern if k not in ("attn", "moe")]
@@ -223,12 +235,12 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
         if n_pages is None:   # default: dense capacity (no oversubscription)
             n_pages = batch * (max_len // cfg.quant.block_size) + 1
 
-    def one(kind):
+    def one(kind, kv_dt):
         if kind in ("attn", "local_attn", "moe"):
             if paged:
                 return PG.PagedQuantizedKVCache.init(
                     batch, cfg.n_kv_heads, max_len, cfg.head_dim, cfg.quant,
-                    n_pages=n_pages, kv_dtype=kv_cache_dtype)
+                    n_pages=n_pages, kv_dtype=kv_dt)
             eff = max_len
             if cfg.sliding_window:   # SWA (mixtral) / local attn (griffin)
                 eff = min(max_len, _round_block(cfg.sliding_window, cfg))
@@ -245,9 +257,14 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
 
     state: dict[str, Any] = {}
     for i, kind in enumerate(cfg.block_pattern):
-        caches = [one(kind) for _ in range(n_groups)]
-        state[f"p{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
-    state["tail"] = [one(cfg.block_kind(n_groups * period + j))
+        caches = [one(kind, layer_dts[g * period + i])
+                  for g in range(n_groups)]
+        if mixed:
+            state[f"p{i}"] = caches           # unstackable: per-layer dtypes
+        else:
+            state[f"p{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    state["tail"] = [one(cfg.block_kind(n_groups * period + j),
+                         layer_dts[n_groups * period + j])
                      for j in range(tail)]
     return state
 
@@ -323,8 +340,22 @@ def _serve(params, tok, cfg: ModelConfig, state, positions, mode: str,
     if n_groups:
         gp = {k: v for k, v in params["blocks"].items()}
         caches = {k: state[k] for k in gp}
-        x, new_caches = jax.lax.scan(group_body, x, (gp, caches))
-        new_state.update(new_caches)
+        if any(isinstance(v, list) for v in caches.values()):
+            # Mixed-precision stack (DESIGN.md §10): per-layer caches carry
+            # different pool dtypes, so they cannot be stacked for the scan.
+            # Unroll the group loop; compile time becomes O(n_layers) — the
+            # documented cost of a heterogeneous plan.
+            new_caches = {k: [] for k in caches}
+            for g in range(n_groups):
+                gparams = jax.tree.map(lambda a: a[g], gp)
+                layer_caches = {k: v[g] for k, v in caches.items()}
+                x, nc = group_body(x, (gparams, layer_caches))
+                for k in caches:
+                    new_caches[k].append(nc[k])
+            new_state.update(new_caches)
+        else:
+            x, new_caches = jax.lax.scan(group_body, x, (gp, caches))
+            new_state.update(new_caches)
     new_state["tail"] = []
     for j, bp in enumerate(params["tail"]):
         kind = cfg.block_kind(n_groups * period + j)

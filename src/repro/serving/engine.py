@@ -35,14 +35,15 @@ from repro.models import encdec, transformer
 
 def make_serve_fns(cfg: ModelConfig, *, max_len: int, paged: bool = False,
                    n_pages: int | None = None,
-                   kv_cache_dtype: str = "int8"):
+                   kv_cache_dtype="int8"):
     """Returns (init_state, prefill, decode_step) closed over cfg.
 
     ``paged=True`` backs the decode state with page pools of `n_pages` pages
     per layer; `prefill(params, inputs, state, row_mask)` then restricts
-    cache writes to the masked rows. ``kv_cache_dtype`` picks the pool's
-    storage format (int8 / fp8_e4m3 / int4 — DESIGN.md §9); non-int8
-    requires ``paged=True``."""
+    cache writes to the masked rows. ``kv_cache_dtype`` picks the pool
+    storage format: a dtype string (int8 / fp8_e4m3 / int4 — DESIGN.md §9)
+    or a per-layer spec (a ``PrecisionPlan``, plan dict/path, or per-layer
+    tuple — DESIGN.md §10); non-int8 anywhere requires ``paged=True``."""
 
     if cfg.family == "encdec":
         if paged:
@@ -92,13 +93,15 @@ def make_chunk_prefill_fn(cfg: ModelConfig, *, hist_blocks: int | None = None,
     ``use_fused`` picks fused paged prefill attention vs the
     dequantize-gather oracle (`attention.prefill_chunk`); it is part of
     the closure identity, so the scheduler's trace cache must key on it.
-    ``kv_cache_dtype`` declares the pool format this closure serves
-    (DESIGN.md §9) — the attention code reads the authoritative dtype off
-    the cache pytree's meta field, but the declaration is part of the
-    closure identity too (the scheduler keys its trace cache on it) and
-    is checked against the state at trace time so a stale closure fails
-    loudly instead of silently re-tracing. Paged decoder-only stacks
-    only."""
+    ``kv_cache_dtype`` declares the pool format this closure serves —
+    a dtype string (DESIGN.md §9) or a per-layer tuple for a mixed plan
+    (DESIGN.md §10; mixed states carry list-valued ``p{i}`` entries, one
+    cache per layer group). The attention code reads the authoritative
+    dtype off each cache pytree's meta field, but the declaration is part
+    of the closure identity too (the scheduler keys its trace cache on it)
+    and is checked per layer against the state at trace time so a stale
+    closure fails loudly instead of silently re-tracing. Paged
+    decoder-only stacks only."""
     if cfg.family == "encdec":
         raise ValueError("chunked prefill is decoder-only")
     # same precondition init_decode_state(paged=True) enforces, restated
@@ -111,15 +114,33 @@ def make_chunk_prefill_fn(cfg: ModelConfig, *, hist_blocks: int | None = None,
             f"kinds={bad or cfg.block_pattern}, "
             f"sliding_window={cfg.sliding_window})")
 
+    period = len(cfg.block_pattern)
+    n_groups = cfg.n_layers // period
+
+    def _expected_dtype(layer: int) -> str:
+        if isinstance(kv_cache_dtype, str):
+            return kv_cache_dtype
+        return kv_cache_dtype[layer]
+
     def chunk_prefill(params, tokens, state, start, valid, row_mask):
-        for c in list(state.values()) + list(state.get("tail", ())):
+        layered = []   # (layer index, cache) pairs in state order
+        for key, val in state.items():
+            if key == "tail":
+                layered += [(n_groups * period + j, c)
+                            for j, c in enumerate(val)]
+            elif isinstance(val, list):   # mixed plan: one cache per group
+                layered += [(g * period + int(key[1:]), c)
+                            for g, c in enumerate(val)]
+            else:                         # stacked: uniform across groups
+                layered.append((int(key[1:]), val))
+        for layer, c in layered:
             pool = getattr(c, "pool", None)
-            if pool is not None and pool.kv_dtype != kv_cache_dtype:
+            if pool is not None and pool.kv_dtype != _expected_dtype(layer):
                 raise ValueError(
                     f"chunk-prefill closure built for "
                     f"kv_cache_dtype={kv_cache_dtype!r} got a "
-                    f"{pool.kv_dtype!r} pool — the scheduler's trace "
-                    f"cache key is stale")
+                    f"{pool.kv_dtype!r} pool at layer {layer} — the "
+                    f"scheduler's trace cache key is stale")
         return transformer.prefill_chunk(params, tokens, cfg, state,
                                          start=start, valid=valid,
                                          row_mask=row_mask,
@@ -237,6 +258,17 @@ def kv_cache_memory_report(cfg: ModelConfig, batch: int, seq: int,
         "compression_vs_fp32": 4.0,
         "compression_vs_bf16": 2.0,
     }
+    layer_dtypes = None
+    if isinstance(paged_cache, list):
+        # Mixed-precision stack (DESIGN.md §10): per-layer caches. The
+        # scheduler drives every layer's allocator in lockstep, so read
+        # occupancy off the first; page bytes are averaged over layers.
+        layer_dtypes = [c.pool.kv_dtype for c in paged_cache]
+        mixed_bytes = [int(np.sum([a.size * a.dtype.itemsize for a in
+                                   (c.pool.k_q, c.pool.v_q, c.pool.k_s,
+                                    c.pool.v_s)])) // c.pool.k_q.shape[-4]
+                       for c in paged_cache]
+        paged_cache = paged_cache[0]
     if paged_cache is not None:
         pool = paged_cache.pool
         ps = pool.page_size
@@ -260,8 +292,12 @@ def kv_cache_memory_report(cfg: ModelConfig, batch: int, seq: int,
         page_bytes = sum(n(a) for a in (pool.k_q, pool.v_q, pool.k_s,
                                         pool.v_s)) // max(lead, 1) // n_pages
         allocated = capacity - n_free
+        if layer_dtypes is not None:
+            page_bytes = sum(mixed_bytes) // len(mixed_bytes)
+            rep["kv_cache_layer_dtypes"] = layer_dtypes
         rep.update({
-            "kv_cache_dtype": pool.kv_dtype,
+            "kv_cache_dtype": ("mixed" if layer_dtypes is not None
+                               else pool.kv_dtype),
             "pool_pages_total": capacity,
             "pool_pages_allocated": allocated,
             "pool_pages_live": live,

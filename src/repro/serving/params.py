@@ -162,12 +162,19 @@ class EngineConfig:
     dequantize-gather oracle path — parity-equal, slower, kept for
     debugging and A/B benchmarks. Read per dispatch, so flipping it on a
     live scheduler recompiles rather than serving a stale trace.
-    `kv_cache_dtype` selects the page-pool storage format
-    (``int8`` default / ``fp8_e4m3`` / ``int4`` — DESIGN.md §9); non-int8
-    requires `paged=True`. Read per dispatch like `use_fused_prefill`:
-    the chunk/decode fn caches are keyed on the dtype, and flipping it on
-    an idle scheduler rebuilds the pool and recompiles rather than
-    serving a stale trace (flipping with requests in flight raises).
+    `kv_cache_dtype` selects the page-pool storage format: a uniform
+    dtype string (``int8`` default / ``fp8_e4m3`` / ``int4`` —
+    DESIGN.md §9), or a per-layer precision plan (DESIGN.md §10) as a
+    `core.quantization.PrecisionPlan`, a plan dict, a path to a plan JSON
+    emitted by ``benchmarks/sensitivity.py``, or a per-layer dtype
+    sequence. Plans normalize at construction: an all-one-dtype plan
+    collapses to its dtype string (so an all-int8 plan IS the default
+    engine, bitwise), a genuinely mixed plan becomes a per-layer dtype
+    tuple. Anything non-int8 anywhere requires `paged=True`. Read per
+    dispatch like `use_fused_prefill`: the chunk/decode fn caches are
+    keyed on the resolved spec, and flipping it on an idle scheduler
+    rebuilds the pools and recompiles rather than serving a stale trace
+    (flipping with requests in flight raises).
 
     Overload controls (DESIGN.md §8, paged backend): `watermark` switches
     admission from the worst-case ``prompt + max_new`` page reservation to
@@ -192,7 +199,7 @@ class EngineConfig:
     prefill_chunk: int | None = None
     detokenize: Callable[[Sequence[int]], str] | None = None
     use_fused_prefill: bool = True
-    kv_cache_dtype: str = "int8"         # page-pool storage format (§9)
+    kv_cache_dtype: object = "int8"      # dtype str (§9) or plan (§10)
     watermark: int | None = None         # optimistic-admission headroom (§8)
     aging_ticks: int = 0                 # 0 = no anti-starvation aging
     preempt_loop_limit: int = 8
@@ -200,10 +207,11 @@ class EngineConfig:
     fault_injector: object | None = None  # core.paging.PoolFaultInjector
 
     def __post_init__(self):
-        from repro.core.quantization import KV_DTYPES
-        if self.kv_cache_dtype not in KV_DTYPES:
-            raise ValueError(f"kv_cache_dtype must be one of {KV_DTYPES} "
-                             f"(got {self.kv_cache_dtype!r})")
+        from repro.core.quantization import resolve_kv_dtype_spec
+        # Normalize eagerly so bad dtypes/plans fail at construction, not
+        # deep in pool init; the layer count is validated later, where the
+        # model config is known (scheduler/engine build time).
+        self.kv_cache_dtype = resolve_kv_dtype_spec(self.kv_cache_dtype)
         if self.kv_cache_dtype != "int8" and not self.paged:
             raise ValueError(
                 f"kv_cache_dtype={self.kv_cache_dtype!r} requires "

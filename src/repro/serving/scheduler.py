@@ -104,6 +104,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import paging as PG
+from repro.core import quantization as Q
 from repro.core.paging import PagedQuantizedKVCache
 from repro.runtime.fault import StallWatchdog
 from repro.serving.params import (EngineConfig, SamplingParams,
@@ -236,10 +237,12 @@ class ContinuousBatcher:
         # completion boundary; 1 = per-token ticks (also forced for encdec,
         # which has no transformer decode_scan path)
         self.chunk = 1 if cfg.family == "encdec" else chunk
-        # (steps, kv dtype) -> jitted decode-scan chunk fn (one signature;
-        # jit's None-vs-pytree structure keying separates greedy/sampled
-        # traces; the dtype key makes the §9 stale-trace guarantee explicit)
-        self._chunk_fns: dict[tuple[int, str], Any] = {}
+        # (steps, kv dtype spec) -> jitted decode-scan chunk fn (one
+        # signature; jit's None-vs-pytree structure keying separates
+        # greedy/sampled traces; the dtype key makes the §9 stale-trace
+        # guarantee explicit — a mixed plan keys on its full per-layer
+        # tuple, so same-dtype layers share one trace per spec, §10)
+        self._chunk_fns: dict[tuple[int, str | tuple], Any] = {}
         # host-side sampling entry (first token after prefill, per-token
         # ticks): the SAME sample_at_step the scan body runs, jitted once
         from repro.models import sampling as _SMP
@@ -307,9 +310,11 @@ class ContinuousBatcher:
             self.prefill_chunk_tokens = -(-pc // self.page_size) * \
                 self.page_size
             # one jitted chunk fn per (static history bound, fused-toggle,
-            # kv dtype); the bound set is pow2, the toggle and dtype read
-            # live from self.config per dispatch (DESIGN.md §9)
-            self._chunk_prefill_fns: dict[tuple[int, bool, str], Any] = {}
+            # kv dtype spec); the bound set is pow2, the toggle and dtype
+            # read live from self.config per dispatch (DESIGN.md §9; a
+            # mixed plan's spec is its per-layer dtype tuple, §10)
+            self._chunk_prefill_fns: dict[tuple[int, bool, str | tuple],
+                                          Any] = {}
             # req.uid -> (toks, chain): computed once per request, not once
             # per tick while admission is blocked on pool pressure. Keyed by
             # uid, NOT id(request): CPython reuses a collected object's id,
@@ -324,10 +329,11 @@ class ContinuousBatcher:
             self.streams: list[np.ndarray | None] = [None] * batch
             self.row_chain: list[list[bytes] | None] = [None] * batch
             self._pf_rr = 0     # round-robin cursor over prefilling rows
-        # the pool's storage format; config.kv_cache_dtype is the *wanted*
-        # dtype — the two diverge only between a config flip and the next
-        # idle rebuild (_ensure_backend_dtype, DESIGN.md §9)
-        self.kv_cache_dtype = getattr(config, "kv_cache_dtype", "int8")
+        # the pools' storage format — a dtype string (uniform, §9) or a
+        # per-layer dtype tuple (mixed plan, §10); config.kv_cache_dtype is
+        # the *wanted* spec — the two diverge only between a config flip
+        # and the next idle rebuild (_ensure_backend_dtype)
+        self.kv_cache_dtype = self._want_dtype_spec()
         init_state, prefill, decode = make_serve_fns(
             cfg, max_len=max_len, paged=paged, n_pages=n_pages,
             kv_cache_dtype=self.kv_cache_dtype)
@@ -345,6 +351,17 @@ class ContinuousBatcher:
         """Truly-free page ids (host authoritative; excludes evictable
         cached pages — see `HostPageAllocator`)."""
         return self.allocator.free
+
+    def _want_dtype_spec(self):
+        """The dtype spec `config.kv_cache_dtype` currently asks for,
+        resolved to its canonical form (DESIGN.md §10): a dtype string for
+        a uniform engine, a per-layer dtype tuple for a mixed plan. Raw
+        config values (plan paths/dicts, `PrecisionPlan`s) resolve here so
+        live config mutation behaves like construction; the plan length is
+        validated against the model's layer count."""
+        return Q.resolve_kv_dtype_spec(
+            getattr(self.config, "kv_cache_dtype", "int8"),
+            n_layers=self.cfg.n_layers)
 
     def submit(self, req: Request):
         """Queue a request (DESIGN.md §6). Rejects impossible requests here
@@ -368,14 +385,21 @@ class ContinuousBatcher:
                              f"(queued or running); uids are the lifecycle "
                              f"handle and must be unique until completion")
         want_dtype = req.sampling.kv_cache_dtype
-        engine_dtype = getattr(self.config, "kv_cache_dtype", "int8")
-        if want_dtype is not None and want_dtype != engine_dtype:
+        engine_spec = self._want_dtype_spec()
+        if want_dtype is not None and want_dtype != engine_spec:
+            if isinstance(engine_spec, str):
+                raise ValueError(
+                    f"request {req.uid}: kv_cache_dtype={want_dtype!r} does "
+                    f"not match the engine's pool backend "
+                    f"({engine_spec!r}); the pool carries ONE storage "
+                    f"format — flip EngineConfig.kv_cache_dtype on an idle "
+                    f"engine instead (DESIGN.md §9)")
             raise ValueError(
-                f"request {req.uid}: kv_cache_dtype={want_dtype!r} does not "
-                f"match the engine's pool backend ({engine_dtype!r}); the "
-                f"pool carries ONE storage format — flip "
-                f"EngineConfig.kv_cache_dtype on an idle engine instead "
-                f"(DESIGN.md §9)")
+                f"request {req.uid}: kv_cache_dtype={want_dtype!r} "
+                f"contradicts the engine's mixed per-layer precision plan "
+                f"({'/'.join(engine_spec)}); plan-driven engines accept "
+                f"only requests with kv_cache_dtype=None — the plan, not "
+                f"the request, owns layer precision (DESIGN.md §10)")
         budget = (req.max_new_tokens if req.max_new_tokens is not None
                   else req.sampling.max_new_tokens)
         if self.paged:
@@ -621,7 +645,9 @@ class ContinuousBatcher:
         return rep
 
     def _ensure_backend_dtype(self):
-        """Honor a live flip of `EngineConfig.kv_cache_dtype` (DESIGN.md §9).
+        """Honor a live flip of `EngineConfig.kv_cache_dtype` (DESIGN.md §9)
+        — including flips to/from/between per-layer precision plans (§10):
+        a plan flip is a full backend flip, never an in-place relabel.
 
         The pool's storage format is baked into every page, every allocator
         index entry, and the device pytree's structure, so a flip cannot be
@@ -633,7 +659,7 @@ class ContinuousBatcher:
         waiting) raises — silently re-quantizing resident pages through a
         second lossy format would corrupt live streams; merely *queued*
         requests hold no pages yet and ride the rebuild."""
-        want = getattr(self.config, "kv_cache_dtype", "int8")
+        want = self._want_dtype_spec()     # validates dtype names + plan len
         if want == self.kv_cache_dtype:
             return
         if not self.paged:
@@ -644,12 +670,8 @@ class ContinuousBatcher:
             raise RuntimeError(
                 f"cannot flip kv_cache_dtype to {want!r} with rows "
                 f"resident in the pool; drain the engine first "
-                f"(DESIGN.md §9)")
+                f"(DESIGN.md §9, §10)")
         from repro.serving.engine import make_serve_fns
-        from repro.core.quantization import KV_DTYPES
-        if want not in KV_DTYPES:
-            raise ValueError(f"kv_cache_dtype must be one of {KV_DTYPES} "
-                             f"(got {want!r})")
         self.kv_cache_dtype = want
         init_state, prefill, decode = make_serve_fns(
             self.cfg, max_len=self.max_len, paged=True,
@@ -1293,13 +1315,18 @@ class ContinuousBatcher:
         page) to host numpy, in the deterministic pytree traversal order
         `_restore_resid` replays. Together with the pending token this is
         the row's entire non-page state — flushed pages are immutable and
-        survive in the pool/index (DESIGN.md §8)."""
+        survive in the pool/index (DESIGN.md §8).
+
+        Residuals are (..., B, H, ps, D) — unstacked per-layer caches
+        (mixed plans, tail blocks) have no leading dim, the uniform
+        stacked state carries a leading group dim — so the row is indexed
+        on the batch axis (-4), never axis 0."""
         out = []
 
         def rec(x):
             if isinstance(x, PagedQuantizedKVCache):
-                out.append((np.asarray(x.resid_k[i]),
-                            np.asarray(x.resid_v[i])))
+                out.append((np.asarray(x.resid_k)[..., i, :, :, :],
+                            np.asarray(x.resid_v)[..., i, :, :, :]))
             elif isinstance(x, dict):
                 for v in x.values():
                     rec(v)
@@ -1319,8 +1346,11 @@ class ContinuousBatcher:
             if isinstance(x, PagedQuantizedKVCache):
                 k, v = next(it)
                 return dataclasses.replace(
-                    x, resid_k=x.resid_k.at[i].set(jnp.asarray(k)),
-                    resid_v=x.resid_v.at[i].set(jnp.asarray(v)))
+                    x,
+                    resid_k=x.resid_k.at[..., i, :, :, :].set(
+                        jnp.asarray(k)),
+                    resid_v=x.resid_v.at[..., i, :, :, :].set(
+                        jnp.asarray(v)))
             if isinstance(x, dict):
                 return {kk: rec(vv) for kk, vv in x.items()}
             if isinstance(x, (list, tuple)):
@@ -1521,7 +1551,14 @@ class ContinuousBatcher:
         one page into several rows, so a per-row sum would double-count).
         Prefix mode adds the
         `HostPageAllocator` counters (hits / misses / reclaims /
-        cow_retargets) and the page hit rate."""
+        cow_retargets) and the page hit rate.
+
+        ``pages_vs_int8_equal_hbm`` /
+        ``kv_page_bytes_saved_vs_int8_frac`` report the memory/accuracy
+        curve position (DESIGN.md §9): for a uniform engine, the
+        single-pool ratio; for a mixed per-layer plan (§10), the
+        page-bytes-weighted mean over the stack, with the per-layer
+        assignment itself under ``kv_cache_layer_dtypes``."""
         if not self.paged:
             return self.lifecycle_report()
         lengths = [int(self.pos[i]) if r is not None else 0
@@ -1537,9 +1574,17 @@ class ContinuousBatcher:
         pb = lambda dt: PG.page_bytes_for(self.page_size,
                                           self.cfg.n_kv_heads,
                                           self.cfg.head_dim, dt)
-        rep = {"kv_cache_dtype": self.kv_cache_dtype,
-               "pages_vs_int8_equal_hbm":
-                   pb("int8") / pb(self.kv_cache_dtype),
+        spec = self.kv_cache_dtype
+        layer_dts = Q.layer_kv_dtypes(spec, self.cfg.n_layers)
+        stack_bytes = sum(pb(dt) for dt in layer_dts)
+        int8_bytes = pb("int8") * len(layer_dts)
+        rep = {"kv_cache_dtype": (spec if isinstance(spec, str)
+                                  else "mixed"),
+               # uniform: single-pool ratio; mixed plan: per-layer-weighted
+               # mean over the stack (§10) — same number for uniform specs
+               "pages_vs_int8_equal_hbm": int8_bytes / stack_bytes,
+               "kv_page_bytes_saved_vs_int8_frac":
+                   1.0 - stack_bytes / int8_bytes,
                "pages_total": self.n_pages - 1,
                "pages_free": a.n_free,
                "pages_cached": a.n_cached,
@@ -1553,6 +1598,8 @@ class ContinuousBatcher:
                "prefill_tokens_computed": self.prefill_tokens_computed,
                "decode_tokens_computed": self.decode_tokens_computed,
                **self.lifecycle_report()}
+        if not isinstance(spec, str):
+            rep["kv_cache_layer_dtypes"] = list(layer_dts)
         if self.prefix_cache:
             rep.update({
                 "page_hits": a.hits,

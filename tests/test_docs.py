@@ -17,11 +17,12 @@ def _md_links(path: Path):
 
 def test_readme_and_design_links_resolve():
     missing = []
-    for doc in ("README.md", "DESIGN.md"):
+    for doc in ("README.md", "DESIGN.md", "docs/precision.md"):
         for target in _md_links(ROOT / doc):
             if target.startswith(("http://", "https://", "mailto:")):
                 continue
-            if not (ROOT / target).exists():
+            # relative links resolve from the linking file's directory
+            if not ((ROOT / doc).parent / target).resolve().exists():
                 missing.append(f"{doc} -> {target}")
     assert not missing, f"dangling doc links: {missing}"
 
@@ -35,10 +36,14 @@ def test_design_sections_cover_docstring_references():
     """Every `DESIGN.md §N` reference in the source tree names an existing
     DESIGN.md section — stale references are how design docs rot."""
     sections = _design_sections()
-    assert sections >= {"1", "2", "3", "4", "5", "6", "7", "8", "9"}
+    assert sections >= {"1", "2", "3", "4", "5", "6", "7", "8", "9", "10"}
     bad = []
-    for py in (ROOT / "src").rglob("*.py"):
-        for ref in re.findall(r"DESIGN\.md §(\w[\w-]*)", py.read_text()):
+    files = list((ROOT / "src").rglob("*.py"))
+    files += list((ROOT / "benchmarks").glob("*.py"))
+    files += list((ROOT / "docs").glob("*.md"))
+    for py in files:
+        for ref in re.findall(r"DESIGN\.md[ \)]*§(\w[\w-]*)",
+                              py.read_text()):
             if ref not in sections:
                 bad.append(f"{py.relative_to(ROOT)} -> §{ref}")
     assert not bad, f"stale DESIGN.md references: {bad}"
@@ -71,6 +76,69 @@ def test_design_owns_multi_precision_section():
                 "src/repro/kernels/quant_attention.py"):
         assert "DESIGN.md §9" in (ROOT / src).read_text(), \
             f"{src} no longer cites its DESIGN.md §9 owner"
+
+
+def test_design_owns_adaptive_precision_section():
+    """DESIGN.md §10 owns adaptive per-layer precision, the code that
+    implements it cites it, and every NEW public symbol of the plan
+    surface names its owner in its docstring (satellite contract)."""
+    import inspect
+
+    import benchmarks.sensitivity as sensitivity
+    from repro.core import quantization
+    text = (ROOT / "DESIGN.md").read_text()
+    m = re.search(r"^## §10\b.*$", text, flags=re.M)
+    assert m and "Adaptive precision" in m.group(0), \
+        "DESIGN.md §10 must be the adaptive precision section"
+    for src in ("src/repro/core/quantization.py",
+                "benchmarks/sensitivity.py",
+                "src/repro/launch/serve.py"):
+        assert "DESIGN.md §10" in (ROOT / src).read_text(), \
+            f"{src} no longer cites its DESIGN.md §10 owner"
+    plan_surface = [quantization.PrecisionPlan,
+                    quantization.resolve_kv_dtype_spec,
+                    quantization.layer_kv_dtypes,
+                    sensitivity.run, sensitivity.pages_saved_frac]
+    undocumented = [f"{o.__module__}.{o.__name__}" for o in plan_surface
+                    if "DESIGN.md §10" not in (inspect.getdoc(o) or "")]
+    assert not undocumented, \
+        f"plan-surface APIs without their §10 owner: {undocumented}"
+
+
+def test_precision_docs_claims_match_artifacts():
+    """docs/precision.md and the README's mixed-plan quickstart are
+    pinned to the committed artifacts: the plan's measured delta is
+    inside its own --ppl-budget, the pages-saved acceptance floor
+    (>=30%) holds, the plan file agrees with BENCH_accuracy.json, and
+    both docs cite the flag and the plan file."""
+    import json
+    mp = json.loads((ROOT / "BENCH_accuracy.json").read_text())[
+        "mixed_plan"]
+    assert abs(mp["delta_pct"]) <= mp["ppl_budget_pct"], \
+        "mixed plan's measured delta broke its own budget"
+    assert mp["pages_saved_vs_int8_frac"] >= 0.30, \
+        "mixed plan no longer meets the >=30% pages-saved acceptance"
+    plan = json.loads((ROOT / "PLAN_kv_mixed.json").read_text())
+    assert [r["kv_dtype"] for r in plan["layers"]] == mp["layer_dtypes"]
+    assert plan["measured_delta_pct"] == mp["delta_pct"]
+    readme = (ROOT / "README.md").read_text()
+    precision = (ROOT / "docs" / "precision.md").read_text()
+    for doc, text in (("README.md", readme),
+                      ("docs/precision.md", precision)):
+        for needle in ("--kv-cache-plan", "PLAN_kv_mixed.json",
+                       "benchmarks/sensitivity.py"):
+            assert needle in text, f"{doc} no longer cites {needle}"
+    assert "docs/precision.md" in readme
+    # the headline numbers in both docs track the artifact (either
+    # rounding of the savings figure counts)
+    saved = {f"{mp['pages_saved_vs_int8_frac']:.0%}",      # e.g. "36%"
+             f"{mp['pages_saved_vs_int8_frac']:.1%}"}      # e.g. "36.4%"
+    delta = f"{mp['delta_pct']:+.3f}%"                     # e.g. "+0.012%"
+    for doc, text in (("README.md", readme),
+                      ("docs/precision.md", precision)):
+        assert any(s in text for s in saved) and delta in text, \
+            f"{doc} headline numbers drifted from BENCH_accuracy.json " \
+            f"(expect {sorted(saved)} saved, {delta} delta)"
 
 
 def test_readme_cites_accuracy_artifact():
