@@ -63,13 +63,21 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 ARTIFACTS = ("BENCH_decode.json", "BENCH_prefix.json",
-             "BENCH_overload.json", "BENCH_accuracy.json")
+             "BENCH_overload.json", "BENCH_accuracy.json",
+             "BENCH_tiering.json")
 DEFAULT_THRESHOLD = 0.15
 # Outright ceiling for the paged-int4 backend's perplexity delta (percent
 # over the fp reference). int4's 15-level grid costs real accuracy — the
 # committed run measures it — but a PR that breaks nibble packing or scale
 # alignment shows up as an order-of-magnitude blowup, far past this band.
 INT4_PPL_DELTA_CEILING_PCT = 25.0
+# Outright floors for the tiered KV cache (DESIGN.md §11, ISSUE-10
+# acceptance): at the quarter-pool arm a swap-restore must beat a full
+# re-prefill by this much, and the issued prefetches must mostly become
+# adopted pages. Both are same-run ratios (cross-arm timing / pure
+# counters), so no baseline — and no runner hardware — is involved.
+TIERING_TTFT_SPEEDUP_FLOOR = 1.5
+TIERING_PREFETCH_HIT_RATE_FLOOR = 0.5
 
 
 def decode_metrics(data: dict) -> dict[str, tuple[float, bool]]:
@@ -225,9 +233,58 @@ def accuracy_absolute_violations(data: dict) -> list[str]:
     return bad
 
 
+def tiering_metrics(data: dict) -> dict[str, tuple[float, bool]]:
+    """The tiered-KV-cache headline ratios (DESIGN.md §11):
+    ``swap_vs_recompute_ttft_speedup`` (quarter-pool tier-off TTFT over
+    tier-on — a same-run cross-arm timing ratio, so runner hardware
+    cancels like the prefix TTFT speedup) and ``prefetch_hit_rate``
+    (pure allocator counters: issued swap-ins that became adopted
+    pages — fully hardware-independent). Both also have outright floors
+    in `tiering_absolute_violations`; the relative band here catches a
+    slow decay that stays above the floor."""
+    out: dict[str, tuple[float, bool]] = {}
+    s = data.get("summary", {})
+    if "swap_vs_recompute_ttft_speedup" in s:
+        out["tiering.pool25pct.swap_vs_recompute_ttft_speedup"] = (
+            float(s["swap_vs_recompute_ttft_speedup"]), True)
+    if "prefetch_hit_rate" in s:
+        out["tiering.pool25pct.prefetch_hit_rate"] = (
+            float(s["prefetch_hit_rate"]), True)
+    return out
+
+
+def tiering_absolute_violations(data: dict) -> list[str]:
+    """Baseline-free outright gates on BENCH_tiering.json — the ISSUE-10
+    acceptance floors (DESIGN.md §11): the quarter-pool swap-restore TTFT
+    advantage, the prefetch hit rate, and nonzero swap traffic (a tier
+    that silently stops demoting would otherwise pass the ratio gates
+    vacuously by never swapping)."""
+    bad = []
+    s = data.get("summary", {})
+    if not s:
+        return ["tiering.summary: missing from BENCH_tiering.json"]
+    if float(s.get("swap_vs_recompute_ttft_speedup", 0)) \
+            < TIERING_TTFT_SPEEDUP_FLOOR:
+        bad.append(f"tiering.pool25pct.swap_vs_recompute_ttft_speedup: "
+                   f"{s.get('swap_vs_recompute_ttft_speedup', 0):.2f}x "
+                   f"under the outright floor "
+                   f"{TIERING_TTFT_SPEEDUP_FLOOR:.1f}x")
+    if float(s.get("prefetch_hit_rate", 0)) \
+            < TIERING_PREFETCH_HIT_RATE_FLOOR:
+        bad.append(f"tiering.pool25pct.prefetch_hit_rate: "
+                   f"{s.get('prefetch_hit_rate', 0):.2f} under the "
+                   f"outright floor {TIERING_PREFETCH_HIT_RATE_FLOOR:.1f}")
+    for key in ("demotions", "promotions"):
+        if int(s.get(key, 0)) < 1:
+            bad.append(f"tiering.pool25pct.{key}: {s.get(key, 0)} — the "
+                       f"quarter-pool arm must actually swap")
+    return bad
+
+
 def collect(decode: dict | None, prefix: dict | None,
             overload: dict | None = None,
-            accuracy: dict | None = None) -> dict[str, tuple[float, bool]]:
+            accuracy: dict | None = None,
+            tiering: dict | None = None) -> dict[str, tuple[float, bool]]:
     m: dict[str, tuple[float, bool]] = {}
     if decode:
         m.update(decode_metrics(decode))
@@ -237,6 +294,8 @@ def collect(decode: dict | None, prefix: dict | None,
         m.update(overload_metrics(overload))
     if accuracy:
         m.update(accuracy_metrics(accuracy))
+    if tiering:
+        m.update(tiering_metrics(tiering))
     return m
 
 
@@ -320,14 +379,18 @@ def main(argv=None) -> int:
     baseline = collect(base_raw["BENCH_decode.json"],
                        base_raw["BENCH_prefix.json"],
                        base_raw["BENCH_overload.json"],
-                       base_raw["BENCH_accuracy.json"])
+                       base_raw["BENCH_accuracy.json"],
+                       base_raw["BENCH_tiering.json"])
     current = collect(cur_raw["BENCH_decode.json"],
                       cur_raw["BENCH_prefix.json"],
                       cur_raw["BENCH_overload.json"],
-                      cur_raw["BENCH_accuracy.json"])
+                      cur_raw["BENCH_accuracy.json"],
+                      cur_raw["BENCH_tiering.json"])
     bad = compare(baseline, current, args.threshold)
-    # baseline-free outright gates (hardware-independent accuracy claims)
+    # baseline-free outright gates (hardware-independent accuracy claims
+    # and the tiered-cache acceptance floors, DESIGN.md §9/§11)
     bad += accuracy_absolute_violations(cur_raw["BENCH_accuracy.json"] or {})
+    bad += tiering_absolute_violations(cur_raw["BENCH_tiering.json"] or {})
     for name in sorted(baseline):
         if name in current:
             print(f"[bench-gate] {name}: {baseline[name][0]:.4g} -> "

@@ -9,7 +9,8 @@ import sys
 from benchmarks import (attention_error, bitwidth_ablation, e2e_decode,
                         error_bench, kernel_bench, kernel_variants,
                         memory_table, overload, paged_vs_contiguous,
-                        perplexity_delta, prefix_cache, sensitivity)
+                        perplexity_delta, prefix_cache, sensitivity,
+                        tiering)
 
 SUITES = [
     ("table1_memory", memory_table),
@@ -23,6 +24,7 @@ SUITES = [
     ("beyond_paper_paged_vs_contiguous", paged_vs_contiguous),
     ("beyond_paper_prefix_cache", prefix_cache),
     ("beyond_paper_overload", overload),
+    ("beyond_paper_tiering", tiering),
 ]
 
 

@@ -45,7 +45,6 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from collections import OrderedDict
 from functools import partial
 
 import jax
@@ -115,24 +114,42 @@ class PoolFaultInjector:
         is parked for this many ticks before it reaches the LRU / free
         list, modelling deferred host-side cleanup.
 
+    Host-tier faults (DESIGN.md §11) drive the swap fallback paths:
+
+      * ``p_swap_fail`` — per-prefetch probability (seeded draw per
+        `swap_fault` call) that a host-tier record is LOST at promotion
+        time: the tier drops the record, the digest stops matching, and
+        the requester falls back to recompute instead of stalling.
+      * ``swap_delay`` — every prefetch's device copy takes this many
+        extra ticks to land (the page rides the allocator's in-flight
+        population until `HostPageAllocator.tick` completes it),
+        modelling a saturated host/device interconnect.
+
     Faults apply to the *gates* only; `alloc` and copy-on-write check
     physical capacity, preserving the invariant that admission never
     fails after a gate has passed (DESIGN.md §7)."""
 
     def __init__(self, seed: int = 0, *, p_alloc_fail: float = 0.0,
-                 hold_pages: int = 0, reclaim_delay: int = 0):
+                 hold_pages: int = 0, reclaim_delay: int = 0,
+                 p_swap_fail: float = 0.0, swap_delay: int = 0):
         if not 0.0 <= p_alloc_fail <= 1.0:
             raise ValueError(f"p_alloc_fail={p_alloc_fail} not in [0, 1]")
-        if hold_pages < 0 or reclaim_delay < 0:
-            raise ValueError("hold_pages / reclaim_delay must be >= 0")
+        if not 0.0 <= p_swap_fail <= 1.0:
+            raise ValueError(f"p_swap_fail={p_swap_fail} not in [0, 1]")
+        if hold_pages < 0 or reclaim_delay < 0 or swap_delay < 0:
+            raise ValueError("hold_pages / reclaim_delay / swap_delay "
+                             "must be >= 0")
         self._rng = np.random.RandomState(seed)
         self.p_alloc_fail = p_alloc_fail
         self.hold_pages = hold_pages
         self.reclaim_delay = reclaim_delay
+        self.p_swap_fail = p_swap_fail
+        self.swap_delay = swap_delay
         self.blocked = False        # is the current tick's gate blocked?
         # counters surfaced via ContinuousBatcher.pool_report
         self.alloc_fault_ticks = 0  # ticks whose gates reported 0 pages
         self.delayed_releases = 0   # pages that took the deferred path
+        self.swap_faults = 0        # host-tier records lost at promotion
 
     def tick(self) -> None:
         """Advance the injector clock one scheduler tick: draw (seeded)
@@ -143,19 +160,45 @@ class PoolFaultInjector:
         if self.blocked:
             self.alloc_fault_ticks += 1
 
+    def swap_fault(self) -> bool:
+        """Seeded per-prefetch draw: True when this promotion's host-tier
+        record is to be lost (`p_swap_fail`, DESIGN.md §11). The caller
+        drops the record so the requester falls back to recompute —
+        a lost swap must never stall admission."""
+        hit = (self.p_swap_fail > 0.0
+               and bool(self._rng.random_sample() < self.p_swap_fail))
+        if hit:
+            self.swap_faults += 1
+        return hit
+
 
 class HostPageAllocator:
     """Host-authoritative page allocator with optional prefix caching
-    (DESIGN.md §7).
+    (DESIGN.md §7) and host-tier swap support (DESIGN.md §11).
 
-    Owns three disjoint populations of the pool's ``n_pages - 1``
+    Owns four disjoint populations of the pool's ``n_pages - 1``
     allocatable pages (page 0 is the sentinel and never enters any of them):
 
-      * ``free``   — pages holding nothing; allocation pops from here first.
-      * ``ref``    — page -> refcount > 0 for pages referenced by >= 1 row.
-      * ``lru``    — *cached* pages: refcount 0 but still resident in the
-                     content-hash ``index``; evicted oldest-first only when
-                     ``alloc`` runs out of free pages (decref-with-reclaim).
+      * ``free``     — pages holding nothing; allocation pops from here
+                       first.
+      * ``ref``      — page -> refcount > 0 for pages referenced by >= 1
+                       row.
+      * ``lru``      — *cached* pages: refcount 0 but still resident in the
+                       content-hash ``index``; a pluggable
+                       `tiering.Evictor` policy (oldest-first by default)
+                       picks which one ``alloc`` reclaims when free pages
+                       run out (decref-with-reclaim, DESIGN.md §11).
+      * ``inflight`` — pages staging an in-progress host->device promotion
+                       copy (`begin_prefetch`): claimed but neither
+                       referenced, cached, nor free until the copy lands
+                       (`finish_prefetch`, DESIGN.md §11).
+
+    (`PoolFaultInjector.reclaim_delay` parks a fifth, transient population
+    in ``deferred``.) With a `tiering.HostTier` attached, reclaim victims
+    are offered to the scheduler's ``demote_hook`` before their index entry
+    dies — the digest retargets from a device page id to a host record
+    instead of vanishing, and `match_tiered` counts host/in-flight digests
+    so admission can prefetch instead of recomputing.
 
     The content-hash ``index`` maps chain digests (see `chain_hashes`) to
     page ids; ``hash_of`` is its inverse. A registered page's contents must
@@ -166,7 +209,9 @@ class HostPageAllocator:
     device `PagePool` pytree between steps (serving/scheduler.py)."""
 
     def __init__(self, n_pages: int, *, prefix_cache: bool = False,
-                 injector: PoolFaultInjector | None = None):
+                 injector: PoolFaultInjector | None = None,
+                 evictor=None, host_tier=None):
+        from repro.core import tiering as TIER
         if n_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the sentinel)")
         self.n_pages = n_pages
@@ -176,14 +221,27 @@ class HostPageAllocator:
         self.ref: dict[int, int] = {}
         self.index: dict[bytes, int] = {}
         self.hash_of: dict[int, bytes] = {}
-        self.lru: OrderedDict[int, None] = OrderedDict()
+        # cached population behind a pluggable policy (DESIGN.md §11);
+        # "lru" keeps the attribute's historical name and victim order
+        if evictor is None:
+            evictor = "lru"
+        self.lru: TIER.Evictor = (TIER.make_evictor(evictor)
+                                  if isinstance(evictor, str) else evictor)
         self.deferred: dict[int, int] = {}   # page -> tick it becomes free
+        # host tier + in-flight promotions (DESIGN.md §11)
+        self.host_tier = host_tier
+        self.demote_hook = None     # set by the scheduler: (page, digest)
+        self.inflight: dict[int, tuple[bytes, int]] = {}  # page->(h, ready)
+        self.inflight_digests: dict[bytes, int] = {}      # inverse
+        self._promoted: set[int] = set()     # device pages of host origin
         self._tick = 0
         # counters surfaced via ContinuousBatcher.pool_report / benchmarks
         self.hits = 0           # pages resolved from the index
         self.misses = 0         # prompt pages that had to be computed
         self.reclaims = 0       # cached pages evicted to satisfy alloc
         self.cow_retargets = 0  # shared pages replaced before a flush
+        self.prefetch_issued = 0   # host->device promotion copies started
+        self.promote_hits = 0      # promoted pages later adopted by a row
 
     # -- capacity ----------------------------------------------------------
     @property
@@ -234,39 +292,51 @@ class HostPageAllocator:
 
     def tick(self) -> None:
         """Advance the allocator one scheduler tick: roll the fault
-        injector's per-tick draw and return deferred-reclaim pages whose
-        delay has elapsed to the LRU / free list (DESIGN.md §8). A no-op
-        when no injector is attached."""
-        if self.injector is None:
-            return
+        injector's per-tick draw, return deferred-reclaim pages whose
+        delay has elapsed to the LRU / free list (DESIGN.md §8), and
+        complete in-flight prefetches whose copy delay has elapsed
+        (`finish_prefetch`, DESIGN.md §11)."""
         self._tick += 1
-        self.injector.tick()
-        due = [p for p, t in self.deferred.items() if t <= self._tick]
-        for p in due:
-            del self.deferred[p]
-            self._dispose(p)
+        if self.injector is not None:
+            self.injector.tick()
+            due = [p for p, t in self.deferred.items() if t <= self._tick]
+            for p in due:
+                del self.deferred[p]
+                self._dispose(p)
+        for p in [p for p, (_, t) in self.inflight.items()
+                  if t <= self._tick]:
+            self.finish_prefetch(p)
 
     def _dispose(self, page: int) -> None:
-        """Final disposition of a refcount-0 page: LRU if still indexed
-        (hittable, evictable under pressure), else the free list."""
+        """Final disposition of a refcount-0 page: the evictable cached
+        set if still indexed (hittable, reclaimable under pressure), else
+        the free list."""
         if page in self.hash_of:
-            self.lru[page] = None             # most-recently-used end
+            self.lru.cache(page)              # most-recently-used end
         else:
             self.free.append(page)
 
     # -- allocation --------------------------------------------------------
     def alloc(self, n: int) -> list[int]:
         """Claim ``n`` pages (refcount 1 each). Free pages first; then the
-        LRU cache is reclaimed oldest-first, un-indexing each victim. Raises
-        if ``n`` exceeds physical capacity — admission must gate on
-        `available` (which injected faults may depress below physical;
-        gated callers therefore never trip this, DESIGN.md §8)."""
+        cached set is reclaimed in the `tiering.Evictor` policy's victim
+        order (oldest-first for the "lru" baseline), un-indexing each
+        victim — after offering it to the host tier's ``demote_hook``, so
+        a cold prefix page demotes to host RAM instead of vanishing
+        (DESIGN.md §11). Raises if ``n`` exceeds physical capacity —
+        admission must gate on `available` (which injected faults may
+        depress below physical; gated callers therefore never trip this,
+        DESIGN.md §8)."""
         if n > self._physical:
             raise ValueError(f"alloc({n}) exceeds available={self._physical}")
         ids = [self.free.pop() for _ in range(min(n, len(self.free)))]
-        while len(ids) < n:                    # reclaim cached pages, LRU
-            page, _ = self.lru.popitem(last=False)
-            del self.index[self.hash_of.pop(page)]
+        while len(ids) < n:                    # reclaim cached pages
+            page = self.lru.pop_victim()
+            digest = self.hash_of.pop(page)
+            del self.index[digest]
+            self._promoted.discard(page)
+            if self.demote_hook is not None and self.host_tier is not None:
+                self.demote_hook(page, digest)
             self.reclaims += 1
             ids.append(page)
         for p in ids:
@@ -315,6 +385,70 @@ class HostPageAllocator:
             n += 1
         return n
 
+    def match_tiered(self, chain) -> tuple[int, int]:
+        """Two-tier prefix match (DESIGN.md §11): ``(dev, swap)`` where
+        ``dev`` is the device-resident prefix (`match`) and ``swap`` the
+        consecutive run beyond it that is restorable without recompute —
+        digests resident on the host tier or already in flight back to the
+        device. The scheduler prefetches the ``swap`` run at hash-match
+        time; once those copies land, `match` itself covers them and the
+        normal adopt path serves the hit. Pure lookup."""
+        dev = self.match(chain)
+        swap = 0
+        if self.prefix_cache and self.host_tier is not None:
+            for h in chain[dev:]:
+                if h in self.inflight_digests or h in self.host_tier:
+                    swap += 1
+                else:
+                    break
+        return dev, swap
+
+    # -- host-tier prefetch (DESIGN.md §11) --------------------------------
+    def begin_prefetch(self, digest: bytes, delay: int = 0) -> int:
+        """Claim a device page to receive the host-tier record ``digest``
+        and park it in the ``inflight`` population (DESIGN.md §11). The
+        caller (scheduler) issues the actual async device write; the page
+        joins the index via `finish_prefetch` — immediately for
+        ``delay=0``, else when `tick` reaches ``delay`` ticks from now
+        (injected slow-swap). In-flight pages are neither free, cached,
+        referenced, nor matchable by `match` — `match_tiered` reports
+        them so admission waits instead of recomputing."""
+        page = self.alloc(1)[0]
+        del self.ref[page]
+        self.inflight[page] = (digest, self._tick + delay)
+        self.inflight_digests[digest] = page
+        self.prefetch_issued += 1
+        if delay <= 0:
+            self.finish_prefetch(page)
+        return page
+
+    def finish_prefetch(self, page: int) -> bool:
+        """Complete an in-flight promotion: publish the staged page under
+        its digest and park it on the cached set, ready for adoption
+        (DESIGN.md §11). If the digest was re-registered meanwhile (a
+        concurrent prefill recomputed the same content and won the
+        first-writer race), the staging page is redundant and returns to
+        the free list. Returns True iff the page was published."""
+        digest, _ = self.inflight.pop(page)
+        del self.inflight_digests[digest]
+        if self.prefix_cache and digest not in self.index \
+                and page not in self.hash_of:
+            self.index[digest] = page
+            self.hash_of[page] = digest
+            self._promoted.add(page)
+            self.lru.cache(page)
+            return True
+        self.free.append(page)
+        return False
+
+    def abort_prefetch(self, page: int) -> None:
+        """Cancel an in-flight promotion (its host record was lost or the
+        requester went away): the staging page returns to the free list
+        and the digest stops being in flight (DESIGN.md §11)."""
+        digest, _ = self.inflight.pop(page)
+        del self.inflight_digests[digest]
+        self.free.append(page)
+
     def adopt(self, chain) -> list[int]:
         """Resolve each digest in ``chain`` to its resident page and take a
         reference — cached (LRU) pages are revived, referenced pages just
@@ -323,13 +457,16 @@ class HostPageAllocator:
         for h in chain:
             p = self.index[h]
             if p in self.lru:
-                del self.lru[p]
+                self.lru.uncache(p)           # counts as a policy hit
                 self.ref[p] = 1
             elif p in self.deferred:          # revive a delayed-reclaim page
                 del self.deferred[p]
                 self.ref[p] = 1
             else:
                 self.ref[p] += 1
+            if p in self._promoted:           # first adoption after a swap-in
+                self._promoted.discard(p)
+                self.promote_hits += 1
             ids.append(p)
         self.hits += len(ids)
         return ids

@@ -27,6 +27,11 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="first N prompt tokens identical across requests "
+                         "(a shared system prompt): exercises the prefix "
+                         "cache and, with --host-pages, the §11 demote/"
+                         "prefetch/promote path on revisits")
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache + page-budget admission over "
@@ -70,6 +75,23 @@ def main(argv=None):
                          "chosen under a measured perplexity budget). "
                          "Implies --paged; mutually exclusive with "
                          "--kv-cache-dtype")
+    ap.add_argument("--host-pages", type=int, default=None,
+                    help="host-RAM swap tier capacity in pages "
+                         "(DESIGN.md §11): cold prefix pages demote to "
+                         "host memory on reclaim instead of vanishing and "
+                         "promote back via prefetch at hash-match time — "
+                         "a swap-in hit costs a copy, not a re-prefill "
+                         "(implies --paged and --prefix-cache)")
+    ap.add_argument("--evictor", default="lru", choices=["lru", "freq"],
+                    help="device-pool eviction policy (DESIGN.md §11): "
+                         "'lru' reclaims oldest-first, 'freq' reclaims "
+                         "the lowest hits-per-byte page first")
+    ap.add_argument("--host-tier-dtype", default=None,
+                    choices=list(KV_DTYPES),
+                    help="recompress demoted pages to this dtype on the "
+                         "host tier (e.g. int4 halves host bytes; lossy "
+                         "round trip — DESIGN.md §11; default: keep the "
+                         "device dtype, bitwise swap-restore)")
     ap.add_argument("--watermark", type=int, default=None,
                     help="optimistic admission: reserve only the prompt's "
                          "pages plus this many pages of decode headroom "
@@ -110,6 +132,8 @@ def main(argv=None):
                  "(DESIGN.md §10)")
     kv_spec = (args.kv_cache_plan if args.kv_cache_plan is not None
                else args.kv_cache_dtype or "int8")
+    if args.host_pages is not None:
+        args.prefix_cache = True     # the host tier keys on chain digests
     if (args.prefix_cache or args.prefill_chunk
             or args.watermark is not None or kv_spec != "int8"):
         args.paged = True
@@ -138,10 +162,14 @@ def main(argv=None):
         n_pages=args.pages, chunk=args.chunk,
         prefix_cache=args.prefix_cache, prefill_chunk=args.prefill_chunk,
         watermark=args.watermark, aging_ticks=args.aging_ticks,
-        kv_cache_dtype=kv_spec))
+        kv_cache_dtype=kv_spec, host_pages=args.host_pages,
+        evictor=args.evictor, host_tier_dtype=args.host_tier_dtype))
     rng = np.random.RandomState(0)
-    prompts = [rng.randint(0, cfg.vocab,
-                           (args.prompt_len,)).astype(np.int32)
+    shared_n = min(args.shared_prefix, args.prompt_len)
+    shared = rng.randint(0, cfg.vocab, (shared_n,)).astype(np.int32)
+    prompts = [np.concatenate([
+        shared, rng.randint(0, cfg.vocab, (args.prompt_len - shared_n,))
+        .astype(np.int32)])
                for _ in range(args.requests)]
     stop = tuple(args.stop or ())
     sps = [SamplingParams(
@@ -189,6 +217,16 @@ def main(argv=None):
                   f"{rep['page_hit_rate']:.2f} "
                   f"({rep['page_hits']} hits / {rep['page_misses']} misses), "
                   f"{rep['reclaims']} reclaims")
+        if args.host_pages is not None:
+            print(f"[serve] host tier ({args.evictor} evictor, "
+                  f"dtype={rep['host_tier_dtype'] or rep['kv_cache_dtype']}"
+                  f"): {rep['host_pages_used']}/{rep['host_pages_capacity']} "
+                  f"pages ({rep['host_bytes']/2**20:.2f} MiB), "
+                  f"{rep['demotions']} demotions / "
+                  f"{rep['promotions']} promotions, prefetch hit rate "
+                  f"{rep['prefetch_hit_rate']:.2f}, "
+                  f"{rep['preempt_by_swap']} preempt-by-swap / "
+                  f"{rep['preempt_swap_restores']} swap-restores")
     for o in outs[:3]:
         print(f"  req {o.uid}: {o.token_ids} "
               f"(finish={o.finish_reason}, "

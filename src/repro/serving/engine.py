@@ -250,7 +250,14 @@ def kv_cache_memory_report(cfg: ModelConfig, batch: int, seq: int,
     to also report request-lifecycle observability (DESIGN.md §6):
     `aborted_requests` and the per-request TTFT percentiles
     (`ttft_s_p50/p90/p99`) — the abort/streaming behavior counters
-    `pool_report()` tracks."""
+    `pool_report()` tracks.
+
+    With a host tier attached to the scheduler (DESIGN.md §11) the
+    report splits device vs host bytes: the ``pool_*`` keys count
+    HBM-resident pages only, the ``host_tier_*`` keys count the swap
+    tier against its OWN capacity — a demoted page's bytes appear under
+    exactly one tier, so each utilization stays ≤1 and the sum never
+    double-counts."""
     rep = {
         "fp32_bytes": cfg.kv_cache_bytes(batch, seq, 4),
         "bf16_bytes": cfg.kv_cache_bytes(batch, seq, 2),
@@ -307,4 +314,13 @@ def kv_cache_memory_report(cfg: ModelConfig, batch: int, seq: int,
         })
     if scheduler is not None:
         rep.update(scheduler.lifecycle_report())
+        tier = getattr(scheduler, "_tiering", None)
+        if tier is not None:
+            rep.update({
+                "host_tier_pages_capacity": tier.capacity,
+                "host_tier_pages_used": len(tier),
+                "host_tier_bytes": tier.nbytes,
+                "host_tier_utilization": len(tier) / max(tier.capacity, 1),
+                "host_tier_dtype": tier.dtype,
+            })
     return rep

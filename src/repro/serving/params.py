@@ -188,7 +188,18 @@ class EngineConfig:
     many consecutive ticks with work in flight raises `StallError`; None
     disables); `fault_injector` attaches a `core.paging.PoolFaultInjector`
     to the page allocator so tests/benchmarks can drive every recovery
-    path deterministically."""
+    path deterministically.
+
+    Tiered KV cache (DESIGN.md §11, paged backend): `host_pages` attaches
+    a host-RAM swap tier of that many pages — cold prefix pages demote
+    there on reclaim instead of vanishing, and admission prefetches them
+    back ahead of prefill (requires `prefix_cache=True`: chain digests are
+    the location-independent page handle). `evictor` picks the device
+    eviction policy from `core.tiering.EVICTORS` ("lru" baseline /
+    "freq" hit-density aware). `host_tier_dtype` recompresses demoted
+    pages to a cheaper storage dtype at rest (PackKV-style; lossy — it
+    trades the swap-restore bitwise guarantee for host capacity; None
+    stores device bytes verbatim)."""
     batch: int = 4
     max_len: int = 128
     eos_id: int | None = None
@@ -205,9 +216,14 @@ class EngineConfig:
     preempt_loop_limit: int = 8
     stall_ticks: int | None = 500
     fault_injector: object | None = None  # core.paging.PoolFaultInjector
+    host_pages: int | None = None        # host swap-tier capacity (§11)
+    evictor: str = "lru"                 # device eviction policy (§11)
+    host_tier_dtype: str | None = None   # at-rest recompression (§11)
 
     def __post_init__(self):
-        from repro.core.quantization import resolve_kv_dtype_spec
+        from repro.core.quantization import (kv_storage_dtype,
+                                             resolve_kv_dtype_spec)
+        from repro.core.tiering import EVICTORS
         # Normalize eagerly so bad dtypes/plans fail at construction, not
         # deep in pool init; the layer count is validated later, where the
         # model config is known (scheduler/engine build time).
@@ -216,3 +232,22 @@ class EngineConfig:
             raise ValueError(
                 f"kv_cache_dtype={self.kv_cache_dtype!r} requires "
                 f"paged=True (the contiguous backends are int8-only)")
+        if self.evictor not in EVICTORS:
+            raise ValueError(f"evictor={self.evictor!r} is not a registered "
+                             f"policy; expected one of {sorted(EVICTORS)} "
+                             f"(DESIGN.md §11)")
+        if self.host_pages is not None:
+            if self.host_pages < 1:
+                raise ValueError(f"host_pages must be >= 1 "
+                                 f"(got {self.host_pages})")
+            if not (self.paged and self.prefix_cache):
+                raise ValueError(
+                    "host_pages requires paged=True and prefix_cache=True: "
+                    "chain digests are the host tier's page handle "
+                    "(DESIGN.md §11)")
+        if self.host_tier_dtype is not None:
+            kv_storage_dtype(self.host_tier_dtype)   # validates the name
+            if self.host_pages is None:
+                raise ValueError("host_tier_dtype without host_pages: "
+                                 "there is no host tier to recompress for "
+                                 "(DESIGN.md §11)")

@@ -277,17 +277,32 @@ class ContinuousBatcher:
         self.decode_stall_ticks = 0
         self.prefill_tokens_computed = 0
         self.decode_tokens_computed = 0
+        # tiered KV cache (DESIGN.md §11): host swap tier + cost model +
+        # per-uid swap-wait state; inert (None/empty) without host_pages
+        self._tiering = None
+        self._swap_cost = None
+        self._swap_wait: dict[int, int] = {}   # uid -> pages in flight
+        self.preempt_by_swap = 0
+        self.preempt_swap_restores = 0
         if paged:
             self.page_size = cfg.quant.block_size
             self.max_blocks = max_len // self.page_size
             if n_pages is None:   # dense capacity; pass less to oversubscribe
                 n_pages = batch * self.max_blocks + 1
             self.n_pages = n_pages
+            if config.host_pages is not None:
+                from repro.core import tiering as TIER
+                self._tiering = TIER.HostTier(
+                    config.host_pages, dtype=config.host_tier_dtype)
+                self._swap_cost = TIER.SwapCostModel(self.page_size)
             # host-authoritative allocator (free list + refcounts + prefix
             # index), mirrored to the device pytree on change
             self.allocator = PG.HostPageAllocator(
                 n_pages, prefix_cache=self.prefix_cache,
-                injector=config.fault_injector)
+                injector=config.fault_injector,
+                evictor=config.evictor, host_tier=self._tiering)
+            if self._tiering is not None:
+                self.allocator.demote_hook = self._demote_to_host
             self.tables = np.zeros((batch, self.max_blocks), np.int32)
             self.row_pages: list[list[int]] = [[] for _ in range(batch)]
             # preemption-by-recompute state (DESIGN.md §8): uid -> suspend
@@ -559,6 +574,7 @@ class ContinuousBatcher:
                 if self.paged:
                     self._admit_memo.pop(uid, None)
                     self._suspended.pop(uid, None)
+                    self._swap_wait.pop(uid, None)
                 self._finish(r, "aborted")
                 self.aborted_requests += 1
                 return r
@@ -621,6 +637,9 @@ class ContinuousBatcher:
         for r in self.queue:
             tag = ("queued(preempted)" if self.paged
                    and r.uid in self._suspended else "queued")
+            if self.paged and r.uid in self._swap_wait:
+                tag += (f" swap-wait:{self._swap_wait[r.uid]} "
+                        f"page(s) in flight")
             parts.append(f"uid {r.uid}: {tag}")
         for i, r in enumerate(self.rows):
             if r is None:
@@ -637,11 +656,15 @@ class ContinuousBatcher:
             a = self.allocator
             rep += (f"; pool: available={a.available} free={a.n_free} "
                     f"cached={a.n_cached} preemptions={self.preemptions}")
+            if self._tiering is not None:
+                rep += (f"; host tier: hosted={len(self._tiering)} "
+                        f"inflight={len(a.inflight)}")
             if a.injector is not None:
                 rep += (f"; injector: fault_ticks="
                         f"{a.injector.alloc_fault_ticks} "
                         f"held={a.injector.hold_pages} "
-                        f"deferred={len(a.deferred)}")
+                        f"deferred={len(a.deferred)} "
+                        f"swap_faults={a.injector.swap_faults}")
         return rep
 
     def _ensure_backend_dtype(self):
@@ -682,10 +705,20 @@ class ContinuousBatcher:
         self.state = None                      # rebuilt lazily next tick
         # indexed/cached pages hold bytes in the OLD format — a fresh
         # allocator drops them (chain hashes are token-content keyed, so a
-        # stale hit would alias wrong-format pages into a new row's table)
+        # stale hit would alias wrong-format pages into a new row's table);
+        # the host tier's demoted payloads are stale the same way, so the
+        # tier rebuilds empty too (DESIGN.md §11)
+        if self._tiering is not None:
+            from repro.core import tiering as TIER
+            self._tiering = TIER.HostTier(self.config.host_pages,
+                                          dtype=self.config.host_tier_dtype)
         self.allocator = PG.HostPageAllocator(
             self.n_pages, prefix_cache=self.prefix_cache,
-            injector=self.config.fault_injector)
+            injector=self.config.fault_injector,
+            evictor=self.config.evictor, host_tier=self._tiering)
+        if self._tiering is not None:
+            self.allocator.demote_hook = self._demote_to_host
+        self._swap_wait.clear()
         self.tables[:] = 0
         self.row_pages = [[] for _ in range(self.batch)]
         self.streams = [None] * self.batch
@@ -1079,6 +1112,13 @@ class ContinuousBatcher:
                 chain = (PG.chain_hashes(toks[:nb * ps], ps)
                          if self.prefix_cache else [])
                 self._admit_memo[cand.uid] = (toks, chain)
+            # host-tier prefetch at hash-match time (DESIGN.md §11): start
+            # swap-in copies for the chain's hosted continuation; while
+            # they are in flight the head swap-waits (cheaper than
+            # recomputing those pages, per the cost model)
+            if self._tiering is not None and \
+                    self._prefetch_for_admission(cand.uid, chain, S):
+                break                            # copies still in flight
             hit_toks = self._cap_hits(self.allocator.match(chain), S) \
                 if self.prefix_cache else 0
             hit = hit_toks // ps                 # adopted pages
@@ -1120,6 +1160,15 @@ class ContinuousBatcher:
         always drawn at fold_in(key, i) — `generated` is preserved across
         the preemption).
 
+        Swap-restore (DESIGN.md §11, host tier attached): when reclaimed
+        pages of the stream survive on the host tier, promotion copies
+        are issued and the request swap-waits instead of falling to
+        recompute — once they land, the SAME fast path below adopts them,
+        so a swap-restored resume is bitwise-identical too (verbatim page
+        bytes, restored residual/pending token, draw-index-invariant
+        seeded sampling; `host_tier_dtype` recompression is the lossy
+        exception, see §11).
+
         Recompute path — some pages were reclaimed (or no prefix cache):
         re-prefill the full stream with whatever hits remain; the pending
         token is restored at the prefill boundary instead of being
@@ -1135,6 +1184,18 @@ class ContinuousBatcher:
         rem = cand.max_new_tokens - len(cand.generated)
         init = self._initial_pages(Sf, rem)
         resident = self.allocator.match(fchain) if self.prefix_cache else 0
+        if (self._tiering is not None and resident < nbf
+                and snap["resid"] is not None):
+            dev, swap = self.allocator.match_tiered(fchain)
+            if dev + swap >= nbf and swap > 0 \
+                    and self._swap_cost.prefer_swap(nbf - dev):
+                # fully restorable without recompute: promote the hosted
+                # run; swap-wait while copies are in flight (§11)
+                snap["swapped"] = True
+                if self._prefetch_for_admission(cand.uid, fchain, Sf,
+                                                want_pages=nbf):
+                    return False         # swap-wait: copies in flight
+                resident = self.allocator.match(fchain)
         if resident >= nbf and snap["resid"] is not None:
             if init - nbf > self.allocator.available_after_adopt(fchain):
                 return False
@@ -1152,7 +1213,10 @@ class ContinuousBatcher:
             self.tok[i, 0] = snap["pending"]
             self._restore_resid(i, snap["resid"])
             del self._suspended[cand.uid]
+            self._swap_wait.pop(cand.uid, None)
             self.preempt_fast_resumes += 1
+            if snap.get("swapped"):
+                self.preempt_swap_restores += 1
             return True
         hit_toks = self._cap_hits(resident, Sf) if self.prefix_cache else 0
         hit = hit_toks // ps
@@ -1175,6 +1239,7 @@ class ContinuousBatcher:
         self.tok[i, 0] = 0
         self._resume_tok[i] = snap["pending"]
         del self._suspended[cand.uid]
+        self._swap_wait.pop(cand.uid, None)
         self.preempt_recompute_resumes += 1
         return True
 
@@ -1309,6 +1374,171 @@ class ContinuousBatcher:
                 self._record_first_token(r)
         return done
 
+    # -- tiered KV cache: demotion / promotion copies (DESIGN.md §11) ------
+    def _cache_leaves(self) -> list[PagedQuantizedKVCache]:
+        """The state's paged cache leaves in deterministic pytree traversal
+        order — the SAME order `_snapshot_resid` uses, and the order host
+        tier payload lists are keyed by (DESIGN.md §11)."""
+        out: list[PagedQuantizedKVCache] = []
+
+        def rec(x):
+            if isinstance(x, PagedQuantizedKVCache):
+                out.append(x)
+            elif isinstance(x, dict):
+                for v in x.values():
+                    rec(v)
+            elif isinstance(x, (list, tuple)):
+                for v in x:
+                    rec(v)
+        rec(self.state)
+        return out
+
+    def _demote_to_host(self, page: int, digest: bytes) -> bool:
+        """Demote one indexed device page to the host tier (DESIGN.md §11):
+        copy its quantized values + scale rows out of every cache leaf
+        (page axis -4, scale axis -3 — stacked uniform state carries
+        leading layer-group dims) and store them under the chain digest,
+        recompressing to `host_tier_dtype` when set. Installed as the
+        allocator's ``demote_hook`` (reclaim-time demotion) and called
+        eagerly by the preempt-by-swap arm. Skips when the digest is
+        already hosted (registered pages are immutable — the first copy
+        is the only copy needed) or the cost model says the copy isn't
+        worth a page of recompute."""
+        from repro.core import tiering as TIER
+        tier = self._tiering
+        if tier is None or self.state is None or digest in tier:
+            return False
+        if not self._swap_cost.prefer_swap(1):
+            return False
+        payloads, dtypes = [], []
+        for leaf in self._cache_leaves():
+            dt = leaf.pool.kv_dtype
+            host_dt = tier.dtype or dt
+            kq, ks = TIER.repack_page(leaf.pool.k_q[..., page, :, :, :],
+                                      leaf.pool.k_s[..., page, :, :],
+                                      dt, host_dt)
+            vq, vs = TIER.repack_page(leaf.pool.v_q[..., page, :, :, :],
+                                      leaf.pool.v_s[..., page, :, :],
+                                      dt, host_dt)
+            payloads.append((kq, ks, vq, vs))
+            dtypes.append(host_dt)
+        return tier.put(digest, payloads, dtypes)
+
+    def _demote_chain(self, chain) -> int:
+        """Eagerly demote every device-resident page of ``chain`` to the
+        host tier (the preempt-by-swap arm, DESIGN.md §11): the victim's
+        pages gain a host copy BEFORE pool pressure can reclaim them, so
+        re-admission swap-restores instead of dropping to recompute even
+        if the device copies die meanwhile. Returns pages copied."""
+        n = 0
+        for h in chain:
+            page = self.allocator.index.get(h)
+            if page is not None and self._demote_to_host(page, h):
+                n += 1
+        return n
+
+    def _write_host_pages(self, pages: list[int], recs) -> None:
+        """Scatter host-tier records into the device pools at ``pages``
+        (the promotion copy, DESIGN.md §11): one batched `.at[].set` per
+        leaf array, dispatched asynchronously — decode ticks overlap the
+        copies, which is what makes a swap-in hit cost a copy rather than
+        a re-prefill. Payloads stored in a cheaper host dtype repack to
+        the pool's dtype here (lossy round trip — the §11 caveat)."""
+        from repro.core import tiering as TIER
+        ids = jnp.asarray(np.asarray(pages, np.int32))
+        li = [0]
+
+        def upd(x: PagedQuantizedKVCache) -> PagedQuantizedKVCache:
+            k = li[0]
+            li[0] += 1
+            dt = x.pool.kv_dtype
+            quads = []
+            for rec_ in recs:
+                kq, ks, vq, vs = rec_.payloads[k]
+                src = rec_.dtypes[k]
+                if src != dt:
+                    kq, ks = TIER.repack_page(kq, ks, src, dt)
+                    vq, vs = TIER.repack_page(vq, vs, src, dt)
+                quads.append((kq, ks, vq, vs))
+            kq = np.stack([q[0] for q in quads], axis=-4)
+            ks = np.stack([q[1] for q in quads], axis=-3)
+            vq = np.stack([q[2] for q in quads], axis=-4)
+            vs = np.stack([q[3] for q in quads], axis=-3)
+            pool = dataclasses.replace(
+                x.pool,
+                k_q=x.pool.k_q.at[..., ids, :, :, :].set(jnp.asarray(kq)),
+                k_s=x.pool.k_s.at[..., ids, :, :].set(jnp.asarray(ks)),
+                v_q=x.pool.v_q.at[..., ids, :, :, :].set(jnp.asarray(vq)),
+                v_s=x.pool.v_s.at[..., ids, :, :].set(jnp.asarray(vs)))
+            return dataclasses.replace(x, pool=pool)
+
+        def rec(x):
+            if isinstance(x, PagedQuantizedKVCache):
+                return upd(x)
+            if isinstance(x, dict):
+                return {kk: rec(vv) for kk, vv in x.items()}
+            if isinstance(x, (list, tuple)):
+                return type(x)(rec(v) for v in x)
+            return x
+        self.state = rec(self.state)
+
+    def _issue_prefetch(self, chain, lo: int, n: int) -> int:
+        """Start swap-in copies for the host-resident digests
+        ``chain[lo:lo+n]`` (DESIGN.md §11): claim a staging page per
+        digest (`HostPageAllocator.begin_prefetch`), write the host
+        payload into the pools, and let the allocator publish the page —
+        immediately, or after the injector's ``swap_delay`` ticks via the
+        in-flight population. An injected swap fault (``p_swap_fail``)
+        LOSES the host record instead: the digest stops matching and the
+        requester falls back to recompute — never a stall. Returns the
+        number of copies started."""
+        a, tier = self.allocator, self._tiering
+        inj = a.injector
+        pages, recs = [], []
+        for h in chain[lo:lo + n]:
+            if h in a.index or h in a.inflight_digests:
+                continue                 # already device-resident / staging
+            if h not in tier.pages or a.available < 1:
+                break
+            if inj is not None and inj.swap_fault():
+                tier.drop(h)             # lost record: run ends here
+                break
+            delay = inj.swap_delay if inj is not None else 0
+            pages.append(a.begin_prefetch(h, delay))
+            recs.append(tier.get(h))
+        if pages:
+            self._write_host_pages(pages, recs)
+        return len(pages)
+
+    def _prefetch_for_admission(self, uid: int, chain, prompt_len: int,
+                                want_pages: int | None = None) -> bool:
+        """Prefetch the host-tier continuation of ``chain`` for a
+        candidate at hash-match time, ahead of admission (DESIGN.md §11).
+        ``want_pages`` caps how deep a hit is useful (`_cap_hits` grid for
+        fresh prompts; the full stream for a suspended resume). Returns
+        True while usable copies are still in flight — the candidate
+        swap-waits (tracked per uid for the stuck report) instead of
+        recomputing pages whose restore the cost model prices below a
+        re-prefill."""
+        a = self.allocator
+        dev, swap = a.match_tiered(chain)
+        if want_pages is None:
+            want_pages = self._cap_hits(dev + swap, prompt_len) \
+                // self.page_size
+        want_pages = min(want_pages, dev + swap)
+        if want_pages <= dev or \
+                not self._swap_cost.prefer_swap(want_pages - dev):
+            self._swap_wait.pop(uid, None)
+            return False
+        self._issue_prefetch(chain, dev, want_pages - dev)
+        in_flight = sum(1 for h in chain[dev:want_pages]
+                        if h in a.inflight_digests)
+        if in_flight:
+            self._swap_wait[uid] = in_flight
+            return True
+        self._swap_wait.pop(uid, None)
+        return False
+
     # -- preemption-by-recompute (DESIGN.md §8) ----------------------------
     def _snapshot_resid(self, i: int) -> list:
         """Pull row ``i``'s per-layer fp residuals (the mutable partial
@@ -1387,6 +1617,7 @@ class ContinuousBatcher:
         since the last global progress and raises `PoolExhaustedError`
         past the configured limit instead of livelocking."""
         r = self.rows[i]
+        swap_chain = None            # mid-decode chain for preempt-by-swap
         self._preempts_since_progress += 1
         if self._preempts_since_progress > self.preempt_loop_limit:
             holders = {rr.uid: len(self.row_pages[j])
@@ -1418,7 +1649,16 @@ class ContinuousBatcher:
                 "resid": self._snapshot_resid(i),
                 "full_toks": full,
                 "full_chain": fchain}
+            swap_chain = fchain
         self._release_row(i)         # promote -> LRU: prefix stays hittable
+        if (swap_chain and self._tiering is not None
+                and self._swap_cost.prefer_swap(len(swap_chain))):
+            # preempt-by-swap (DESIGN.md §11): the victim's freshly
+            # promoted pages gain host copies now, so even if pool
+            # pressure reclaims the device copies before re-admission,
+            # resume swap-restores (bitwise) instead of recomputing
+            if self._demote_chain(swap_chain):
+                self.preempt_by_swap += 1
         r._submit_tick = self.ticks  # aging clock restarts at preemption
         self.queue.append(r)
 
@@ -1553,6 +1793,15 @@ class ContinuousBatcher:
         `HostPageAllocator` counters (hits / misses / reclaims /
         cow_retargets) and the page hit rate.
 
+        With a host tier attached (DESIGN.md §11) the report splits
+        device vs host bytes — ``device_bytes_live`` counts HBM-resident
+        page bytes only, the ``host_*`` keys count the swap tier, and
+        each tier's utilization is computed against its OWN capacity so
+        a demoted page is never double-counted and utilization stays ≤1
+        per tier. Swap traffic counters (demotions / promotions /
+        prefetch hit rate / preempt-by-swap) quantify the
+        swap-vs-recompute tradeoff the §11 cost model prices.
+
         ``pages_vs_int8_equal_hbm`` /
         ``kv_page_bytes_saved_vs_int8_frac`` report the memory/accuracy
         curve position (DESIGN.md §9): for a uniform engine, the
@@ -1566,7 +1815,7 @@ class ContinuousBatcher:
         live = PG.live_page_count(self.tables, lengths, self.page_size)
         a = self.allocator
         allocated = (self.n_pages - 1) - a.n_free - a.n_cached \
-            - len(a.deferred)
+            - len(a.deferred) - len(a.inflight)
         # memory/accuracy curve metric (DESIGN.md §9): how many pages this
         # dtype fits into the HBM an int8 pool of the same geometry takes —
         # int4 packs two tokens per byte, so ~2x minus the unshrunk f32
@@ -1589,8 +1838,12 @@ class ContinuousBatcher:
                "pages_free": a.n_free,
                "pages_cached": a.n_cached,
                "pages_allocated": allocated,
+               "pages_inflight": len(a.inflight),
                "pages_live": live,
                "utilization": live / max(allocated, 1),
+               # device-tier bytes only: a demoted page's bytes move to
+               # the host_* keys below, never both (DESIGN.md §11)
+               "device_bytes_live": live * stack_bytes,
                "preemptions": self.preemptions,
                "preempt_fast_resumes": self.preempt_fast_resumes,
                "preempt_recompute_resumes": self.preempt_recompute_resumes,
@@ -1608,11 +1861,37 @@ class ContinuousBatcher:
                 "reclaims": a.reclaims,
                 "cow_retargets": a.cow_retargets,
             })
+        if self._tiering is not None:
+            t, cm = self._tiering, self._swap_cost
+            rep.update({
+                "host_pages_capacity": t.capacity,
+                "host_pages_used": len(t),
+                "host_utilization": len(t) / max(t.capacity, 1),
+                "host_bytes": t.nbytes,
+                "host_tier_dtype": t.dtype,
+                "evictor": self.config.evictor,
+                "demotions": t.demotions,
+                "promotions": t.promotions,
+                "host_evictions": t.host_evictions,
+                "host_lost_records": t.lost,
+                "prefetch_issued": a.prefetch_issued,
+                "prefetch_page_hits": a.promote_hits,
+                "prefetch_hit_rate":
+                    a.promote_hits / max(a.prefetch_issued, 1),
+                "preempt_by_swap": self.preempt_by_swap,
+                "preempt_swap_restores": self.preempt_swap_restores,
+                "swap_cost_tokens_per_page": cm.swap_cost(1),
+                "recompute_cost_tokens_per_page": cm.recompute_cost(1),
+                "est_prefill_tokens_saved_by_swap":
+                    a.promote_hits * (cm.recompute_cost(1)
+                                      - cm.swap_cost(1)),
+            })
         if a.injector is not None:
             rep.update({
                 "injected_alloc_fault_ticks": a.injector.alloc_fault_ticks,
                 "injected_delayed_releases": a.injector.delayed_releases,
                 "injected_held_pages": a.injector.hold_pages,
+                "injected_swap_faults": a.injector.swap_faults,
                 "pages_deferred": len(a.deferred),
             })
         return rep

@@ -13,10 +13,14 @@ ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT))
 
 from benchmarks.check_regression import (INT4_PPL_DELTA_CEILING_PCT,
+                                         TIERING_PREFETCH_HIT_RATE_FLOOR,
+                                         TIERING_TTFT_SPEEDUP_FLOOR,
                                          accuracy_absolute_violations,
                                          accuracy_metrics, collect, compare,
                                          decode_metrics, overload_metrics,
-                                         prefix_metrics, main)
+                                         prefix_metrics,
+                                         tiering_absolute_violations,
+                                         tiering_metrics, main)
 
 
 def _decode(tokens_s=1000.0, us_per_step=500.0, seed_tokens_s=500.0,
@@ -52,6 +56,17 @@ def _accuracy(int4_ppl=75.0, int4_delta=2.0, int4_err=0.14,
                             "delta_pct": 0.0},
                            {"config": "paged_int4", "ppl": int4_ppl,
                             "delta_pct": int4_delta}]}
+
+
+def _tiering(speedup=2.5, hit_rate=0.95, demotions=100, promotions=90):
+    return {"rows": [{"config": "pool25pct_hoston",
+                      "ttft_ms_p50": 10.0},
+                     {"config": "pool25pct_hostoff",
+                      "ttft_ms_p50": 10.0 * speedup}],
+            "summary": {"swap_vs_recompute_ttft_speedup": speedup,
+                        "prefetch_hit_rate": hit_rate,
+                        "demotions": demotions,
+                        "promotions": promotions}}
 
 
 def test_gate_fails_on_synthetic_regressions():
@@ -94,6 +109,36 @@ def test_accuracy_gate_relative_and_outright():
     assert bad and "ceiling" in bad[0]
 
 
+def test_tiering_gate_relative_and_outright():
+    """The tiered-KV-cache gate (DESIGN.md §11): the swap-vs-recompute
+    TTFT speedup and prefetch hit rate ride the relative band, and the
+    ISSUE-10 acceptance floors (>=1.5x, >=0.5, nonzero swap traffic)
+    gate OUTRIGHT with no baseline involved."""
+    base = collect(_decode(), _prefix(), tiering=_tiering())
+    assert "tiering.pool25pct.swap_vs_recompute_ttft_speedup" in base
+    assert base["tiering.pool25pct.swap_vs_recompute_ttft_speedup"][1]
+    # >15% speedup decay that still clears the floor trips the band
+    assert compare(base, collect(_decode(), _prefix(),
+                                 tiering=_tiering(speedup=1.9)))
+    # hit-rate collapse trips the band too (pure counters)
+    assert compare(base, collect(_decode(), _prefix(),
+                                 tiering=_tiering(hit_rate=0.6)))
+    assert compare(base, base) == []
+    # outright floors hold with no baseline at all
+    assert tiering_absolute_violations(_tiering()) == []
+    bad = tiering_absolute_violations(
+        _tiering(speedup=TIERING_TTFT_SPEEDUP_FLOOR - 0.1))
+    assert bad and "floor" in bad[0]
+    bad = tiering_absolute_violations(
+        _tiering(hit_rate=TIERING_PREFETCH_HIT_RATE_FLOOR - 0.1))
+    assert bad and "floor" in bad[0]
+    # a tier that silently never swaps cannot pass vacuously
+    bad = tiering_absolute_violations(_tiering(demotions=0, promotions=0))
+    assert len(bad) == 2 and all("must actually swap" in b for b in bad)
+    assert tiering_absolute_violations({}) \
+        == ["tiering.summary: missing from BENCH_tiering.json"]
+
+
 def test_gate_passes_within_threshold_and_on_improvement():
     base = collect(_decode(), _prefix())
     ok = collect(_decode(tokens_s=900.0, us_per_step=560.0),
@@ -134,7 +179,8 @@ def test_committed_artifacts_yield_metrics():
     prefix = json.loads((ROOT / "BENCH_prefix.json").read_text())
     overload = json.loads((ROOT / "BENCH_overload.json").read_text())
     accuracy = json.loads((ROOT / "BENCH_accuracy.json").read_text())
-    m = collect(decode, prefix, overload, accuracy)
+    tiering = json.loads((ROOT / "BENCH_tiering.json").read_text())
+    m = collect(decode, prefix, overload, accuracy, tiering)
     assert any(k.endswith(".tokens_s_vs_seed") for k in m)
     assert any(k.endswith(".us_per_step_vs_seed") for k in m)
     assert "prefix.shared90.ttft_speedup" in m
@@ -148,6 +194,10 @@ def test_committed_artifacts_yield_metrics():
     # the overload artifact must certify a deadlock-free oversubscribed run
     assert all(r["deadlocks"] == 0 and r["completed"] == r["requests"]
                for r in overload["rows"])
+    # the committed tiering artifact satisfies its own outright floors
+    assert "tiering.pool25pct.swap_vs_recompute_ttft_speedup" in m
+    assert "tiering.pool25pct.prefetch_hit_rate" in m
+    assert tiering_absolute_violations(tiering) == []
     # self-comparison is the identity: committed vs committed passes
     assert compare(m, m) == []
 
@@ -163,6 +213,7 @@ def test_gate_cli_detects_regression(tmp_path):
         (d / "BENCH_prefix.json").write_text(json.dumps(pre))
         (d / "BENCH_overload.json").write_text(json.dumps(_overload()))
         (d / "BENCH_accuracy.json").write_text(json.dumps(_accuracy()))
+        (d / "BENCH_tiering.json").write_text(json.dumps(_tiering()))
     assert main(["--baseline-dir", str(bdir), "--current-dir",
                  str(cdir)]) == 1
     (cdir / "BENCH_decode.json").write_text(json.dumps(_decode()))
@@ -183,3 +234,6 @@ def test_metric_directions():
     assert not any(k.startswith("overload.oversub4x") for k in o)
     a = accuracy_metrics(_accuracy())
     assert a["accuracy.ppl.paged_int4"][1] is False        # lower better
+    t = tiering_metrics(_tiering())
+    assert t["tiering.pool25pct.swap_vs_recompute_ttft_speedup"][1] is True
+    assert t["tiering.pool25pct.prefetch_hit_rate"][1] is True

@@ -36,7 +36,8 @@ def test_design_sections_cover_docstring_references():
     """Every `DESIGN.md §N` reference in the source tree names an existing
     DESIGN.md section — stale references are how design docs rot."""
     sections = _design_sections()
-    assert sections >= {"1", "2", "3", "4", "5", "6", "7", "8", "9", "10"}
+    assert sections >= {"1", "2", "3", "4", "5", "6", "7", "8", "9", "10",
+                        "11"}
     bad = []
     files = list((ROOT / "src").rglob("*.py"))
     files += list((ROOT / "benchmarks").glob("*.py"))
@@ -103,6 +104,24 @@ def test_design_owns_adaptive_precision_section():
                     if "DESIGN.md §10" not in (inspect.getdoc(o) or "")]
     assert not undocumented, \
         f"plan-surface APIs without their §10 owner: {undocumented}"
+
+
+def test_design_owns_tiering_section():
+    """DESIGN.md §11 owns the tiered KV cache (host swap tier, async
+    prefetch, preempt-by-swap), and every layer that implements it —
+    the tier/evictor/cost-model module, the allocator's populations,
+    the scheduler's swap paths, and the serve flags — cites its owner
+    (satellite contract)."""
+    text = (ROOT / "DESIGN.md").read_text()
+    m = re.search(r"^## §11\b.*$", text, flags=re.M)
+    assert m and "Tiered" in m.group(0), \
+        "DESIGN.md §11 must be the tiered KV cache section"
+    for src in ("src/repro/core/tiering.py", "src/repro/core/paging.py",
+                "src/repro/serving/scheduler.py",
+                "src/repro/serving/engine.py",
+                "src/repro/launch/serve.py", "benchmarks/tiering.py"):
+        assert "DESIGN.md §11" in (ROOT / src).read_text(), \
+            f"{src} no longer cites its DESIGN.md §11 owner"
 
 
 def test_precision_docs_claims_match_artifacts():

@@ -31,8 +31,10 @@ def _prompts(cfg, sizes, seed=0):
 
 
 def _alloc_invariant(a: HostPageAllocator) -> bool:
-    """free + live(ref) + evictable(lru) + deferred partitions the pool."""
-    pops = [set(a.free), set(a.ref), set(a.lru), set(a.deferred)]
+    """free + live(ref) + evictable(lru) + deferred + in-flight (host-tier
+    prefetch staging, DESIGN.md §11) partitions the pool."""
+    pops = [set(a.free), set(a.ref), set(a.lru), set(a.deferred),
+            set(a.inflight)]
     total = sum(len(p) for p in pops)
     return total == a.n_pages - 1 and len(set().union(*pops)) == total
 
@@ -364,25 +366,44 @@ def test_aging_prevents_starvation(model):
 @settings(max_examples=5, deadline=None)
 @given(st.data())
 def test_random_interleavings_keep_accounting_and_terminate(model, data):
-    """Random submit/abort/pressure/tick interleavings at mixed priorities:
-    after every tick the page populations (free + live + evictable +
-    deferred) partition the pool exactly, and once pressure lifts the
-    system always drains — no deadlock, no starved request (DESIGN.md §8)."""
+    """Random submit/abort/pressure/tick/demote/promote interleavings at
+    mixed priorities: after every tick the page populations (free + live +
+    evictable + deferred + in-flight) partition the pool exactly, and once
+    pressure lifts the system always drains — no deadlock, no starved
+    request (DESIGN.md §8; host-tier populations DESIGN.md §11)."""
     params, cfg = model
     inj = PoolFaultInjector(
         seed=data.draw(st.integers(0, 2**16), label="inj_seed"),
-        reclaim_delay=data.draw(st.integers(0, 2), label="delay"))
+        reclaim_delay=data.draw(st.integers(0, 2), label="delay"),
+        swap_delay=data.draw(st.integers(0, 2), label="swap_delay"))
     b = ContinuousBatcher(params, cfg, EngineConfig(
         batch=2, max_len=64, paged=True, n_pages=14, chunk=1,
         prefix_cache=True, watermark=1, aging_ticks=3,
-        fault_injector=inj))
+        fault_injector=inj, host_pages=8,
+        evictor=data.draw(st.sampled_from(["lru", "freq"]),
+                          label="evictor")))
     rng = np.random.RandomState(data.draw(st.integers(0, 2**16),
                                           label="prompt_seed"))
     uid, live = 0, set()
     for op in data.draw(st.lists(st.sampled_from(
-            ["submit", "abort", "tick", "squeeze", "lift"]),
+            ["submit", "abort", "tick", "squeeze", "lift",
+             "demote", "promote"]),
             min_size=6, max_size=14), label="ops"):
-        if op == "submit" and len(live) < 5:
+        if op == "demote":
+            # eagerly demote one cached page (the preempt-by-swap copy
+            # path) — a no-op when nothing is cached yet
+            for page in list(b.allocator.lru)[:1]:
+                b._demote_to_host(page, b.allocator.hash_of[page])
+        elif op == "promote":
+            # start a swap-in for one hosted digest not device-resident;
+            # with swap_delay it parks in the in-flight population
+            if b._tiering is not None and b.allocator.available > 0:
+                for h in list(b._tiering.pages):
+                    if h not in b.allocator.index \
+                            and h not in b.allocator.inflight_digests:
+                        b._issue_prefetch([h], 0, 1)
+                        break
+        elif op == "submit" and len(live) < 5:
             b.submit(Request(
                 uid=uid, prompt=rng.randint(
                     0, cfg.vocab, (rng.randint(3, 17),)).astype(np.int32),
